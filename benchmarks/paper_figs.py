@@ -1,0 +1,148 @@
+"""Paper-table/figure reproductions (the §Paper-validation benchmarks).
+
+One function per table/figure of the paper:
+
+  fig2a  — reduction ratio vs key variety (memory-capacity cliff)
+  fig2b  — multi-hop aggregation does not rescue uniform data
+  eq1_eq2— extra-traffic of fixed-format encapsulation + header overhead
+  fig9   — reduction ratio vs workload x memory, uniform vs Zipf, S-* vs M-*
+  table2 — line-rate proxy: eviction (BPE-feed) rate of the FPE engine
+  table3 — stage-delay budget of the processing pipeline (analytical, cycles)
+  fig10_11 — modeled JCT + reducer-CPU (combine work) with/without SwitchAgg
+
+Scaled down from the paper's GBs to CPU-sized streams; every claim is a
+RATIO so the scaling preserves the comparisons.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import kvagg, reduction_model as rm
+
+import jax.numpy as jnp
+
+
+def fig2a(scale: int = 1 << 15):
+    """Reduction ratio vs key variety at fixed memory (paper Fig. 2a)."""
+    M, C = scale, scale // 20
+    rows = []
+    for n_frac in (0.005, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0):
+        N = max(1, int(M * n_frac))
+        keys = rm.uniform_keys(M, N, seed=1)
+        stats, _ = rm.simulate_node(keys, None, capacity=C, ways=4)
+        rows.append({
+            "key_variety": N, "capacity": C, "data": M,
+            "simulated": round(stats.reduction, 4),
+            "analytic_eq3": round(rm.reduction_ratio(M, N, C), 4),
+            "bound_C_over_N": round(rm.reduction_ratio_bound(N, C), 4),
+        })
+    return rows
+
+
+def fig2b(scale: int = 1 << 14):
+    """Multi-hop chain on uniform data (paper Fig. 2b): hops don't help."""
+    M, N, C = scale, scale // 2, scale // 16
+    keys = rm.uniform_keys(M, N, seed=2)
+    rows = []
+    for hops in (1, 2, 3, 4):
+        r, stats = rm.simulate_chain(keys, None, [C] * hops)
+        rows.append({"hops": hops, "end_to_end_reduction": round(r, 4),
+                     "per_hop": [round(s.reduction, 4) for s in stats]})
+    return rows
+
+
+def eq1_eq2():
+    """Extra traffic of DAIET-style fixed slots vs SwitchAgg encoding (Eq. 1)
+    and small-packet header overhead (Eq. 2)."""
+    rng = np.random.default_rng(3)
+    pair_lens = rng.integers(10, 21, size=10).tolist()  # 10-20B pairs
+    uniform20 = [20] * 10
+    tiny = [1] * 10
+    return {
+        "eq1_fixed20_random_pairs": round(rm.fixed_format_extra_traffic(20, pair_lens), 3),
+        "eq1_fixed20_exactfit": rm.fixed_format_extra_traffic(20, uniform20),
+        "eq1_fixed20_1B_pairs": rm.fixed_format_extra_traffic(20, tiny),
+        "switchagg_encoding_random_pairs": round(rm.switchagg_extra_traffic(pair_lens), 3),
+        "eq2_rmt200B_overhead": round(rm.header_overhead_ratio(229, 58), 3),
+        "eq2_eth1500B_overhead": round(rm.header_overhead_ratio(1442, 58), 3),
+    }
+
+
+def fig9(stream: int = 1 << 13):
+    """Reduction ratio: workload x FPE memory, uniform vs Zipf(0.99),
+    SRAM-only (S-*) vs multi-level (M-*).  Paper Fig. 9."""
+    N = stream // 4  # key variety scales like the paper's 1GB-of-keys case
+    rows = []
+    for dist in ("uniform", "zipf"):
+        gen = rm.uniform_keys if dist == "uniform" else rm.zipf_keys
+        for wl_mult in (1, 2, 4):
+            M = stream * wl_mult
+            keys = jnp.asarray(gen(M, N, seed=5).astype(np.int32))
+            vals = jnp.ones((M,), jnp.float32)
+            for cap_frac, label in ((1 / 32, "S-small"), (1 / 8, "S-large")):
+                cap = max(4, int(N * cap_frac))
+                res = kvagg.two_level_aggregate(keys, vals, capacity=cap,
+                                                ways=4, bpe=False)
+                rows.append({"dist": dist, "workload": M, "mode": label,
+                             "capacity": cap,
+                             "reduction": round(float(kvagg.reduction_ratio(res)), 4)})
+            res = kvagg.two_level_aggregate(keys, vals, capacity=max(4, N // 8),
+                                            ways=4, bpe=True)
+            rows.append({"dist": dist, "workload": M, "mode": "M-multilevel",
+                         "capacity": max(4, N // 8),
+                         "reduction": round(float(kvagg.reduction_ratio(res)), 4)})
+    return rows
+
+
+def table2(stream: int = 1 << 13):
+    """Line-rate proxy (paper Table 2).  The paper counts FIFO-full events;
+    the TPU analogue of 'the FPE never stalls' is structural (evictions are
+    emitted, not retried), so we report the eviction rate — the fraction of
+    inputs that generate BPE-feed traffic — across workload sizes."""
+    rows = []
+    N = stream // 4
+    for wl_mult in (1, 2, 4, 8):
+        M = stream * wl_mult
+        keys = jnp.asarray(rm.zipf_keys(M, N, seed=7).astype(np.int32))
+        vals = jnp.ones((M,), jnp.float32)
+        fpe = kvagg.fpe_aggregate(keys, vals, capacity=max(4, N // 8), ways=4)
+        ev_rate = float(jnp.mean(fpe.evict_keys != kvagg.EMPTY_KEY))
+        rows.append({"workload_pairs": M, "evict_rate": round(ev_rate, 4),
+                     "stall_free": True})  # by construction: evict, never retry
+    return rows
+
+
+def table3():
+    """Stage-delay budget (paper Table 3, cycles @200MHz).  We keep the
+    paper's Ethernet-domain numbers as the faithful record and add the TPU
+    mapping of each stage."""
+    return [
+        {"stage": "Header Analyzer", "paper_cycles": 3, "tpu_analogue": "block metadata decode (free: static shapes)"},
+        {"stage": "Crossbar", "paper_cycles": 2, "tpu_analogue": "length-group dispatch (static routing)"},
+        {"stage": "FPE-Hash", "paper_cycles": 10, "tpu_analogue": "VPU multiplicative hash (vectorized)"},
+        {"stage": "FPE-Aggregate", "paper_cycles": 18, "tpu_analogue": "VMEM probe+combine (lane-parallel ways)"},
+        {"stage": "FPE-Forward", "paper_cycles": 5, "tpu_analogue": "eviction stream store"},
+        {"stage": "BPE-Aggregate", "paper_cycles": 33, "tpu_analogue": "HBM sort+segment-sum (overlapped)"},
+        {"stage": "BPE-Flush", "paper_cycles": 3.125e7, "tpu_analogue": "EoT table flush (bulk DMA)"},
+    ]
+
+
+def fig10_11(root_reduction: float = 0.9):
+    """Modeled JCT + reducer combine-work with/without SwitchAgg (Figs 10/11).
+
+    JCT model: reducer in-link at 10 Gb/s is the bottleneck (paper testbed);
+    CPU model: reducer combine work proportional to received pairs."""
+    link = 10e9 / 8
+    rows = []
+    for wl_gb in (2, 4, 8, 16):
+        b = wl_gb * (1 << 30)
+        t_no, t_sw = b / link, b * (1 - root_reduction) / link
+        rows.append({
+            "workload_gb": wl_gb,
+            "jct_no_agg_s": round(t_no, 1),
+            "jct_switchagg_s": round(t_sw, 1),
+            "jct_saved": round(1 - t_sw / t_no, 3),
+            "reducer_cpu_relative": round(1 - root_reduction, 3),
+        })
+    return rows

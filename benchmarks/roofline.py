@@ -1,0 +1,97 @@
+"""§Roofline aggregator: reads dry-run artifacts, emits the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--pod 1|2] [--mode tree]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+COLS = ("arch", "shape", "pods", "mode", "mem_gib", "compute_s", "memory_s",
+        "coll_ici_s", "coll_dcn_s", "dominant", "useful", "fraction")
+
+
+def load(pod: str | None = None, mode: str | None = None, tag: str = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        if len(parts) != 4:
+            continue
+        arch, shape, pods, mode_tag = parts
+        if tag and not mode_tag.endswith(tag):
+            continue
+        if not tag and ("_" in mode_tag.replace("tree_compress", "treecompress")
+                        and mode_tag not in ("tree", "flat", "gather")):
+            continue  # skip tagged (hillclimb) artifacts in the default table
+        if pod and pods != f"pod{pod}":
+            continue
+        if mode and not mode_tag.startswith(mode):
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        if not d.get("ok"):
+            continue
+        # headline terms: structural (model-derived) flops/bytes + HLO-walk
+        # collectives; the raw walker block stays in the artifact as a bound.
+        r = d.get("roofline_structural", d["roofline"])
+        rows.append({
+            "arch": arch, "shape": shape, "pods": pods, "mode": mode_tag,
+            "mem_gib": d["memory"]["total_per_device"] / 2**30,
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "coll_ici_s": r["collective_ici_s"], "coll_dcn_s": r["collective_dcn_s"],
+            "dominant": r["dominant"], "useful": r["useful_flops_ratio"],
+            "fraction": r["roofline_fraction"],
+        })
+    return rows
+
+
+def render(rows, fmt="md"):
+    if fmt == "md":
+        out = ["| " + " | ".join(COLS) + " |",
+               "|" + "|".join("---" for _ in COLS) + "|"]
+        for r in rows:
+            out.append("| " + " | ".join(
+                f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                for c in COLS) + " |")
+        return "\n".join(out)
+    import csv
+    import io
+
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=COLS)
+    w.writeheader()
+    for r in rows:
+        w.writerow({c: r[c] for c in COLS})
+    return buf.getvalue()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pod", default=None)
+    ap.add_argument("--mode", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--fmt", default="md", choices=("md", "csv"))
+    ap.add_argument("--sort", default="fraction")
+    args = ap.parse_args()
+    rows = load(args.pod, args.mode, args.tag)
+    rows.sort(key=lambda r: (r[args.sort] if args.sort in ("fraction", "useful")
+                             else str(r[args.sort])))
+    print(render(rows, args.fmt))
+    if rows:
+        worst = rows[0] if args.sort == "fraction" else min(rows, key=lambda r: r["fraction"])
+        most_coll = max(rows, key=lambda r: r["coll_ici_s"] + r["coll_dcn_s"])
+        print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+              f"x {worst['pods']} ({worst['fraction']:.4f})")
+        print(f"most collective-bound: {most_coll['arch']} x {most_coll['shape']} "
+              f"x {most_coll['pods']} "
+              f"(coll {most_coll['coll_ici_s'] + most_coll['coll_dcn_s']:.3f}s)")
+
+
+if __name__ == "__main__":
+    main()

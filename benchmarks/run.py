@@ -1,0 +1,126 @@
+"""Benchmark harness orchestrator.
+
+Runs every paper-table/figure reproduction plus the TPU-domain collective
+accounting, prints a ``name,us_per_call,derived`` CSV, and writes the full
+JSON to benchmarks/out/results.json (EXPERIMENTS.md §Paper-validation reads
+from it).
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _timeit(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6
+
+
+def main() -> None:
+    from benchmarks import bench_collectives, paper_figs
+
+    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+    results: dict = {}
+    print("name,us_per_call,derived")
+
+    # --- paper figures/tables ---------------------------------------------
+    fig2a, us = _timeit(paper_figs.fig2a, reps=1)
+    results["fig2a"] = fig2a
+    cliff = next(r for r in fig2a if r["key_variety"] > r["capacity"] * 10)
+    print(f"fig2a_reduction_cliff,{us:.0f},N=10C->R={cliff['simulated']}")
+
+    fig2b, us = _timeit(paper_figs.fig2b, reps=1)
+    results["fig2b"] = fig2b
+    gain = fig2b[-1]["end_to_end_reduction"] - fig2b[0]["end_to_end_reduction"]
+    print(f"fig2b_multihop_gain,{us:.0f},4hops-1hop={gain:.4f}")
+
+    eq, us = _timeit(paper_figs.eq1_eq2, reps=1)
+    results["eq1_eq2"] = eq
+    print(f"eq1_fixed_format_waste,{us:.0f},{eq['eq1_fixed20_random_pairs']}x_vs_"
+          f"{eq['switchagg_encoding_random_pairs']}x")
+    print(f"eq2_header_overhead,{us:.0f},rmt={eq['eq2_rmt200B_overhead']}")
+
+    fig9, us = _timeit(paper_figs.fig9, reps=1)
+    results["fig9"] = fig9
+    m_best = max(r["reduction"] for r in fig9 if r["mode"] == "M-multilevel"
+                 and r["dist"] == "zipf")
+    s_best = max(r["reduction"] for r in fig9 if r["mode"].startswith("S")
+                 and r["dist"] == "uniform")
+    print(f"fig9_multilevel_zipf_best,{us:.0f},R={m_best}")
+    print(f"fig9_sram_uniform_best,{us:.0f},R={s_best}")
+
+    t2, us = _timeit(paper_figs.table2, reps=1)
+    results["table2"] = t2
+    print(f"table2_evict_rate,{us:.0f},max={max(r['evict_rate'] for r in t2)}")
+
+    results["table3"] = paper_figs.table3()
+    print("table3_stage_delays,0,analytic")
+
+    f10, us = _timeit(paper_figs.fig10_11, reps=1)
+    results["fig10_11"] = f10
+    print(f"fig10_jct_saved,{us:.0f},{f10[-1]['jct_saved']:.0%}@16GB")
+
+    # --- TPU-domain collective accounting ---------------------------------
+    tt, us = _timeit(bench_collectives.traffic_table, reps=1)
+    results["collective_traffic"] = tt
+    print(f"collective_dcn_cut,{us:.0f},dense_tree={tt[0]['dcn_cut_vs_flat']:.4f}")
+    results["compression_payload"] = bench_collectives.compression_payload_table()
+
+    # --- kernel micro-benchmarks (CPU walltime; TPU perf is §Roofline) ----
+    import jax.numpy as jnp
+
+    from repro.core import kvagg
+
+    keys = jnp.asarray(np.random.default_rng(0).integers(0, 512, 4096),
+                       jnp.int32)
+    vals = jnp.ones((4096,), jnp.float32)
+
+    def node():
+        return kvagg.two_level_aggregate(keys, vals, capacity=128, ways=4
+                                         ).n_out.block_until_ready()
+
+    _, us = _timeit(node, reps=3)
+    print(f"kvagg_node_4096pairs,{us:.0f},{4096 / us:.2f}pairs_per_us")
+
+    from repro.kernels import ops
+
+    def pallas_node():
+        return ops.two_level_aggregate(keys, vals, capacity=128, ways=4,
+                                       block_n=512, interpret=True
+                                       ).n_out.block_until_ready()
+
+    _, us = _timeit(pallas_node, reps=1)
+    print(f"kvagg_pallas_interpret,{us:.0f},correctness_mode")
+
+    # --- roofline summary (from dry-run artifacts, if present) ------------
+    try:
+        from benchmarks import roofline
+
+        rows = roofline.load(pod="1", mode="tree")
+        if rows:
+            worst = min(rows, key=lambda r: r["fraction"])
+            print(f"roofline_cells_pod1,{0},{len(rows)}")
+            print(f"roofline_worst_fraction,0,{worst['arch']}x{worst['shape']}"
+                  f"={worst['fraction']:.4f}")
+            results["roofline_pod1"] = rows
+    except Exception as e:  # artifacts absent on a fresh checkout
+        print(f"roofline_summary,0,skipped({e})")
+
+    with open(os.path.join(out_dir, "results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"# full results -> {os.path.join(out_dir, 'results.json')}")
+
+
+if __name__ == "__main__":
+    main()

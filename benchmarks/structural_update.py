@@ -1,0 +1,71 @@
+"""Recompute the structural roofline block for existing dry-run artifacts
+(no recompilation: structural costs need only cfg x shape x mesh x profile;
+collective bytes are kept from the artifact's HLO walk).
+
+    PYTHONPATH=src python -m benchmarks.structural_update
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import repro.configs as configs
+from repro.configs.base import shape_by_name
+from repro.core.collectives import GradAggMode
+from repro.launch import hlo_analysis as ha
+from repro.launch import profiles
+from repro.launch.structural import structural_cost
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+class _MeshLike:
+    """Axis metadata stand-in (no jax device allocation needed)."""
+
+    def __init__(self, multi_pod: bool):
+        self.axis_names = (("pod", "data", "model") if multi_pod
+                           else ("data", "model"))
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        import numpy as np
+
+        self.devices = np.zeros(shape)
+
+
+def main():
+    n = 0
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if not d.get("ok"):
+            continue
+        arch, shape_name = d["arch"], d["shape"]
+        mesh = _MeshLike(d["multi_pod"])
+        shape = shape_by_name(shape_name)
+        cfg = configs.get_config(arch)
+        prof = profiles.make_profile(arch, shape, mesh,
+                                     mode=GradAggMode(d.get("mode", "tree")))
+        if d.get("accum"):
+            import dataclasses
+
+            prof = dataclasses.replace(prof, accum_steps=d["accum"])
+        sc = structural_cost(cfg, shape, mesh, prof)
+        coll = ha.CollectiveStats(
+            ici_bytes=d["collectives"]["ici_bytes"],
+            dcn_bytes=d["collectives"]["dcn_bytes"])
+        n_chips = d["n_chips"]
+        roof = ha.roofline_terms(
+            hlo_flops=sc.flops, hlo_bytes=sc.bytes, coll=coll,
+            n_chips=n_chips, model_flops=d["model_flops_global"] / n_chips)
+        d["roofline_structural"] = roof.to_dict()
+        d["structural_detail"] = {k: [float(f), float(b)]
+                                  for k, (f, b) in sc.detail.items()}
+        with open(path, "w") as f:
+            json.dump(d, f, indent=1)
+        n += 1
+    print(f"updated {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Serve a small model with batched requests: TP-sharded weights,
+model-axis-sharded KV cache (flash-decode partial-softmax combine).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as serve_launch
+
+
+def main():
+    serve_launch.main([
+        "--arch", "gemma2-27b", "--reduce", "--fp32",
+        "--mesh", "2,4", "--batch", "4", "--prompt-len", "32", "--gen", "12",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — SwitchAgg (in-network aggregation) as a JAX training framework."""
+
+__version__ = "1.0.0"

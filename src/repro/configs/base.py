@@ -1,0 +1,217 @@
+"""Model/architecture configuration schema.
+
+One ``ModelConfig`` describes any of the assigned architectures: dense,
+MoE, SSM, hybrid, VLM/audio-backbone.  The layer stack is a repeating
+``pattern`` of ``LayerSpec``s (scanned over groups for compile-time
+boundedness), optionally preceded by ``prefix`` layers (e.g. DeepSeek's
+dense first layer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Optional
+
+Mixer = Literal["attn", "attn_local", "mamba", "none"]
+Ffn = Literal["dense", "moe", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: Mixer = "attn"
+    ffn: Ffn = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0  # shared (always-on) experts, DeepSeek-style
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    """Mamba2 (SSD) mixer."""
+
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+    n_groups: int = 1  # B/C groups
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    prefix: tuple[LayerSpec, ...] = ()  # non-repeating leading layers
+    # attention features
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    attn_softcap: float = 0.0  # gemma2: 50.0
+    logit_softcap: float = 0.0  # gemma2: 30.0
+    window: int = 0  # sliding window for attn_local layers
+    attn_scale: float | None = None  # override 1/sqrt(head_dim)
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    # embeddings / head
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False  # gemma: * sqrt(d_model)
+    vocab_pad_multiple: int = 256  # pad vocab so it shards over the mesh
+    act: str = "silu"
+    norm_eps: float = 1e-6
+    post_norms: bool = False  # gemma2: post-attn/post-ffn RMSNorms
+    # modality frontend (stub per brief): embeddings arrive precomputed
+    frontend: str = "text"  # text | vision_stub | audio_stub
+    prefix_tokens: int = 0  # vision patches prepended (paligemma: 256)
+    # numerics
+    dtype: str = "bfloat16"
+    # citation / provenance
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.n_layers % max(len(self.pattern), 1) and not self.prefix:
+            n_rep = self.n_layers - len(self.prefix)
+            if n_rep % len(self.pattern):
+                raise ValueError(
+                    f"{self.name}: {self.n_layers} layers not divisible by "
+                    f"pattern of {len(self.pattern)}"
+                )
+
+    @property
+    def n_groups(self) -> int:
+        return (self.n_layers - len(self.prefix)) // len(self.pattern)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def d_inner_mamba(self) -> int:
+        assert self.mamba is not None
+        return self.mamba.expand * self.d_model
+
+    @property
+    def n_mamba_heads(self) -> int:
+        assert self.mamba is not None
+        return self.d_inner_mamba // self.mamba.head_dim
+
+    # -- parameter counting (for roofline MODEL_FLOPS = 6 N D) -------------
+    def param_count(self, active_only: bool = False) -> int:
+        """Exact parameter count of this config (embeddings included)."""
+        d, hd = self.d_model, self.head_dim
+        n_q, n_kv = self.n_heads, self.n_kv_heads
+
+        def attn_params() -> int:
+            if self.mla is not None:
+                m = self.mla
+                q = d * m.q_lora_rank + m.q_lora_rank * n_q * (m.qk_nope_dim + m.qk_rope_dim)
+                kv = d * (m.kv_lora_rank + m.qk_rope_dim)
+                kv += m.kv_lora_rank * n_q * (m.qk_nope_dim + m.v_head_dim)
+                o = n_q * m.v_head_dim * d
+                return q + kv + o
+            return d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+
+        def dense_ffn(dff: int) -> int:
+            return 3 * d * dff  # gated (gate, up, down)
+
+        def moe_ffn() -> tuple[int, int]:
+            assert self.moe is not None
+            mo = self.moe
+            routed = mo.n_experts * 3 * d * mo.d_ff_expert + d * mo.n_experts
+            shared = mo.n_shared * 3 * d * mo.d_ff_expert
+            active = (mo.top_k + mo.n_shared) * 3 * d * mo.d_ff_expert + d * mo.n_experts
+            return routed + shared, active + shared * 0
+
+        def mamba_params() -> int:
+            assert self.mamba is not None
+            mc = self.mamba
+            din = self.d_inner_mamba
+            nheads = self.n_mamba_heads
+            conv_dim = din + 2 * mc.n_groups * mc.d_state
+            p = d * (2 * din + 2 * mc.n_groups * mc.d_state + nheads)  # in_proj
+            p += conv_dim * mc.conv_width  # conv1d
+            p += 3 * nheads  # A_log, D, dt_bias
+            p += din  # gated norm
+            p += din * d  # out_proj
+            return p
+
+        total = 0
+        layers = list(self.prefix) + list(self.pattern) * self.n_groups
+        for spec in layers:
+            if spec.mixer in ("attn", "attn_local"):
+                total += attn_params()
+            elif spec.mixer == "mamba":
+                total += mamba_params()
+            total += 2 * d  # pre-norms (mixer + ffn)
+            if self.post_norms:
+                total += 2 * d
+            if spec.ffn == "dense":
+                total += dense_ffn(self.d_ff)
+            elif spec.ffn == "moe":
+                full, act = moe_ffn()
+                total += act if active_only else full
+        total += d  # final norm
+        total += self.padded_vocab * d  # embedding
+        if not self.tie_embeddings:
+            total += self.padded_vocab * d
+        return total
+
+    def active_param_count(self) -> int:
+        return self.param_count(active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned to every architecture).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = InputShape("train_4k", 4096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def shape_by_name(name: str) -> InputShape:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)

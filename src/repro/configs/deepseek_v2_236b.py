@@ -1,0 +1,28 @@
+"""deepseek-v2-236b [moe] — MLA kv_lora=512, 2 shared + 160 routed top-6.
+
+60L d_model=5120 128H d_ff(expert)=1536 vocab=102400 [arXiv:2405.04434; hf]
+First layer is a dense-FFN layer (d_ff=12288), the rest are MoE.
+"""
+from .base import LayerSpec, MLAConfig, MoEConfig, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-236b",
+        family="moe",
+        n_layers=60,
+        d_model=5120,
+        n_heads=128,
+        n_kv_heads=128,
+        head_dim=128,
+        d_ff=12288,  # dense first layer
+        vocab_size=102400,
+        prefix=(LayerSpec("attn", "dense"),),
+        pattern=(LayerSpec("attn", "moe"),),  # 59 groups
+        mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536, qk_nope_dim=128,
+                      qk_rope_dim=64, v_head_dim=128),
+        moe=MoEConfig(n_experts=160, top_k=6, d_ff_expert=1536, n_shared=2),
+        tie_embeddings=False,
+        act="silu",
+        source="arXiv:2405.04434",
+    )

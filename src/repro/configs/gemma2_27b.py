@@ -1,0 +1,30 @@
+"""gemma2-27b [dense] — local+global alternating attention, logit softcaps.
+
+46L d_model=4608 32H (GQA kv=16) head_dim=128 d_ff=36864 vocab=256000
+[arXiv:2408.00118; hf]
+"""
+from .base import LayerSpec, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-27b",
+        family="dense",
+        n_layers=46,
+        d_model=4608,
+        n_heads=32,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=36864,
+        vocab_size=256000,
+        pattern=(LayerSpec("attn_local"), LayerSpec("attn")),  # 23 groups
+        window=4096,
+        attn_softcap=50.0,
+        logit_softcap=30.0,
+        attn_scale=(4608 / 32) ** -0.5,  # query_pre_attn_scalar = d/H
+        post_norms=True,
+        scale_embeddings=True,
+        tie_embeddings=True,
+        act="gelu",
+        source="arXiv:2408.00118",
+    )

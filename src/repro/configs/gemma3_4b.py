@@ -1,0 +1,34 @@
+"""gemma3-4b [dense] — 5:1 local:global attention, 128k context, qk-norm.
+
+34L d_model=2560 8H (GQA kv=4) head_dim=256 d_ff=10240 vocab=262144
+[hf:google/gemma-3-1b-pt; unverified]
+34 = 4 leading local layers + 5 x (5 local + 1 global).
+"""
+from .base import LayerSpec, ModelConfig
+
+_L = LayerSpec("attn_local")
+_G = LayerSpec("attn")
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-4b",
+        family="dense",
+        n_layers=34,
+        d_model=2560,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=256,
+        d_ff=10240,
+        vocab_size=262144,
+        prefix=(_L, _L, _L, _L),
+        pattern=(_L, _L, _L, _L, _L, _G),  # 5 groups
+        window=1024,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        post_norms=True,
+        scale_embeddings=True,
+        tie_embeddings=True,
+        act="gelu",
+        source="hf:google/gemma-3-1b-pt (scaled per brief); unverified",
+    )

@@ -1,0 +1,40 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7, MoE 16e top-2.
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536 [arXiv:2403.19887; hf]
+Block of 8: attention at index 0, mamba elsewhere; MoE on odd layers.
+Adaptation notes: Jamba uses Mamba-1 internally; we use the Mamba2/SSD
+mixer (TPU/MXU-friendly chunked form — DESIGN.md §2).  Jamba has no
+positional embedding; the framework applies RoPE uniformly (harmless for
+dry-run/roofline purposes, noted for fidelity).
+"""
+from .base import LayerSpec, MambaConfig, MoEConfig, ModelConfig
+
+
+def _block():
+    specs = []
+    for i in range(8):
+        mixer = "attn" if i == 0 else "mamba"
+        ffn = "moe" if i % 2 == 1 else "dense"
+        specs.append(LayerSpec(mixer, ffn))
+    return tuple(specs)
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=24576,
+        vocab_size=65536,
+        pattern=_block(),  # 9 groups
+        moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=24576),
+        mamba=MambaConfig(d_state=64, head_dim=64, expand=2, conv_width=4,
+                          chunk=256, n_groups=8),
+        tie_embeddings=False,
+        act="silu",
+        source="arXiv:2403.19887",
+    )

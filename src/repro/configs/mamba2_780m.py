@@ -1,0 +1,26 @@
+"""mamba2-780m [ssm] — SSD (state-space duality), attention-free.
+
+48L d_model=1536 ssm_state=128 vocab=50280 [arXiv:2405.21060; unverified]
+d_inner = 2*d = 3072, head_dim=64 -> 48 SSD heads. No MLP (pure Mamba2 stack).
+"""
+from .base import LayerSpec, MambaConfig, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-780m",
+        family="ssm",
+        n_layers=48,
+        d_model=1536,
+        n_heads=0,
+        n_kv_heads=0,
+        head_dim=0,
+        d_ff=0,
+        vocab_size=50280,
+        pattern=(LayerSpec("mamba", "none"),),
+        mamba=MambaConfig(d_state=128, head_dim=64, expand=2, conv_width=4,
+                          chunk=256, n_groups=1),
+        tie_embeddings=True,
+        act="silu",
+        source="arXiv:2405.21060; unverified",
+    )

@@ -1,0 +1,28 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (MHA) d_ff=6144 vocab=2048 [arXiv:2306.05284; hf]
+The EnCodec frontend is a STUB per the brief: input_specs() provides
+precomputed frame embeddings; the backbone decodes codebook tokens.
+Adaptation: MusicGen uses LayerNorm + sinusoidal embeddings; the framework
+applies RMSNorm + RoPE uniformly (noted for fidelity).
+"""
+from .base import LayerSpec, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium",
+        family="audio",
+        n_layers=48,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=24,
+        head_dim=64,
+        d_ff=6144,
+        vocab_size=2048,
+        pattern=(LayerSpec("attn"),),
+        tie_embeddings=False,
+        act="gelu",
+        frontend="audio_stub",
+        source="arXiv:2306.05284",
+    )

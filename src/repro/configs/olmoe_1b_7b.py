@@ -1,0 +1,25 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8, qk-norm.
+
+16L d_model=2048 16H (MHA) d_ff(expert)=1024 vocab=50304 [arXiv:2409.02060; hf]
+"""
+from .base import LayerSpec, MoEConfig, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b",
+        family="moe",
+        n_layers=16,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1024,
+        vocab_size=50304,
+        pattern=(LayerSpec("attn", "moe"),),
+        moe=MoEConfig(n_experts=64, top_k=8, d_ff_expert=1024),
+        qk_norm=True,
+        tie_embeddings=False,
+        act="silu",
+        source="arXiv:2409.02060",
+    )

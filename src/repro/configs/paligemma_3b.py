@@ -1,0 +1,29 @@
+"""paligemma-3b [vlm] — SigLIP frontend (stub) + gemma decoder.
+
+18L d_model=2048 8H (MQA kv=1) head_dim=256 d_ff=16384 vocab=257216
+[arXiv:2407.07726; hf]
+The SigLIP tower is a STUB per the brief: input_specs() provides 256
+precomputed patch embeddings prepended to the text sequence.
+"""
+from .base import LayerSpec, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-3b",
+        family="vlm",
+        n_layers=18,
+        d_model=2048,
+        n_heads=8,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab_size=257216,
+        pattern=(LayerSpec("attn"),),
+        scale_embeddings=True,
+        tie_embeddings=True,
+        act="gelu",
+        frontend="vision_stub",
+        prefix_tokens=256,
+        source="arXiv:2407.07726",
+    )

@@ -1,0 +1,26 @@
+"""qwen3-32b [dense] — qk_norm, GQA.
+
+64L d_model=5120 64H (GQA kv=8) head_dim=128 d_ff=25600 vocab=151936
+[hf:Qwen/Qwen3-8B family; hf]
+"""
+from .base import LayerSpec, ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=25600,
+        vocab_size=151936,
+        pattern=(LayerSpec("attn"),),
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=False,
+        act="silu",
+        source="hf:Qwen/Qwen3-8B (scaled)",
+    )

@@ -1,0 +1,55 @@
+"""Reduced (smoke-test scale) configs — same family/feature set, tiny dims.
+
+Every assigned architecture gets a CPU-runnable miniature preserving its
+distinguishing structure: layer pattern (local:global ratios, hybrid
+interleave, dense prefix), GQA grouping, MoE routing (fewer/smaller
+experts), MLA latents, SSD state, modality stubs, softcaps, qk-norm.
+Full configs are exercised only via the dry-run (ShapeDtypeStruct).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from . import get_config
+from .base import MLAConfig, MambaConfig, ModelConfig, MoEConfig
+
+
+def reduced_config(arch_id: str, *, vocab: int = 512) -> ModelConfig:
+    """Miniature of ``arch_id`` preserving the family's structure."""
+    full = get_config(arch_id)
+    # one pattern repetition x 2 groups (keeps heterogeneous stacks honest)
+    n_layers = len(full.prefix) + 2 * len(full.pattern)
+    overrides: dict = dict(
+        name=full.name + "-reduced",
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(4, max(1, full.n_kv_heads * 4 // max(full.n_heads, 1))),
+        head_dim=16,
+        d_ff=128,
+        vocab_size=vocab,
+        vocab_pad_multiple=64,
+        window=min(full.window, 16) if full.window else 0,
+        attn_scale=None,
+        prefix_tokens=8 if full.frontend == "vision_stub" else 0,
+    )
+    if full.moe is not None:
+        overrides["moe"] = MoEConfig(
+            n_experts=8,
+            top_k=min(full.moe.top_k, 2),
+            d_ff_expert=32,
+            n_shared=min(full.moe.n_shared, 1),
+            capacity_factor=full.moe.capacity_factor,
+        )
+    if full.mla is not None:
+        overrides["mla"] = MLAConfig(
+            kv_lora_rank=32, q_lora_rank=48, qk_nope_dim=16, qk_rope_dim=8,
+            v_head_dim=16,
+        )
+    if full.mamba is not None:
+        overrides["mamba"] = MambaConfig(
+            d_state=16, head_dim=16, expand=2, conv_width=4, chunk=8,
+            n_groups=1,
+        )
+    return dataclasses.replace(full, **overrides)

@@ -1,0 +1,26 @@
+"""SwitchAgg core: in-network aggregation as a composable JAX feature.
+
+Public surface:
+  reduction_model — paper Eq. 1-3, Theorems 2.1/2.2, simulators
+  kvagg           — FPE/BPE bounded-memory KV combine (pure jnp semantics)
+  compressor      — gradient -> KV payload (top-k + error feedback)
+  tree            — aggregation-tree construction over a mesh
+  collectives     — flat / tree / compressed gradient exchanges (shard_map)
+  planner         — the controller: job config, memory partitioning, plans
+"""
+
+from . import collectives, compressor, kvagg, planner, reduction_model, tree
+from .collectives import GradAggMode
+from .planner import ExchangePlan, plan_grad_exchange
+
+__all__ = [
+    "collectives",
+    "compressor",
+    "kvagg",
+    "planner",
+    "reduction_model",
+    "tree",
+    "GradAggMode",
+    "ExchangePlan",
+    "plan_grad_exchange",
+]

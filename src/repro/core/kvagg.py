@@ -1,0 +1,247 @@
+"""Two-level bounded-memory KV aggregation — the SwitchAgg FPE/BPE hierarchy.
+
+Semantics (paper §4.2.4):
+
+  * The **FPE** is a hash table of ``capacity`` slots held in fast memory
+    (SRAM on the switch, VMEM in the Pallas kernel).  For each incoming
+    (key, value) pair: hash the key, probe the bucket; on hit aggregate
+    (SUM/MAX/MIN); on empty slot insert; on collision EVICT the resident
+    pair downstream and insert the new pair.  The engine never stalls.
+  * The **BPE** digests the eviction stream with a much larger (HBM/DRAM)
+    table; we realize it as an exact sort-based combine, which on TPU is the
+    natural "large slow memory" aggregation (sort + segment-sum is MXU/VPU
+    friendly, and its latency is overlapped with the next FPE block exactly
+    like the paper overlaps DRAM latency).
+
+Invariant (checked by property tests): grouping the *outputs* (FPE flush +
+BPE output) by key and combining gives exactly the input grouped-by-key
+combine — aggregation never loses or double-counts data.
+
+This module is the pure-jnp implementation; ``repro.kernels.kv_aggregate``
+is the Pallas/TPU version of the FPE loop with identical semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY_KEY = jnp.int32(-1)
+
+_HASH_MULT = jnp.uint32(0x9E3779B1)  # Knuth/Fibonacci multiplicative hash
+
+
+def hash_key(key: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """Multiplicative hash of int32 keys into [0, n_buckets)."""
+    h = key.astype(jnp.uint32) * _HASH_MULT
+    h = h ^ (h >> jnp.uint32(15))
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def _combine(op: str, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    if op == "sum":
+        return a + b
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "min":
+        return jnp.minimum(a, b)
+    raise ValueError(f"unsupported aggregation op: {op}")
+
+
+def _identity(op: str, dtype) -> jnp.ndarray:
+    if op == "sum":
+        return jnp.zeros((), dtype)
+    if op == "max":
+        return jnp.array(-jnp.inf, dtype)
+    if op == "min":
+        return jnp.array(jnp.inf, dtype)
+    raise ValueError(f"unsupported aggregation op: {op}")
+
+
+class FPEResult(NamedTuple):
+    table_keys: jnp.ndarray  # [capacity] int32, EMPTY_KEY where vacant
+    table_values: jnp.ndarray  # [capacity]
+    evict_keys: jnp.ndarray  # [n] int32, EMPTY_KEY where no eviction
+    evict_values: jnp.ndarray  # [n]
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "ways", "op"))
+def fpe_aggregate(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    capacity: int,
+    ways: int = 4,
+    op: str = "sum",
+) -> FPEResult:
+    """Paper-faithful FPE: sequential hash-probe-aggregate-or-evict.
+
+    keys: [n] int32 (EMPTY_KEY entries are skipped — allows padded streams)
+    values: [n]
+    Returns the resident table plus an eviction stream aligned with the
+    input (evict_keys[i] is the pair evicted while processing input i).
+    """
+    n = keys.shape[0]
+    ways = max(1, min(ways, capacity))
+    n_buckets = max(1, capacity // ways)
+    cap = n_buckets * ways
+
+    tk0 = jnp.full((n_buckets, ways), EMPTY_KEY, dtype=jnp.int32)
+    tv0 = jnp.zeros((n_buckets, ways), dtype=values.dtype)
+
+    def step(carry, inp):
+        tk, tv = carry
+        k, v = inp
+        b = hash_key(k, n_buckets)
+        row_k = tk[b]  # [ways]
+        row_v = tv[b]
+        is_pad = k == EMPTY_KEY
+
+        hit = row_k == k  # [ways]
+        any_hit = jnp.any(hit) & ~is_pad
+        empty = row_k == EMPTY_KEY
+        any_empty = jnp.any(empty) & ~is_pad
+        # first empty way
+        empty_idx = jnp.argmax(empty)
+
+        # --- hit: aggregate into the matching way
+        agg_row_v = jnp.where(hit, _combine(op, row_v, v), row_v)
+
+        # --- miss+empty: insert at first empty way
+        ins_row_k = row_k.at[empty_idx].set(k)
+        ins_row_v = row_v.at[empty_idx].set(v)
+
+        # --- miss+full: evict way 0, shift left, insert at last way (paper:
+        # the previously stored key is evicted and forwarded to the BPE)
+        ev_k, ev_v = row_k[0], row_v[0]
+        sh_row_k = jnp.concatenate([row_k[1:], k[None]])
+        sh_row_v = jnp.concatenate([row_v[1:], v[None]])
+
+        new_row_k = jnp.where(any_hit, row_k, jnp.where(any_empty, ins_row_k, sh_row_k))
+        new_row_v = jnp.where(
+            any_hit, agg_row_v, jnp.where(any_empty, ins_row_v, sh_row_v)
+        )
+        evicted = (~any_hit) & (~any_empty) & (~is_pad)
+        out_k = jnp.where(evicted, ev_k, EMPTY_KEY)
+        out_v = jnp.where(evicted, ev_v, jnp.zeros((), tv.dtype))
+
+        new_row_k = jnp.where(is_pad, row_k, new_row_k)
+        new_row_v = jnp.where(is_pad, row_v, new_row_v)
+        tk = tk.at[b].set(new_row_k)
+        tv = tv.at[b].set(new_row_v)
+        return (tk, tv), (out_k, out_v)
+
+    (tk, tv), (ek, ev) = jax.lax.scan(step, (tk0, tv0), (keys, values))
+    return FPEResult(tk.reshape(cap), tv.reshape(cap), ek, ev)
+
+
+class CombineResult(NamedTuple):
+    unique_keys: jnp.ndarray  # [n] int32, EMPTY_KEY past n_unique
+    combined_values: jnp.ndarray  # [n]
+    n_unique: jnp.ndarray  # [] int32
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def sorted_combine(keys: jnp.ndarray, values: jnp.ndarray, *, op: str = "sum") -> CombineResult:
+    """Exact combine-by-key via sort + segment reduction (the BPE / the
+    beyond-paper vectorized aggregator).  EMPTY_KEY inputs are ignored.
+
+    Output is fixed-shape [n]: unique keys packed to the front in ascending
+    order, EMPTY_KEY padding after ``n_unique``.
+    """
+    n = keys.shape[0]
+    pad = keys == EMPTY_KEY
+    # Sort padding to the end: sort by (is_pad, key).
+    sort_key = jnp.where(pad, jnp.iinfo(jnp.int32).max, keys)
+    order = jnp.argsort(sort_key)
+    sk = sort_key[order]
+    sv = values[order]
+
+    # Segment ids: increment where the key changes.
+    change = jnp.concatenate([jnp.ones((1,), jnp.int32), (sk[1:] != sk[:-1]).astype(jnp.int32)])
+    seg = jnp.cumsum(change) - 1  # [n] in [0, n)
+
+    ident = _identity(op, values.dtype)
+    if op == "sum":
+        comb = jax.ops.segment_sum(sv, seg, num_segments=n)
+    elif op == "max":
+        comb = jax.ops.segment_max(sv, seg, num_segments=n)
+    else:
+        comb = jax.ops.segment_min(sv, seg, num_segments=n)
+
+    # First occurrence of each segment gives its key.
+    first_idx = jax.ops.segment_min(jnp.arange(n), seg, num_segments=n)
+    n_pad = jnp.sum(pad)
+    n_seg = seg[-1] + 1  # segments including a possible padding segment
+    n_unique = jnp.where(n_pad > 0, n_seg - 1, n_seg).astype(jnp.int32)
+    n_unique = jnp.where(n == n_pad, 0, n_unique)
+
+    slot = jnp.arange(n)
+    valid = slot < n_unique
+    uk = jnp.where(valid, sk[jnp.clip(first_idx, 0, n - 1)], EMPTY_KEY)
+    cv = jnp.where(valid, comb, ident)
+    return CombineResult(uk.astype(jnp.int32), cv, n_unique)
+
+
+class TwoLevelResult(NamedTuple):
+    """Full SwitchAgg node output: FPE flush + BPE combine, plus traffic stats."""
+
+    out_keys: jnp.ndarray  # [capacity + n]
+    out_values: jnp.ndarray  # [capacity + n]
+    n_out: jnp.ndarray  # [] int32 — number of real output pairs
+    n_in: jnp.ndarray  # [] int32 — number of real input pairs
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "ways", "op", "bpe"))
+def two_level_aggregate(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    capacity: int,
+    ways: int = 4,
+    op: str = "sum",
+    bpe: bool = True,
+) -> TwoLevelResult:
+    """One SwitchAgg aggregation node: FPE hash stage + optional BPE stage.
+
+    With ``bpe=False`` this models the SRAM-only programmable switch
+    (DAIET-like): evictions leave the node unaggregated — the paper's Fig. 9
+    "S-*" curves.  With ``bpe=True`` evictions are combined in the back-end
+    ("M-*" curves).
+    """
+    fpe = fpe_aggregate(keys, values, capacity=capacity, ways=ways, op=op)
+    n = keys.shape[0]
+    cap = fpe.table_keys.shape[0]
+    if bpe:
+        bpe_out = sorted_combine(fpe.evict_keys, fpe.evict_values, op=op)
+        ok = jnp.concatenate([fpe.table_keys, bpe_out.unique_keys])
+        ov = jnp.concatenate([fpe.table_values, bpe_out.combined_values])
+    else:
+        ok = jnp.concatenate([fpe.table_keys, fpe.evict_keys])
+        ov = jnp.concatenate([fpe.table_values, fpe.evict_values])
+    n_out = jnp.sum(ok != EMPTY_KEY).astype(jnp.int32)
+    n_in = jnp.sum(keys != EMPTY_KEY).astype(jnp.int32)
+    return TwoLevelResult(ok, ov, n_out, n_in)
+
+
+def reduction_ratio(res: TwoLevelResult) -> jnp.ndarray:
+    """Traffic reduction achieved by the node (paper's R)."""
+    return 1.0 - res.n_out / jnp.maximum(res.n_in, 1)
+
+
+# ---------------------------------------------------------------------------
+# Length-grouped dispatch — the payload analyzer (paper §4.2.3).
+# ---------------------------------------------------------------------------
+
+
+def length_group(key_lengths: jnp.ndarray, base: int = 8, n_groups: int = 8) -> jnp.ndarray:
+    """Payload-analyzer binning: key length L -> group index.
+
+    The paper divides key lengths [8B, 64B] into 8 groups of base B=8; each
+    group is served by a dedicated FPE.  Returns clip(ceil(L/base)-1, 0, G-1).
+    """
+    g = (key_lengths + base - 1) // base - 1
+    return jnp.clip(g, 0, n_groups - 1).astype(jnp.int32)

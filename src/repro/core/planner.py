@@ -1,0 +1,158 @@
+"""The SwitchAgg controller, in-process (paper §3 "Controller", §4.1 protocol).
+
+The paper's controller receives a Launch request (worker count), knows the
+topology, builds the aggregation tree, Configures every switch (memory
+partitioning per tree, child counts, forwarding ports), and Acks the master.
+Our planner does the same trace-time work for a JAX mesh:
+
+  * builds the `AggregationTree` from the mesh,
+  * partitions combiner memory among concurrent jobs (paper §4.2.2 divides
+    switch memory evenly among trees),
+  * sizes the FPE capacity from the reduction model (Eq. 3) given the
+    expected key variety,
+  * and emits an `ExchangePlan` the training/serving step consumes.
+
+The paper's wire protocol (Launch / Configure / Ack / Aggregation packets,
+Table 1) survives as the dataclasses below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from . import reduction_model as rm
+from . import tree as tree_lib
+from .collectives import GradAggMode
+
+
+# --- Table 1 packet types, as planner datatypes -----------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchRequest:
+    """<n_mappers, n_reducers, reducer_addrs, mapper_addrs> -> mesh terms."""
+
+    job_id: int
+    n_workers: int
+    expected_pairs: int  # data amount M (pairs) per worker
+    key_variety: int  # N
+    op: str = "sum"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigureMsg:
+    """<n_trees, [tree_id, n_children]> per aggregation node."""
+
+    tree_id: int
+    level_axes: tuple[str, ...]
+    fanins: tuple[int, ...]
+    fpe_capacity: int  # pairs resident per node for THIS tree
+    op: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Ack:
+    tree_id: int
+    ok: bool
+    detail: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """Everything a train/serve step needs to run the exchange."""
+
+    mode: GradAggMode
+    leaf_axis: str
+    upper_axes: tuple[str, ...]
+    k_fraction: float
+    fpe_capacity: int
+    # analytics
+    predicted_root_reduction: float  # traffic cut on the scarcest level vs flat
+    predicted_kv_reduction: float  # Eq. 3 prediction for the KV combine
+
+
+class Controller:
+    """Holds switch memory budget and active trees; sizes new jobs."""
+
+    def __init__(self, combiner_budget_pairs: int = 1 << 20):
+        self.budget = combiner_budget_pairs
+        self.active: dict[int, ConfigureMsg] = {}
+
+    def configure(self, req: LaunchRequest, tree: tree_lib.AggregationTree) -> ConfigureMsg:
+        """Partition combiner memory evenly among active trees (paper §4.2.2)."""
+        n_trees = len(self.active) + 1
+        cap = max(1, self.budget // n_trees)
+        msg = ConfigureMsg(
+            tree_id=req.job_id,
+            level_axes=tree.axes,
+            fanins=tuple(l.fanin for l in tree.levels),
+            fpe_capacity=cap,
+            op=req.op,
+        )
+        # re-partition already-active trees
+        self.active[req.job_id] = msg
+        self.active = {
+            tid: dataclasses.replace(m, fpe_capacity=max(1, self.budget // len(self.active)))
+            for tid, m in self.active.items()
+        }
+        return self.active[req.job_id]
+
+    def release(self, job_id: int) -> None:
+        self.active.pop(job_id, None)
+        if self.active:
+            cap = max(1, self.budget // len(self.active))
+            self.active = {
+                tid: dataclasses.replace(m, fpe_capacity=cap) for tid, m in self.active.items()
+            }
+
+
+def plan_grad_exchange(
+    mesh,
+    *,
+    mode: GradAggMode = GradAggMode.TREE,
+    grad_bytes: int = 0,
+    key_variety: int = 0,
+    k_fraction: float = 0.01,
+    combiner_budget_pairs: int = 1 << 20,
+    reduce_axes: Sequence[str] = ("data", "pod"),
+) -> ExchangePlan:
+    """Build the exchange plan for gradient aggregation on this mesh."""
+    tree = tree_lib.from_mesh(mesh, reduce_axes=reduce_axes)
+    leaf = tree.levels[0].axis
+    uppers = tuple(l.axis for l in tree.levels[1:])
+
+    root_red = 0.0
+    if grad_bytes and len(tree.levels) > 1:
+        root_red = tree.traffic_model(grad_bytes).tree_reduction_at_root()
+
+    kv_red = 0.0
+    if key_variety:
+        # data amount at the node = fanin * k pairs; Eq. 3 with C = budget
+        fanin = tree.fanin
+        m = max(key_variety, int(fanin * max(1, key_variety * k_fraction)))
+        kv_red = rm.reduction_ratio(m, key_variety, combiner_budget_pairs)
+
+    return ExchangePlan(
+        mode=mode,
+        leaf_axis=leaf,
+        upper_axes=uppers,
+        k_fraction=k_fraction,
+        fpe_capacity=combiner_budget_pairs,
+        predicted_root_reduction=root_red,
+        predicted_kv_reduction=kv_red,
+    )
+
+
+def size_fpe_capacity(key_variety: int, target_reduction: float, data_amount: int) -> int:
+    """Invert Eq. 3: the capacity needed to hit a target reduction ratio."""
+    if key_variety <= 0:
+        return 1
+    ideal = 1.0 - key_variety / max(data_amount, key_variety)
+    if target_reduction >= ideal:
+        return key_variety  # need to hold every key
+    denom = (1.0 / key_variety - 1.0 / data_amount)
+    if denom <= 0:
+        return key_variety
+    return max(1, math.ceil(target_reduction / denom))

@@ -1,0 +1,96 @@
+"""Aggregation-tree construction over a device mesh (paper §3 "Controller").
+
+The paper's controller knows (1) the worker count and (2) the physical
+topology, builds an aggregation tree, and disseminates it to the switches.
+Our controller knows the JAX mesh and builds a `AggregationTree`: an ordered
+list of levels, leaf -> root, each level being one mesh axis.  Reducing over
+a level = one in-network aggregation hop; the scarcest link (inter-pod) is
+the root level, so it sees only data that every lower level has already
+reduced — the paper's on-path reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from .reduction_model import TreeTrafficModel
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeLevel:
+    axis: str  # mesh axis name
+    fanin: int  # number of children per node at this level
+    link_gbps: float  # per-direction bandwidth of this level's links (GB/s)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationTree:
+    """Leaf-to-root reduction schedule over mesh axes."""
+
+    levels: tuple[TreeLevel, ...]
+
+    @property
+    def axes(self) -> tuple[str, ...]:
+        return tuple(l.axis for l in self.levels)
+
+    @property
+    def fanin(self) -> int:
+        return math.prod(l.fanin for l in self.levels)
+
+    def traffic_model(self, grad_bytes: int) -> TreeTrafficModel:
+        return TreeTrafficModel(grad_bytes=grad_bytes, fanins=tuple(l.fanin for l in self.levels))
+
+    def describe(self) -> str:
+        parts = [f"{l.axis}(x{l.fanin} @ {l.link_gbps:g} GB/s)" for l in self.levels]
+        return " -> ".join(parts) + " -> root"
+
+
+# Default link bandwidths for the production target (TPU v5e-like).
+ICI_GBPS = 50.0  # intra-pod ICI per link
+DCN_GBPS = 6.25  # inter-pod per-chip share (25 GbE-class DCN x2)
+
+
+def from_mesh(
+    mesh,
+    *,
+    reduce_axes: Sequence[str] = ("data", "pod"),
+    link_gbps: dict[str, float] | None = None,
+) -> AggregationTree:
+    """Build the aggregation tree from a mesh, leaf->root = cheap->scarce.
+
+    Axes missing from the mesh are skipped, so the same call works for
+    single-pod (no 'pod' axis) and multi-pod meshes.
+    """
+    link_gbps = link_gbps or {"data": ICI_GBPS, "model": ICI_GBPS, "pod": DCN_GBPS}
+    levels = []
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    for ax in reduce_axes:
+        if ax in sizes and sizes[ax] > 1:
+            levels.append(TreeLevel(axis=ax, fanin=sizes[ax], link_gbps=link_gbps.get(ax, ICI_GBPS)))
+    if not levels:
+        # degenerate single-device mesh — one trivial level keeps APIs total
+        levels.append(TreeLevel(axis=names[0], fanin=1, link_gbps=ICI_GBPS))
+    return AggregationTree(levels=tuple(levels))
+
+
+def worker_tree(n_workers: int, fanin: int, link_gbps: float = ICI_GBPS) -> AggregationTree:
+    """Paper-style tree for N workers with a fixed switch radix (Fig. 1).
+
+    Used by the MapReduce example: ceil(log_fanin(n)) levels of ``fanin``.
+    """
+    if n_workers < 1:
+        raise ValueError("need at least one worker")
+    levels = []
+    remaining = n_workers
+    i = 0
+    while remaining > 1:
+        f = min(fanin, remaining)
+        levels.append(TreeLevel(axis=f"lvl{i}", fanin=f, link_gbps=link_gbps))
+        remaining = math.ceil(remaining / f)
+        i += 1
+    if not levels:
+        levels.append(TreeLevel(axis="lvl0", fanin=1, link_gbps=link_gbps))
+    return AggregationTree(levels=tuple(levels))

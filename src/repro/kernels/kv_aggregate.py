@@ -1,0 +1,198 @@
+"""Pallas TPU kernel: the SwitchAgg FPE hash-combine engine.
+
+TPU adaptation of the paper's front-end processing engine (§4.2.4):
+
+  * The hash table lives in **VMEM** (the switch's SRAM analogue): keys
+    ``[n_buckets, ways]`` int32 + values ``[n_buckets, ways]``, allocated as
+    Pallas scratch so it persists across grid steps while the input stream
+    is tiled through HBM->VMEM block by block (BlockSpec pipeline = the
+    paper's line-rate packet flow).
+  * ``ways`` is the **lane dimension**: one bucket probe is a single VPU
+    compare over the (1, ways) row — the hardware's parallel slot compare.
+    Use ways=128 on real TPUs for full-lane utilization; tests sweep small
+    widths in interpret mode.
+  * On collision the resident way-0 pair is **evicted to the output stream**
+    (never a stall/retry — the paper's no-penalty miss), the row shifts
+    left, and the new pair occupies the last way (LRU-ish, as in the paper
+    where the previously stored key is replaced).
+  * The eviction stream (the BPE feed) leaves through a second output, one
+    slot per input element, EMPTY_KEY where nothing was evicted.  The BPE
+    combine itself is a bulk sort+segment-sum on the eviction stream
+    (``ops.two_level_aggregate``) whose latency overlaps the next FPE block
+    exactly as the paper overlaps DRAM latency.
+
+Semantics are bit-identical to ``repro.core.kvagg.fpe_aggregate`` (the
+pure-jnp oracle re-exported via ``ref.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EMPTY_KEY = -1  # plain int so kernels inline it as a literal
+_HASH_MULT = 0x9E3779B1
+
+
+def _hash(k: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    h = k.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)
+    h = h ^ (h >> jnp.uint32(15))
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def _combine(op, a, b):
+    if op == "sum":
+        return a + b
+    if op == "max":
+        return jnp.maximum(a, b)
+    if op == "min":
+        return jnp.minimum(a, b)
+    raise ValueError(op)
+
+
+def _fpe_kernel(
+    keys_ref,  # [block_n] int32 (VMEM, streamed)
+    vals_ref,  # [block_n] float (VMEM, streamed)
+    evk_ref,  # [block_n] int32 out — eviction stream block
+    evv_ref,  # [block_n] float out
+    otk_ref,  # [n_buckets, ways] int32 out — final table (written at flush)
+    otv_ref,  # [n_buckets, ways] float out
+    tk_ref,  # scratch: resident keys
+    tv_ref,  # scratch: resident values
+    *,
+    n_buckets: int,
+    ways: int,
+    op: str,
+    n_blocks: int,
+):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        tk_ref[...] = jnp.full((n_buckets, ways), EMPTY_KEY, dtype=jnp.int32)
+        tv_ref[...] = jnp.zeros((n_buckets, ways), dtype=tv_ref.dtype)
+
+    block_n = keys_ref.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, ways), 1)
+
+    def body(i, _):
+        k = keys_ref[i]
+        v = vals_ref[i]
+        is_pad = k == EMPTY_KEY
+        b = _hash(k, n_buckets)
+
+        row_k = pl.load(tk_ref, (pl.ds(b, 1), slice(None)))  # (1, ways)
+        row_v = pl.load(tv_ref, (pl.ds(b, 1), slice(None)))
+
+        hit = row_k == k  # (1, ways) — one VPU compare = the bucket probe
+        any_hit = jnp.any(hit) & ~is_pad
+        empty = row_k == EMPTY_KEY
+        any_empty = jnp.any(empty) & ~is_pad
+        empty_idx = jnp.argmax(empty.astype(jnp.int32))  # first empty way
+
+        # hit: aggregate into the matching way
+        agg_v = jnp.where(hit, _combine(op, row_v, v), row_v)
+
+        # miss+empty: insert at first empty way
+        at_empty = lane == empty_idx
+        ins_k = jnp.where(at_empty, k, row_k)
+        ins_v = jnp.where(at_empty, v, row_v)
+
+        # miss+full: evict way 0, shift left, insert at last way
+        ev_k = row_k[0, 0]
+        ev_v = row_v[0, 0]
+        sh_k = jnp.where(lane == ways - 1, k, jnp.roll(row_k, -1, axis=1))
+        sh_v = jnp.where(lane == ways - 1, v, jnp.roll(row_v, -1, axis=1))
+
+        new_k = jnp.where(any_hit, row_k, jnp.where(any_empty, ins_k, sh_k))
+        new_v = jnp.where(any_hit, agg_v, jnp.where(any_empty, ins_v, sh_v))
+        new_k = jnp.where(is_pad, row_k, new_k)
+        new_v = jnp.where(is_pad, row_v, new_v)
+
+        evicted = (~any_hit) & (~any_empty) & (~is_pad)
+        out_k = jnp.where(evicted, ev_k, EMPTY_KEY)
+        out_v = jnp.where(evicted, ev_v, jnp.zeros((), tv_ref.dtype))
+
+        pl.store(tk_ref, (pl.ds(b, 1), slice(None)), new_k)
+        pl.store(tv_ref, (pl.ds(b, 1), slice(None)), new_v)
+        pl.store(evk_ref, (pl.ds(i, 1),), out_k[None])
+        pl.store(evv_ref, (pl.ds(i, 1),), out_v[None])
+        return 0
+
+    jax.lax.fori_loop(0, block_n, body, 0)
+
+    # End-of-task flush (paper's EoT): emit the resident table once.
+    @pl.when(pid == n_blocks - 1)
+    def _flush():
+        otk_ref[...] = tk_ref[...]
+        otv_ref[...] = tv_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "ways", "op", "block_n", "interpret")
+)
+def fpe_aggregate_pallas(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    capacity: int,
+    ways: int = 4,
+    op: str = "sum",
+    block_n: int = 512,
+    interpret: bool | None = None,
+):
+    """Run the FPE kernel over a KV stream.
+
+    Returns (table_keys [capacity], table_values [capacity],
+             evict_keys [n], evict_values [n]) — same contract as
+    ``core.kvagg.fpe_aggregate``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = keys.shape[0]
+    ways = max(1, min(ways, capacity))
+    n_buckets = max(1, capacity // ways)
+    cap = n_buckets * ways
+
+    pad = (-n) % block_n
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), EMPTY_KEY, jnp.int32)])
+        values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+    total = keys.shape[0]
+    n_blocks = total // block_n
+
+    kernel = functools.partial(
+        _fpe_kernel, n_buckets=n_buckets, ways=ways, op=op, n_blocks=n_blocks
+    )
+    out_shapes = (
+        jax.ShapeDtypeStruct((total,), jnp.int32),  # evict keys
+        jax.ShapeDtypeStruct((total,), values.dtype),  # evict values
+        jax.ShapeDtypeStruct((n_buckets, ways), jnp.int32),  # table keys
+        jax.ShapeDtypeStruct((n_buckets, ways), values.dtype),  # table values
+    )
+    grid = (n_blocks,)
+    evk, evv, otk, otv = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((n_buckets, ways), lambda i: (0, 0)),
+            pl.BlockSpec((n_buckets, ways), lambda i: (0, 0)),
+        ],
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((n_buckets, ways), jnp.int32),
+            pltpu.VMEM((n_buckets, ways), values.dtype),
+        ],
+        interpret=interpret,
+    )(keys, values)
+    return otk.reshape(cap), otv.reshape(cap), evk[:n], evv[:n]

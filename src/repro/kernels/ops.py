@@ -1,0 +1,87 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``two_level_aggregate`` is the full SwitchAgg node: the Pallas FPE kernel
+(VMEM hash table, evict-on-collision) feeding a BPE bulk combine
+(sort + segment-sum over the eviction stream — the large/slow memory level,
+overlapped with the next FPE block on real hardware).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvagg as _kvagg
+from .kv_aggregate import fpe_aggregate_pallas
+from .topk_compress import topk_rows_pallas
+
+EMPTY_KEY = _kvagg.EMPTY_KEY
+
+
+class TwoLevelOut(NamedTuple):
+    out_keys: jnp.ndarray
+    out_values: jnp.ndarray
+    n_out: jnp.ndarray
+    n_in: jnp.ndarray
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "ways", "op", "block_n", "bpe", "interpret")
+)
+def two_level_aggregate(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    capacity: int,
+    ways: int = 4,
+    op: str = "sum",
+    block_n: int = 512,
+    bpe: bool = True,
+    interpret: bool | None = None,
+) -> TwoLevelOut:
+    """SwitchAgg node with the Pallas FPE (kernel) + BPE (bulk combine)."""
+    tk, tv, ek, ev = fpe_aggregate_pallas(
+        keys, values, capacity=capacity, ways=ways, op=op, block_n=block_n,
+        interpret=interpret,
+    )
+    if bpe:
+        b = _kvagg.sorted_combine(ek, ev, op=op)
+        ok = jnp.concatenate([tk, b.unique_keys])
+        ov = jnp.concatenate([tv, b.combined_values])
+    else:
+        ok = jnp.concatenate([tk, ek])
+        ov = jnp.concatenate([tv, ev])
+    n_out = jnp.sum(ok != EMPTY_KEY).astype(jnp.int32)
+    n_in = jnp.sum(keys != EMPTY_KEY).astype(jnp.int32)
+    return TwoLevelOut(ok, ov, n_out, n_in)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "block_rows", "interpret"))
+def compress_grad(
+    grad: jnp.ndarray,
+    residual: jnp.ndarray,
+    *,
+    k: int,
+    chunk: int = 4096,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+):
+    """Blockwise top-k gradient -> KV payload using the Pallas kernel.
+
+    Returns (keys [rows*k] int32 global flat indices, values [rows*k],
+    new_residual) with error feedback.  ``chunk`` is the per-FPE-group
+    working set (cols per row).
+    """
+    acc = grad.astype(residual.dtype).reshape(-1) + residual.reshape(-1)
+    n = acc.shape[0]
+    if n % chunk != 0:
+        raise ValueError(f"grad size {n} not divisible by chunk {chunk}")
+    mat = acc.reshape(-1, chunk)
+    vals, idx = topk_rows_pallas(mat, k=k, block_rows=block_rows, interpret=interpret)
+    rows = mat.shape[0]
+    gkeys = (idx + jnp.arange(rows, dtype=jnp.int32)[:, None] * chunk).reshape(-1)
+    new_res = acc.at[gkeys].set(0.0).reshape(residual.shape)
+    return gkeys, vals.reshape(-1), new_res

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each kernel in this package has an exact reference here; kernel tests sweep
+shapes/dtypes and assert_allclose kernel-vs-ref (interpret=True on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvagg as _kvagg
+
+EMPTY_KEY = _kvagg.EMPTY_KEY
+
+
+def fpe_aggregate_ref(keys, values, *, capacity: int, ways: int = 4, op: str = "sum"):
+    """Oracle for the FPE hash-combine kernel: the core.kvagg scan impl.
+
+    The Pallas kernel processes the stream block-by-block with a persistent
+    VMEM table — semantically identical to this element-sequential scan.
+    """
+    return _kvagg.fpe_aggregate(keys, values, capacity=capacity, ways=ways, op=op)
+
+
+def sorted_combine_ref(keys, values, *, op: str = "sum"):
+    return _kvagg.sorted_combine(keys, values, op=op)
+
+
+def topk_ref(x: jnp.ndarray, k: int):
+    """Oracle for the per-row magnitude top-k kernel.
+
+    x: [rows, cols] -> (values [rows,k], indices [rows,k]) where values are
+    the originals (signed) at the k largest-|.| positions, ordered by
+    descending magnitude; ties broken by lower index (matches the kernel's
+    iterative argmax).
+    """
+    rows = x.shape[0]
+    mag = jnp.abs(x.astype(jnp.float32))
+
+    def step(m, _):
+        am = jnp.argmax(m, axis=-1)  # first max on ties, like the kernel
+        v = jnp.take_along_axis(x, am[:, None], axis=-1)[:, 0]
+        m = m.at[jnp.arange(rows), am].set(-jnp.inf)
+        return m, (v, am.astype(jnp.int32))
+
+    _, (vs, ams) = jax.lax.scan(step, mag, None, length=k)
+    return vs.T, ams.T
+
+
+def segment_sum_ref(values: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int):
+    return jax.ops.segment_sum(values, segment_ids, num_segments=num_segments)

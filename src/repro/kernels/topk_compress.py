@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: per-row magnitude top-k (the KV payload producer).
+
+Gradient blocks are compressed to (index, value) pairs — the SwitchAgg
+aggregation-packet payload.  Each grid step loads a ``[block_rows, cols]``
+tile into VMEM and runs k iterative argmax sweeps:
+
+  * the argmax/one-hot/select of each sweep is a pair of full-lane VPU
+    reductions over the tile — no data-dependent control flow, so the
+    pipeline never stalls (the kernel-level analogue of the paper's
+    line-rate requirement);
+  * k is small (1-2% of cols), so the k sweeps stay VPU-bound and the tile
+    is read from HBM exactly once (arithmetic intensity k·rows·cols /
+    rows·cols·4B — compute-cheap, bandwidth-bound, roofline-optimal for a
+    selection kernel).
+
+Tie-breaking: equal magnitudes pick the lower column index (matches
+``ref.topk_ref``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k: int):
+    x = x_ref[...]  # (rows, cols)
+    rows, cols = x.shape
+    mag = jnp.abs(x.astype(jnp.float32))
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1)
+
+    def body(j, mag_cur):
+        am = jnp.argmax(mag_cur, axis=-1).astype(jnp.int32)  # (rows,)
+        onehot = col == am[:, None]
+        v = jnp.sum(jnp.where(onehot, x, jnp.zeros_like(x)), axis=-1)
+        pl.store(vals_ref, (slice(None), pl.ds(j, 1)), v[:, None])
+        pl.store(idx_ref, (slice(None), pl.ds(j, 1)), am[:, None])
+        return jnp.where(onehot, -jnp.inf, mag_cur)
+
+    jax.lax.fori_loop(0, k, body, mag)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def topk_rows_pallas(
+    x: jnp.ndarray,
+    *,
+    k: int,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+):
+    """Top-k by |.| per row of x [rows, cols] -> (values, indices) [rows, k]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rows, cols = x.shape
+    if k > cols:
+        raise ValueError(f"k={k} > cols={cols}")
+    pad = (-rows) % block_rows
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, cols), x.dtype)])
+    total = x.shape[0]
+
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(total // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((total, k), x.dtype),
+            jax.ShapeDtypeStruct((total, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(x)
+    return vals[:rows], idx[:rows]

@@ -1,0 +1,280 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh; record memory analysis, cost analysis, and the collective
+schedule for the roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmoe-1b-7b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod both
+  python -m repro.launch.dryrun ... --mode flat --out benchmarks/artifacts
+"""
+
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs.base import shape_by_name
+from repro.core.collectives import GradAggMode
+from repro.launch import hlo_analysis as ha
+from repro.launch import hlo_cost
+from repro.launch import profiles
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LMModel
+from repro.optim import AdamWConfig, adamw_init, make_lr_schedule
+from repro.train.step import (
+    TrainProfile,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "artifacts")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               mode: str = "tree", q_chunk: int | None = None,
+               k_chunk: int | None = None, accum: int | None = None,
+               seq_shard: bool = False, post_accum: bool = False,
+               wire_bf16: bool = False, k_fraction: float = 0.01):
+    """Returns (lowered, mesh, cfg, shape, meta). No device allocation."""
+    cfg = configs.get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    prof = profiles.make_profile(arch, shape, mesh, mode=GradAggMode(mode),
+                                 q_chunk=q_chunk, k_chunk=k_chunk,
+                                 accum=accum, seq_shard=seq_shard)
+    model = LMModel(cfg)
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    batch_sds = profiles.input_specs(arch, shape)
+    meta = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "mode": mode, "accum": prof.accum_steps, "fsdp": prof.fsdp,
+            "quant_opt": prof.quantized_opt, "seq_shard": seq_shard,
+            "post_accum": post_accum, "wire_bf16": wire_bf16}
+
+    manual = post_accum or mode == "tree_compress"
+    if shape.kind == "train" and manual:
+        # post-accum manual exchange (shard_map region; see train/compressed)
+        import dataclasses as _dc
+
+        from repro.train.compressed import build_compressed_train_step
+
+        # manual region wants cheap-first dp ordering (data before pod)
+        dp = tuple(a for a in ("data", "pod") if a in mesh.axis_names)
+        prof = _dc.replace(prof, dp_axes=dp)
+        opt_cfg = AdamWConfig(quantized=prof.quantized_opt,
+                              master_fp32=prof.master_fp32)
+        lr_fn = make_lr_schedule(3e-4, 100, 10000)
+        step_fn, sh = build_compressed_train_step(
+            cfg, mesh, prof, opt_cfg, lr_fn,
+            batch_example=batch_sds, params_example=params_sds,
+            k_fraction=k_fraction,
+            mode=(GradAggMode.TREE_COMPRESS if mode == "tree_compress"
+                  else GradAggMode.TREE),
+            wire_dtype=jnp.bfloat16 if wire_bf16 else None,
+        )
+        opt_sds = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_sds)
+        res_sds = jax.eval_shape(lambda: sh["res_example"])
+        lowered = step_fn.lower(params_sds, opt_sds, res_sds, batch_sds,
+                                jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.kind == "train":
+        opt_cfg = AdamWConfig(quantized=prof.quantized_opt,
+                              master_fp32=prof.master_fp32)
+        lr_fn = make_lr_schedule(3e-4, 100, 10000)
+        step_fn, shardings, _ = build_train_step(
+            cfg, mesh, prof, opt_cfg, lr_fn,
+            batch_example=batch_sds, params_example=params_sds,
+        )
+        opt_sds = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_sds)
+        lowered = step_fn.lower(params_sds, opt_sds, batch_sds,
+                                jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.kind == "prefill":
+        plan = profiles.serve_plan(arch, shape, mesh)
+        fn, shardings, _ = build_prefill_step(
+            cfg, mesh, prof, cache_len=shape.seq_len,
+            batch_example=batch_sds, params_example=params_sds,
+            batch_shardable=plan["batch_shardable"],
+            cache_seq_axes=plan["cache_seq_axes"],
+        )
+        lowered = fn.lower(params_sds, batch_sds)
+    else:  # decode
+        plan = profiles.serve_plan(arch, shape, mesh)
+        fn, shardings, model2 = build_serve_step(
+            cfg, mesh, prof, cache_len=shape.seq_len, batch=shape.global_batch,
+            params_example=params_sds,
+            batch_shardable=plan["batch_shardable"],
+            cache_seq_axes=plan["cache_seq_axes"],
+        )
+        cache_sds = jax.eval_shape(
+            lambda: model2.init_caches(shape.global_batch, shape.seq_len,
+                                       jnp.dtype(cfg.dtype))
+        )
+        tok = batch_sds["token"]
+        lowered = fn.lower(params_sds, cache_sds, tok,
+                           jax.ShapeDtypeStruct((), jnp.int32))
+        meta.update(plan)
+    return lowered, mesh, cfg, shape, meta, prof
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             mode: str = "tree", dump_hlo: bool = False,
+             q_chunk: int | None = None, k_chunk: int | None = None,
+             tag: str = "", accum: int | None = None,
+             seq_shard: bool = False, post_accum: bool = False,
+             wire_bf16: bool = False, k_fraction: float = 0.01) -> dict:
+    t0 = time.time()
+    lowered, mesh, cfg, shape, meta, prof = lower_cell(
+        arch, shape_name, multi_pod, mode, q_chunk, k_chunk,
+        accum=accum, seq_shard=seq_shard, post_accum=post_accum,
+        wire_bf16=wire_bf16, k_fraction=k_fraction)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()  # raw XLA numbers (loop bodies counted once)
+    hlo = compiled.as_text()
+    walk = hlo_cost.analyze(hlo, mesh)  # trip-count-aware
+    coll = ha.collectives_from_events(walk["coll"], mesh)
+    n_chips = mesh.devices.size
+    model_flops = ha.model_flops_for(cfg, shape)
+    roof = ha.roofline_terms(
+        hlo_flops=walk["flops"],
+        hlo_bytes=walk["bytes"],
+        coll=coll, n_chips=n_chips, model_flops=model_flops / n_chips,
+    )
+    # structural (model-derived) terms — the headline roofline; the HLO
+    # walker over-multiplies XLA:CPU "wide" loop bodies (see structural.py)
+    from repro.launch.structural import structural_cost
+
+    sc = structural_cost(cfg, shape, mesh, prof)
+    roof_struct = ha.roofline_terms(
+        hlo_flops=sc.flops, hlo_bytes=sc.bytes,
+        coll=coll, n_chips=n_chips, model_flops=model_flops / n_chips,
+    )
+
+    result = {
+        **meta,
+        "n_chips": n_chips,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "total_per_device": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost_xla_raw": {k: float(v) for k, v in cost.items()
+                 if k in ("flops", "bytes accessed", "transcendentals")},
+        "cost": {"flops": walk["flops"], "bytes": walk["bytes"],
+                 "transcendentals": walk["transcendentals"]},
+        "collectives": {
+            "ici_bytes": coll.ici_bytes,
+            "dcn_bytes": coll.dcn_bytes,
+            "by_op": coll.by_op,
+            "n_ops": len(coll.ops),
+        },
+        "roofline": roof.to_dict(),
+        "roofline_structural": roof_struct.to_dict(),
+        "structural_detail": {k: [float(f), float(b)]
+                              for k, (f, b) in sc.detail.items()},
+        "model_flops_global": model_flops,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    pod_tag = "pod2" if multi_pod else "pod1"
+    name = f"{arch}__{shape_name}__{pod_tag}__{mode}{tag}"
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+    if dump_hlo:
+        with gzip.open(os.path.join(out_dir, name + ".hlo.gz"), "wt") as f:
+            f.write(hlo)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["0", "1", "both"], default="both")
+    ap.add_argument("--mode", default="tree",
+                    choices=[m.value for m in GradAggMode])
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--sp", action="store_true", help="sequence-parallel")
+    ap.add_argument("--post-accum", action="store_true",
+                    help="manual-region exchange once after accumulation")
+    ap.add_argument("--wire-bf16", action="store_true")
+    ap.add_argument("--k-fraction", type=float, default=0.01)
+    ap.add_argument("--out", default=os.path.normpath(DEFAULT_OUT))
+    ap.add_argument("--dump-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--k-chunk", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = ([s.name for s in configs.ALL_SHAPES] if args.shape == "all"
+              else [args.shape])
+    pods = {"0": [False], "1": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            if (shape_name == "long_500k"
+                    and arch not in configs.LONG_CONTEXT_ARCHS):
+                print(f"SKIP(full-attn) {arch} x {shape_name}")
+                continue
+            for mp in pods:
+                pod_tag = "pod2" if mp else "pod1"
+                fname = os.path.join(
+                    args.out,
+                    f"{arch}__{shape_name}__{pod_tag}__{args.mode}{args.tag}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"EXISTS {arch} x {shape_name} x {pod_tag}")
+                    continue
+                label = f"{arch} x {shape_name} x {pod_tag} x {args.mode}"
+                try:
+                    r = run_cell(arch, shape_name, mp, args.out, args.mode,
+                                 args.dump_hlo, args.q_chunk, args.k_chunk,
+                                 args.tag, accum=args.accum, seq_shard=args.sp,
+                                 post_accum=args.post_accum,
+                                 wire_bf16=args.wire_bf16,
+                                 k_fraction=args.k_fraction)
+                    rf = r["roofline"]
+                    print(f"OK {label}: compile={r['compile_s']}s "
+                          f"mem/dev={r['memory']['total_per_device']/2**30:.2f}GiB "
+                          f"compute={rf['compute_s']:.4f}s mem={rf['memory_s']:.4f}s "
+                          f"coll={rf['collective_s']:.4f}s dom={rf['dominant']}",
+                          flush=True)
+                    results.append(r)
+                except Exception as e:
+                    print(f"FAIL {label}: {e}", flush=True)
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape_name,
+                                    "multi_pod": mp, "ok": False,
+                                    "error": str(e)})
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Collective-traffic and roofline analysis of compiled (SPMD) HLO.
+
+``cost_analysis()`` gives HLO FLOPs and HBM bytes but NOT collective
+traffic; this module parses the partitioned HLO text, decodes every
+collective's replica groups (literal and iota ``[G,S]<=[dims]T(perm)``
+forms), classifies which mesh axes each collective spans, and converts
+tensor sizes to per-chip link bytes with the standard ring model:
+
+  all-reduce      2 (S-1)/S x T        (T = per-device tensor bytes)
+  all-gather      (S-1)/S x T_out
+  reduce-scatter  (S-1)   x T_out
+  all-to-all      (S-1)/S x T
+  collective-permute  T
+
+A collective spanning several mesh axes is charged hierarchically
+(bandwidth-optimal decomposition, cheapest axis first) — charitable to the
+flat baseline; the tree schedule needs no such charity since its levels are
+separate HLO ops.  Bytes are then split per link level (ICI intra-pod vs
+DCN inter-pod) for the roofline's collective term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Iterable
+
+import numpy as np
+
+from .mesh import DCN_BW, HBM_BW, ICI_BW, ICI_LINKS, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIT_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=(?:\[([\d,]+)\])?(?:T\(([\d,]+)\))?"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_group(line: str, n_devices: int) -> list[int] | None:
+    m = _GROUPS_LIT_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        return [int(x) for x in first.split(",") if x]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")] if m.group(3) else [g * s]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        ids = ids.reshape(g, s)
+        return ids[0].tolist()
+    return None
+
+
+def _axes_spanned(group: list[int], mesh_shape: tuple[int, ...], axis_names) -> tuple[str, ...]:
+    coords = np.array(np.unravel_index(np.array(group), mesh_shape)).T  # [S, n_axes]
+    spanned = []
+    for i, name in enumerate(axis_names):
+        if len(set(coords[:, i].tolist())) > 1:
+            spanned.append(name)
+    return tuple(spanned)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-device link bytes by level + op census."""
+
+    ici_bytes: float = 0.0  # intra-pod (data/model axes)
+    dcn_bytes: float = 0.0  # inter-pod (pod axis)
+    by_op: dict = dataclasses.field(default_factory=dict)
+    ops: list = dataclasses.field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> float:
+        return self.ici_bytes + self.dcn_bytes
+
+
+def collectives_from_events(coll_events: dict, mesh) -> CollectiveStats:
+    """Convert walker events {"op|axes|gsize": tensor_bytes} to link bytes.
+
+    Events come from the trip-count-aware HLO walker (hlo_cost), so
+    collectives inside scan bodies are already multiplied out.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    stats = CollectiveStats()
+    for key, t_bytes in coll_events.items():
+        op, axes_s, gsize = key.split("|")
+        spanned = tuple(a for a in axes_s.split(",") if a)
+        if not spanned:
+            continue
+        order = [a for a in ("model", "data", "pod") if a in spanned]
+        if not order:  # unknown axes — treat as ICI at full size
+            stats.ici_bytes += t_bytes
+            continue
+        shard = float(t_bytes)
+        per_level: dict[str, float] = {}
+        for ax in order:
+            f = sizes[ax]
+            if op == "all-reduce":
+                level = 2.0 * (f - 1) / f * shard
+                shard = shard / f
+            elif op == "all-gather":
+                level = (f - 1) / f * float(t_bytes)  # output-sized
+            elif op == "reduce-scatter":
+                level = (f - 1) * float(t_bytes)  # output is the shard
+            elif op == "all-to-all":
+                level = (f - 1) / f * float(t_bytes)
+            else:  # collective-permute
+                level = float(t_bytes)
+            per_level[ax] = per_level.get(ax, 0.0) + level
+        for ax, b in per_level.items():
+            if ax == "pod":
+                stats.dcn_bytes += b
+            else:
+                stats.ici_bytes += b
+        stats.by_op[op] = stats.by_op.get(op, 0.0) + sum(per_level.values())
+        stats.ops.append(
+            {"op": op, "bytes": t_bytes, "group_size": int(gsize), "axes": spanned}
+        )
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_ici_s: float
+    collective_dcn_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    coll_ici_bytes: float
+    coll_dcn_bytes: float
+    model_flops: float
+    n_chips: int
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_ici_s + self.collective_dcn_s
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Model-useful compute time / achievable step time (bound).
+
+        ``model_flops`` is PER-DEVICE (callers divide the global 6ND by
+        n_chips), so the ideal time is model_flops / peak — not divided by
+        n_chips again.
+        """
+        ideal = self.model_flops / PEAK_FLOPS_BF16
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        return ideal / bound if bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            **dataclasses.asdict(self),
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_terms(
+    *, hlo_flops: float, hlo_bytes: float, coll: CollectiveStats,
+    n_chips: int, model_flops: float,
+) -> Roofline:
+    """cost_analysis flops/bytes are per-device program totals (SPMD)."""
+    return Roofline(
+        compute_s=hlo_flops / PEAK_FLOPS_BF16,
+        memory_s=hlo_bytes / HBM_BW,
+        collective_ici_s=coll.ici_bytes / (ICI_BW * ICI_LINKS),
+        collective_dcn_s=coll.dcn_bytes / DCN_BW,
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        coll_ici_bytes=coll.ici_bytes,
+        coll_dcn_bytes=coll.dcn_bytes,
+        model_flops=model_flops,
+        n_chips=n_chips,
+    )
+
+
+def model_flops_for(cfg, shape, n_layers_active: int | None = None) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); decode: per step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

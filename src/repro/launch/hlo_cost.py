@@ -1,0 +1,409 @@
+"""Trip-count-aware FLOP/byte accounting over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop (lax.scan) body ONCE —
+useless for scan-over-layers models where >90% of compute sits inside loops.
+This walker parses the partitioned HLO, builds a per-computation symbol
+table, scores dots/elementwise/reduces, and multiplies loop bodies by their
+trip counts (recovered from the loop condition's comparison constant).
+
+Validated against unrolled references in tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"^\s*([\w\-]+)\(")
+
+
+def parse_instr(line: str):
+    """Parse '%name = SHAPE op(rest' robustly (tuple shapes may contain
+    /*index=N*/ comments, so regexes over the shape are unsafe)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):  # tuple shape: scan to the matching paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape, rest = rest[: i + 1], rest[i + 1 :]
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, rest = rest[:sp], rest[sp:]
+    mo = _OP_RE.match(rest)
+    if not mo:
+        return None
+    return name, shape, mo.group(1), rest[mo.end():]
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "and", "or", "xor", "not", "negate", "abs", "sign", "compare", "select",
+    "clamp", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+}
+_TRANSCEND = {"exponential", "log", "tanh", "rsqrt", "sqrt", "logistic",
+              "cosine", "sine", "expm1", "log1p", "atan2", "cbrt",
+              "exponential-minus-one"}
+_FREE = {
+    "parameter", "constant", "broadcast", "reshape", "bitcast", "transpose",
+    "copy", "tuple", "get-tuple-element", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "convert", "iota", "reverse",
+    "gather", "scatter", "pad", "after-all", "partition-id", "replica-id",
+    "rng", "rng-bit-generator", "custom-call", "infeed", "outfeed",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "bitcast-convert", "copy-start", "copy-done",
+    "all-reduce-start", "all-reduce-done", "optimization-barrier", "domain",
+}
+
+
+def _shape_elems(shape_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+_GROUPS_LIT_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=(?:\[([\d,]+)\])?(?:T\(([\d,]+)\))?"
+)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    # collective events: key "op|ax1,ax2|group_size" -> per-device tensor bytes
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.transcendentals * k,
+                    {kk: v * k for kk, v in self.coll.items()})
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, mesh_shape=None, axis_names=None):
+        self.computations = self._split_computations(hlo_text)
+        self.mesh_shape = tuple(mesh_shape) if mesh_shape else None
+        self.axis_names = tuple(axis_names) if axis_names else None
+        self._cost_cache: dict[str, Cost] = {}
+        self._trip_cache: dict[str, int] = {}
+
+    def _first_group(self, line: str):
+        m = _GROUPS_LIT_RE.search(line)
+        if m:
+            first = m.group(1).split("},{")[0].strip("{}")
+            return [int(x) for x in first.split(",") if x]
+        m = _GROUPS_IOTA_RE.search(line)
+        if m:
+            import numpy as np
+
+            g, s = int(m.group(1)), int(m.group(2))
+            dims = [int(x) for x in m.group(3).split(",")] if m.group(3) else [g * s]
+            ids = np.arange(int(np.prod(dims))).reshape(dims)
+            if m.group(4):
+                perm = [int(x) for x in m.group(4).split(",")]
+                ids = ids.transpose(perm)
+            return ids.reshape(g, s)[0].tolist()
+        return None
+
+    def _axes_of(self, group) -> tuple[str, ...]:
+        if self.mesh_shape is None or group is None:
+            return ("?",)
+        import numpy as np
+
+        coords = np.array(np.unravel_index(np.array(group), self.mesh_shape)).T
+        return tuple(
+            n for i, n in enumerate(self.axis_names)
+            if len(set(coords[:, i].tolist())) > 1
+        )
+
+    @staticmethod
+    def _split_computations(text: str) -> dict[str, list[str]]:
+        comps: dict[str, list[str]] = {}
+        cur_name, cur_lines = None, []
+        for line in text.splitlines():
+            stripped = line.strip()
+            if cur_name is None:
+                m = _COMP_HDR.match(stripped)
+                if m and stripped.endswith("{"):
+                    cur_name = m.group(1)
+                    cur_lines = []
+                continue
+            if stripped == "}":
+                comps[cur_name] = cur_lines
+                cur_name = None
+            else:
+                cur_lines.append(line)
+        return comps
+
+    def _trip_count(self, cond_name: str) -> int:
+        if cond_name in self._trip_cache:
+            return self._trip_cache[cond_name]
+        lines = self.computations.get(cond_name, [])
+        consts = [int(c) for l in lines for c in _CONST_S32.findall(l)]
+        trip = max(consts) if consts else 1
+        self._trip_cache[cond_name] = max(trip, 1)
+        return self._trip_cache[cond_name]
+
+    _ZERO_BYTES = {
+        "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+        "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+        "reshape", "optimization-barrier", "domain", "copy-start", "copy-done",
+    }
+    _MOVE_BYTES = {  # pure data movement: ~read + write of the output
+        "copy", "transpose", "slice", "dynamic-slice", "concatenate",
+        "gather", "broadcast", "reverse", "pad", "rng-bit-generator",
+    }
+
+    def _instr_cost(self, shape_str: str, op: str, rest: str,
+                    symtab: dict[str, str]) -> Cost:
+        out_elems = _shape_elems(shape_str)
+        operands = []
+        head = rest.split("),", 1)[0] if ")," in rest else rest.rstrip(")")
+        for name in _OPERAND.findall(head):
+            if name in symtab:
+                operands.append(symtab[name])
+        in_bytes = sum(_shape_bytes(s) for s in operands)
+        if op in self._ZERO_BYTES:
+            bytes_ = 0.0
+        elif op in self._MOVE_BYTES:
+            bytes_ = 2.0 * _shape_bytes(shape_str)
+        elif op == "dynamic-update-slice":
+            upd = _shape_bytes(operands[1]) if len(operands) > 1 else 0
+            bytes_ = 2.0 * upd  # in-place: read slice region + write update
+        else:
+            bytes_ = _shape_bytes(shape_str) + in_bytes
+        c = Cost(bytes=bytes_)
+
+        if op == "dot":
+            contract = 1
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            if m and operands:
+                lhs_dims = _shape_dims(operands[0])
+                for i in m.group(1).split(","):
+                    if i and int(i) < len(lhs_dims):
+                        contract *= lhs_dims[int(i)]
+            c.flops = 2.0 * out_elems * contract
+        elif op == "convolution":
+            # rough: 2 * out * (kernel elems per output)
+            kern = _shape_elems(operands[1]) if len(operands) > 1 else 1
+            out_ch = _shape_dims(shape_str)[-1] if _shape_dims(shape_str) else 1
+            c.flops = 2.0 * out_elems * max(kern // max(out_ch, 1), 1)
+        elif op in _ELEMWISE:
+            c.flops = float(out_elems)
+        elif op in _TRANSCEND:
+            c.flops = float(out_elems)
+            c.transcendentals = float(out_elems)
+        elif op in ("reduce", "reduce-window"):
+            c.flops = float(sum(_shape_elems(s) for s in operands[:1]))
+        elif op == "map":
+            c.flops = float(out_elems)
+        elif op in ("sort",):
+            n = max(out_elems, 2)
+            import math
+
+            c.flops = n * math.log2(n)
+        return c
+
+    @lru_cache(maxsize=None)
+    def computation_cost(self, name: str, fused: bool = False) -> Cost:
+        """fused=True: computation is a fusion body — its internal ops never
+        touch HBM, so only FLOPs/transcendentals count; bytes are charged at
+        the fusion call site (operands + output)."""
+        total = Cost()
+        lines = self.computations.get(name, [])
+        symtab: dict[str, str] = {}
+        for line in lines:
+            parsed = parse_instr(line)
+            if parsed is None:
+                continue
+            iname, shape_str, op, rest = parsed
+            symtab[iname] = shape_str
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", rest)
+                mc = _COND.search(rest)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                mt = _TRIP_CFG.search(rest)
+                if mt:
+                    trip = int(mt.group(1))
+                elif cond:
+                    trip = self._trip_count(cond)
+                else:
+                    trip = 1
+                if body:
+                    total += self.computation_cost(body, fused).scaled(trip)
+                if cond:
+                    total += self.computation_cost(cond, fused).scaled(trip)
+            elif op in ("fusion", "call", "conditional", "async-start"):
+                inner_fused = fused or op == "fusion"
+                for cname in _CALLS.findall(rest):
+                    total += self.computation_cost(cname, inner_fused)
+                if not fused:
+                    # HBM traffic of the fused kernel: inputs + output
+                    head = rest.split("),", 1)[0] if ")," in rest else rest.rstrip(")")
+                    in_bytes = sum(
+                        _shape_bytes(symtab[n]) for n in _OPERAND.findall(head)
+                        if n in symtab
+                    )
+                    total += Cost(bytes=_shape_bytes(shape_str) + in_bytes)
+            elif op in _COLLECTIVES:
+                base = op.replace("-start", "")
+                group = self._first_group(rest)
+                if group and len(group) > 1:
+                    axes = self._axes_of(group)
+                    key = f"{base}|{','.join(axes)}|{len(group)}"
+                    c = Cost(coll={key: float(_shape_bytes(shape_str))})
+                    if not fused:
+                        c.bytes = float(_shape_bytes(shape_str))
+                    total += c
+            else:
+                c = self._instr_cost(shape_str, op, rest, symtab)
+                if fused:
+                    c.bytes = 0.0
+                total += c
+        return total
+
+    def entry_cost(self) -> Cost:
+        # the entry computation is conventionally named main.* (ENTRY)
+        for name in self.computations:
+            if name.startswith("main"):
+                return self.computation_cost(name)
+        # fallback: the largest computation
+        best, best_cost = None, Cost()
+        for name in self.computations:
+            c = self.computation_cost(name)
+            if c.flops >= best_cost.flops:
+                best, best_cost = name, c
+        return best_cost
+
+
+def analyze(hlo_text: str, mesh=None) -> dict:
+    mesh_shape = tuple(mesh.devices.shape) if mesh is not None else None
+    axis_names = tuple(mesh.axis_names) if mesh is not None else None
+    model = HloCostModel(hlo_text, mesh_shape, axis_names)
+    c = model.entry_cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "transcendentals": c.transcendentals,
+        "coll": c.coll,
+    }
+
+
+def breakdown(hlo_text: str, top: int = 15) -> list[tuple]:
+    """Debug/§Perf helper: biggest single-instruction flop contributors with
+    their computation-level trip multipliers."""
+    model = HloCostModel(hlo_text)
+
+    # trip multiplier per computation: entry=1, while bodies *= trip
+    mult: dict[str, float] = {}
+
+    def visit(name: str, k: float):
+        if mult.get(name, 0) >= k:
+            return
+        mult[name] = k
+        for line in model.computations.get(name, []):
+            parsed = parse_instr(line)
+            if parsed is None:
+                continue
+            _, _, op, rest = parsed
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", rest)
+                mc = _COND.search(rest)
+                mt = _TRIP_CFG.search(rest)
+                trip = (int(mt.group(1)) if mt
+                        else model._trip_count(mc.group(1)) if mc else 1)
+                if mb:
+                    visit(mb.group(1), k * trip)
+                if mc:
+                    visit(mc.group(1), k * trip)
+            elif op in ("fusion", "call", "conditional", "async-start"):
+                for cname in _CALLS.findall(rest):
+                    visit(cname, k)
+
+    entry = next((n for n in model.computations if n.startswith("main")), None)
+    if entry is None:
+        return []
+    visit(entry, 1.0)
+
+    rows = []
+    for cname, lines in model.computations.items():
+        k = mult.get(cname, 0.0)
+        if not k:
+            continue
+        symtab = {}
+        for line in lines:
+            parsed = parse_instr(line)
+            if parsed is None:
+                continue
+            iname, shape_str, op, rest = parsed
+            symtab[iname] = shape_str
+            c = model._instr_cost(shape_str, op, rest, symtab)
+            if c.flops:
+                rows.append((c.flops * k, k, cname, op, shape_str[:60],
+                             line.strip()[:140]))
+    rows.sort(reverse=True)
+    return rows[:top]

@@ -1,0 +1,31 @@
+"""Production mesh construction (TPU v5e-class pods).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run sets the fake device count before
+any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+# Hardware constants for the roofline (TPU v5e-class target).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (per direction), ~4 links/chip usable
+ICI_LINKS = 4
+DCN_BW = 6.25e9  # inter-pod bytes/s per chip (25 GbE-class share x2)

@@ -1,0 +1,136 @@
+"""Per-(arch x shape x mesh) distribution profiles + abstract input specs.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation — the
+contract the dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.collectives import GradAggMode
+from repro.train.step import TrainProfile
+
+# archs whose params are too big for plain TP storage -> FSDP + int8 opt
+_HEAVY = {"jamba-1.5-large-398b", "deepseek-v2-236b"}
+_QUANT_OPT = {"jamba-1.5-large-398b", "deepseek-v2-236b", "qwen3-32b"}
+
+
+def mesh_dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh, dp_axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in dp_axes:
+        n *= sizes[a]
+    return n
+
+
+def _accum_steps(cfg: ModelConfig, shape: InputShape, dp: int) -> int:
+    b_local = max(1, shape.global_batch // dp)
+    if cfg.n_groups <= 24:
+        budget = 16384
+    elif cfg.n_groups <= 48:
+        budget = 8192
+    else:
+        budget = 4096
+    want = max(1, (b_local * shape.seq_len) // budget)
+    # accum must divide the local batch
+    while b_local % want:
+        want -= 1
+    return max(1, want)
+
+
+def _fit_chunk(total: int, want: int) -> int:
+    """Largest chunk <= want that divides ``total`` (prefer x128 alignment)."""
+    want = min(want, total)
+    for c in range(want - want % 128, 0, -128):
+        if total % c == 0:
+            return c
+    for c in range(min(want, total), 0, -1):
+        if total % c == 0:
+            return c
+    return total
+
+
+def make_profile(
+    arch: str, shape: InputShape, mesh, *, mode: GradAggMode = GradAggMode.TREE,
+    q_chunk: int | None = None, k_chunk: int | None = None,
+    accum: int | None = None, seq_shard: bool = False,
+) -> TrainProfile:
+    cfg = configs.get_config(arch)
+    dp_axes = mesh_dp_axes(mesh)
+    dp = _dp_size(mesh, dp_axes)
+    if accum is None:
+        accum = _accum_steps(cfg, shape, dp) if shape.kind == "train" else 1
+    # attention chunks must divide the full sequence incl. modality prefix
+    # (paligemma: 4096 tokens + 256 patches = 4352 = 17 x 256)
+    s_total = shape.seq_len + cfg.prefix_tokens
+    return TrainProfile(
+        dp_axes=dp_axes,
+        tp_axis="model",
+        fsdp=arch in _HEAVY,
+        accum_steps=accum,
+        quantized_opt=arch in _QUANT_OPT,
+        master_fp32=True,
+        remat="full" if shape.kind == "train" else "none",
+        q_chunk=_fit_chunk(s_total, q_chunk or 512),
+        k_chunk=_fit_chunk(s_total, k_chunk or 1024),
+        moe_token_chunk=4096,
+        mode=mode,
+        seq_shard=seq_shard,
+    )
+
+
+def serve_plan(arch: str, shape: InputShape, mesh) -> dict:
+    """Decode-cell choices: batch shardability + cache-seq sharding axes."""
+    cfg = configs.get_config(arch)
+    dp_axes = mesh_dp_axes(mesh)
+    dp = _dp_size(mesh, dp_axes)
+    batch_shardable = shape.global_batch % dp == 0 and shape.global_batch >= dp
+    if shape.name == "long_500k":
+        cache_seq_axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    else:
+        cache_seq_axes = ("model",)
+    if cfg.family == "ssm":
+        cache_seq_axes = ()  # no attention caches at all
+    return {"batch_shardable": batch_shardable, "cache_seq_axes": cache_seq_axes}
+
+
+def input_specs(arch: str, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for a global batch of this shape."""
+    cfg = configs.get_config(arch)
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if cfg.frontend == "vision_stub":
+            batch["patch_embeds"] = sds((b, cfg.prefix_tokens, cfg.d_model), f32)
+        elif cfg.frontend == "audio_stub":
+            batch["frame_embeds"] = sds((b, s, cfg.d_model), f32)
+            del batch["tokens"]
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), i32)}
+        if cfg.frontend == "vision_stub":
+            batch["patch_embeds"] = sds((b, cfg.prefix_tokens, cfg.d_model), f32)
+        elif cfg.frontend == "audio_stub":
+            batch["frame_embeds"] = sds((b, s, cfg.d_model), f32)
+            del batch["tokens"]
+        return batch
+    # decode: one new token against a cache of seq_len
+    if cfg.frontend == "audio_stub":
+        return {"token": sds((b, 1, cfg.d_model), f32)}
+    return {"token": sds((b, 1), i32)}

@@ -1,0 +1,98 @@
+"""Production serving driver: batched prefill + decode with TP-sharded
+weights and model-axis-sharded KV caches (flash-decode combine).
+
+CPU example:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+      python -m repro.launch.serve --arch gemma2-27b --reduce \\
+      --mesh 2,4 --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.configs.reduced import reduced_config
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.models.model import LMModel
+from repro.train.step import TrainProfile, build_prefill_step, build_serve_step
+
+log = logging.getLogger("repro.launch.serve")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b", choices=configs.ARCH_IDS)
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--fp32", action="store_true")
+    args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    cfg = reduced_config(args.arch) if args.reduce else configs.get_config(args.arch)
+    if args.fp32:
+        cfg = dataclasses.replace(cfg, dtype="float32")
+
+    from repro.launch.train import parse_mesh
+
+    mesh = parse_mesh(args.mesh)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                      for a in dp_axes])) if dp_axes else 1
+    shardable = args.batch % max(dp, 1) == 0 and args.batch >= dp
+    prof = TrainProfile(dp_axes=dp_axes, tp_axis="model",
+                        q_chunk=8, k_chunk=8, moe_token_chunk=64, remat="none")
+    cache_len = cfg.prefix_tokens + args.prompt_len + args.gen
+
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLMData(cfg, DataConfig(seq_len=args.prompt_len,
+                                           global_batch=args.batch, seed=1))
+    batch = data.prompt_at(0, args.prompt_len)
+
+    prefill_fn, shp, _ = build_prefill_step(
+        cfg, mesh, prof, cache_len=cache_len, batch_example=batch,
+        params_example=params, batch_shardable=shardable,
+        cache_seq_axes=("model",))
+    serve_fn, shs, _ = build_serve_step(
+        cfg, mesh, prof, cache_len=cache_len, batch=args.batch,
+        params_example=params, batch_shardable=shardable,
+        cache_seq_axes=("model",))
+
+    t0 = time.time()
+    logits, caches = prefill_fn(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+    out = [np.asarray(tok[:, 0])]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        tok, caches = serve_fn(params, caches, tok,
+                               jnp.asarray(cfg.prefix_tokens + args.prompt_len + i,
+                                           jnp.int32))
+        out.append(np.asarray(tok[:, 0]))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = np.stack(out, 1)
+    log.info("prefill %d x %d tokens in %.3fs; decoded %d steps in %.3fs "
+             "(%.1f tok/s/seq)", args.batch, args.prompt_len, t_prefill,
+             args.gen - 1, t_decode, (args.gen - 1) / max(t_decode, 1e-9))
+    log.info("generations (first 8 token-ids per sequence):\n%s", gen[:, :8])
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Structural (model-derived) per-device FLOP/byte costs for the roofline.
+
+Why this exists: the dry-run compiles on XLA:CPU, whose loop transforms
+("wide" loop widening, body cloning) break text-level trip-count recovery —
+the hlo_cost walker over-multiplies nested attention chunk loops by up to
+~6x on some architectures (validated: olmoe walker/structural = 1.7x ~ remat
+overhead; phi4 = 8.9x = wrong).  And ``compiled.cost_analysis()`` counts
+loop bodies ONCE (under-counts scan-over-layers ~30-250x).  Since we own
+the model code, the *executed* flops/bytes are exactly computable from the
+config + shapes + execution plan — that is this module.  The HLO remains
+the source of truth for the collective schedule (hlo_cost walker), whose
+loops are simple (exchange sits outside the chunk loops).
+
+All numbers are per-device-per-step, for the roofline terms:
+    compute_s = flops / PEAK ; memory_s = bytes / HBM_BW.
+
+Conventions:
+  * bf16 params/activations (2B), fp32 master+moments (4B; int8+scale if
+    quantized), fp32 gradients during accumulation.
+  * flash attention computes FULL chunk products (masked), so local/causal
+    attention flops count the chunk-rounded context, not the ideal half.
+  * remat="full": backward recomputes the forward (fwd+bwd = 4 fwd-units
+    of matmul flops, 2 of attention score flops are re-done too).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs.base import InputShape, LayerSpec, ModelConfig
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class StructuralCost:
+    flops: float = 0.0        # per device per step
+    bytes: float = 0.0        # HBM traffic per device per step
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, key: str, flops: float = 0.0, bytes_: float = 0.0):
+        self.flops += flops
+        self.bytes += bytes_
+        f, b = self.detail.get(key, (0.0, 0.0))
+        self.detail[key] = (f + flops, b + bytes_)
+
+
+def _layer_list(cfg: ModelConfig) -> list[LayerSpec]:
+    return list(cfg.prefix) + list(cfg.pattern) * cfg.n_groups
+
+
+def _mat_params_per_layer(cfg: ModelConfig, spec: LayerSpec) -> tuple[float, float]:
+    """(active matmul params, stored matmul params) of one layer."""
+    d, hd = cfg.d_model, cfg.head_dim
+    act = stored = 0.0
+    if spec.mixer in ("attn", "attn_local"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            p = (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                 + d * (m.kv_lora_rank + m.qk_rope_dim)
+                 + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                 + cfg.n_heads * m.v_head_dim * d)
+        else:
+            p = d * cfg.n_heads * hd * 2 + 2 * d * cfg.n_kv_heads * hd
+        act += p
+        stored += p
+    elif spec.mixer == "mamba":
+        mc = cfg.mamba
+        din = cfg.d_inner_mamba
+        p = d * (2 * din + 2 * mc.n_groups * mc.d_state + cfg.n_mamba_heads) + din * d
+        act += p
+        stored += p
+    if spec.ffn == "dense":
+        act += 3 * d * cfg.d_ff
+        stored += 3 * d * cfg.d_ff
+    elif spec.ffn == "moe":
+        mo = cfg.moe
+        act += (mo.top_k + mo.n_shared) * 3 * d * mo.d_ff_expert + d * mo.n_experts
+        stored += (mo.n_experts + mo.n_shared) * 3 * d * mo.d_ff_expert + d * mo.n_experts
+    return act, stored
+
+
+def _attn_ctx(spec: LayerSpec, cfg: ModelConfig, s_ctx: int, k_chunk: int) -> int:
+    """Effective KV context a query attends to (chunk-rounded window)."""
+    if spec.mixer == "attn_local" and cfg.window:
+        return min(s_ctx, ((cfg.window + k_chunk - 1) // k_chunk + 1) * k_chunk)
+    return s_ctx
+
+
+def structural_cost(cfg: ModelConfig, shape: InputShape, mesh, prof) -> StructuralCost:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get(prof.tp_axis, 1)
+    dp = 1
+    for a in prof.dp_axes:
+        dp *= sizes.get(a, 1)
+    c = StructuralCost()
+    d = cfg.d_model
+    layers = _layer_list(cfg)
+    train = shape.kind == "train"
+    decode = shape.kind == "decode"
+
+    if decode:
+        tokens_dev = shape.global_batch / (dp if shape.global_batch >= dp else 1)
+        s_ctx = shape.seq_len
+    else:
+        tokens_dev = shape.global_batch * shape.seq_len / dp + (
+            cfg.prefix_tokens * shape.global_batch / dp)
+        s_ctx = shape.seq_len + cfg.prefix_tokens
+
+    # fwd/bwd multipliers
+    if train:
+        m_mat = 4.0 if prof.remat == "full" else 3.0  # fwd + (re)fwd + 2xbwd
+        m_act = 2.0  # activation bytes written fwd + read bwd (checkpoint)
+    else:
+        m_mat, m_act = 1.0, 1.0
+
+    # ---- per-layer matmuls ------------------------------------------------
+    act_p = stored_p = 0.0
+    for spec in layers:
+        a, s_ = _mat_params_per_layer(cfg, spec)
+        act_p += a
+        stored_p += s_
+    c.add("layer_matmul", flops=m_mat * 2.0 * act_p / tp * tokens_dev)
+
+    # ---- attention scores (flash: full chunk products) --------------------
+    for spec in layers:
+        if spec.mixer not in ("attn", "attn_local"):
+            if spec.mixer == "mamba":
+                mc = cfg.mamba
+                din, n = cfg.d_inner_mamba, mc.d_state
+                if decode:
+                    f = 2.0 * (3 * din * n) / tp * tokens_dev
+                else:
+                    # SSD chunked: intra-chunk (T*q*heads... ~ T*chunk*(pd+n))
+                    # + state path ~ 6*T*din*n
+                    f = (6.0 * din * n + 2.0 * mc.chunk * din) / tp * tokens_dev
+                c.add("ssm_scan", flops=(m_mat if train else 1.0) * f)
+            continue
+        if cfg.mla is not None:
+            hd_qk = cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim
+            hd_v = cfg.mla.v_head_dim
+            heads = cfg.n_heads
+        else:
+            hd_qk = hd_v = cfg.head_dim
+            heads = cfg.n_heads
+        ctx = _attn_ctx(spec, cfg, s_ctx, prof.k_chunk)
+        if decode:
+            eff = min(ctx, s_ctx if spec.mixer == "attn" else (cfg.window or s_ctx))
+            f = 2.0 * tokens_dev * eff * heads / tp * (hd_qk + hd_v)
+            c.add("attn_scores", flops=f)
+        else:
+            # causal flash over q-chunks: average visible ctx ~ ctx/2 rounded
+            # up to chunk granularity; local layers see the window.
+            if spec.mixer == "attn_local" and cfg.window and cfg.window < s_ctx:
+                vis = ctx
+            else:
+                vis = (s_ctx / 2 + prof.k_chunk / 2)
+            f = 2.0 * tokens_dev * vis * heads / tp * (hd_qk + hd_v)
+            mult = 4.0 if (train and prof.remat == "full") else (3.0 if train else 1.0)
+            c.add("attn_scores", flops=mult * f)
+
+    # ---- LM head ----------------------------------------------------------
+    v_sh = cfg.padded_vocab / tp
+    c.add("lm_head", flops=(3.0 if train else 1.0) * 2.0 * tokens_dev * v_sh * d)
+    # embed lookup is a gather: bytes only (below)
+
+    # ======================= bytes ==========================================
+    p_dev_b = 0.0  # resident param bytes per device
+    emb = cfg.padded_vocab * d
+    stored_total = stored_p + emb + (0 if cfg.tie_embeddings else emb)
+    p_dev_b = stored_total / tp * BF16
+    if prof.fsdp:
+        p_dev_b /= dp  # stored sharded; gathered at use (counted as reads)
+
+    if train:
+        accum = max(prof.accum_steps, 1)
+        # params read per microbatch fwd + bwd(recompute reads again)
+        reads = (3.0 if prof.remat == "full" else 2.0) * accum
+        c.add("param_reads", bytes_=reads * stored_total / tp * BF16 / (dp if prof.fsdp else 1) * (dp if prof.fsdp else 1))
+        # grads: fp32 accumulate read+write per microbatch + final read
+        gshard = act_p / tp  # ZeRO: grads land data-sharded but accum is full
+        c.add("grad_accum", bytes_=2.0 * accum * (stored_total / tp) * F32)
+        # optimizer: read m,v,master + write m,v,master + write param
+        zdiv = dp  # ZeRO-1: optimizer shard per dp rank
+        mom_b = (2 * 1 + 2 * 4 / 256) if prof.quantized_opt else 2 * F32
+        opt_bytes = (stored_total / tp / zdiv) * (2 * mom_b + 2 * F32 + F32 + BF16)
+        c.add("optimizer", bytes_=opt_bytes)
+        # activations: checkpoint in/out per layer
+        c.add("activations",
+              bytes_=m_act * len(layers) * tokens_dev * d * BF16)
+        # attention K/V streaming (flash): each q-chunk re-reads K,V ctx
+        for spec in layers:
+            if spec.mixer not in ("attn", "attn_local"):
+                continue
+            ctx = _attn_ctx(spec, cfg, s_ctx, prof.k_chunk)
+            n_q = math.ceil(s_ctx / prof.q_chunk)
+            kvh = (cfg.n_kv_heads if cfg.mla is None else 1)
+            hdd = (cfg.head_dim if cfg.mla is None
+                   else cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim)
+            per_seq = (n_q * min(ctx, s_ctx) * kvh * hdd * BF16 * 2) / tp
+            nseq = tokens_dev / s_ctx
+            c.add("attn_kv_stream", bytes_=2.0 * per_seq * nseq)  # fwd+bwd
+        # logits write+read (bwd)
+        c.add("logits", bytes_=2.0 * tokens_dev * v_sh * BF16)
+        # embedding gather read
+        c.add("embed", bytes_=tokens_dev * d * BF16)
+    else:
+        # serving: params read once per step
+        c.add("param_reads", bytes_=stored_total / tp * BF16)
+        if decode:
+            # KV cache read per generated token + write of the new entry
+            cache_b = 0.0
+            seq_shards = 1
+            for ax in getattr(prof, "cache_seq_axes", ()) or ():
+                seq_shards *= sizes.get(ax, 1)
+            b_dev = shape.global_batch / (dp if shape.global_batch >= dp else 1)
+            for spec in layers:
+                if spec.mixer == "mamba":
+                    mc = cfg.mamba
+                    cache_b += b_dev * cfg.n_mamba_heads * mc.head_dim * mc.d_state * BF16 / tp
+                elif spec.mixer in ("attn", "attn_local"):
+                    s_c = s_ctx if spec.mixer == "attn" else min(cfg.window or s_ctx, s_ctx)
+                    if cfg.mla is not None:
+                        per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+                    else:
+                        per_tok = 2 * cfg.n_kv_heads * cfg.head_dim / tp
+                    cache_b += b_dev * s_c * per_tok * BF16
+            c.add("kv_cache", bytes_=cache_b)
+        else:
+            c.add("activations", bytes_=len(layers) * tokens_dev * d * BF16)
+            for spec in layers:
+                if spec.mixer not in ("attn", "attn_local"):
+                    continue
+                ctx = _attn_ctx(spec, cfg, s_ctx, prof.k_chunk)
+                n_q = math.ceil(s_ctx / prof.q_chunk)
+                kvh = cfg.n_kv_heads if cfg.mla is None else 1
+                hdd = (cfg.head_dim if cfg.mla is None
+                       else cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim)
+                per_seq = (n_q * min(ctx, s_ctx) * kvh * hdd * BF16 * 2) / tp
+                nseq = tokens_dev / s_ctx
+                c.add("attn_kv_stream", bytes_=per_seq * nseq)
+            c.add("logits", bytes_=shape.global_batch / dp * v_sh * BF16)
+    return c

@@ -1,0 +1,3 @@
+"""Model substrate: layers, attention (GQA/MLA/local), MoE, Mamba2, stacks."""
+
+from .model import LMModel  # noqa: F401

@@ -1,0 +1,98 @@
+"""Shared model building blocks: norms, RoPE, gated MLP, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+# --- RoPE -------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, n, head_dim]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- Gated MLP (SwiGLU / GeGLU) ---------------------------------------------
+
+
+def gated_mlp(x: jnp.ndarray, w_gate, w_up, w_down, act: str) -> jnp.ndarray:
+    g = activation(jnp.einsum("...d,df->...f", x, w_gate), act)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+# --- Embedding / LM head ----------------------------------------------------
+
+
+def embed_tokens(tokens: jnp.ndarray, table: jnp.ndarray, scale: bool) -> jnp.ndarray:
+    y = jnp.take(table, tokens, axis=0)
+    if scale:
+        y = y * jnp.asarray(table.shape[-1] ** 0.5, y.dtype)
+    return y
+
+
+def lm_logits(
+    x: jnp.ndarray, table: jnp.ndarray, cap: float = 0.0, real_vocab: int | None = None
+) -> jnp.ndarray:
+    """x [..., D] @ table [V, D]^T with optional softcap + pad masking."""
+    logits = jnp.einsum("...d,vd->...v", x, table).astype(jnp.float32)
+    logits = softcap(logits, cap)
+    if real_vocab is not None and real_vocab < table.shape[0]:
+        neg = jnp.finfo(jnp.float32).min
+        pad_mask = jnp.arange(table.shape[0]) >= real_vocab
+        logits = jnp.where(pad_mask, neg, logits)
+    return logits
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, real_vocab: int
+) -> jnp.ndarray:
+    """Mean token NLL; logits [B, S, V] (already fp32), labels [B, S].
+
+    The gold logit is picked with a one-hot reduction, NOT take_along_axis:
+    a gather along the vocab axis forces GSPMD to materialize the full
+    fp32 logits on every device (vocab is TP-sharded), which was the
+    dominant memory consumer of every train cell (EXPERIMENTS.md §Perf H1
+    iteration 4). The masked reduction keeps the vocab axis sharded.
+    """
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(
+        labels.dtype, (1,) * labels.ndim + (logits.shape[-1],), labels.ndim)
+    onehot = vocab_iota == labels[..., None]
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)

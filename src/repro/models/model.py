@@ -1,0 +1,100 @@
+"""LMModel facade: init / loss / prefill / decode for every assigned arch.
+
+Modality frontends are stubs per the brief: ``vision_stub`` prepends
+precomputed patch embeddings (PaliGemma/SigLIP), ``audio_stub`` consumes
+precomputed EnCodec frame embeddings (MusicGen).  The transformer backbone
+is always the real thing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import transformer as tfm
+from .attention import ShardingPolicy
+from .layers import cross_entropy, embed_tokens, lm_logits, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class LMModel:
+    cfg: ModelConfig
+    policy: ShardingPolicy = ShardingPolicy()
+    opt: tfm.ApplyOptions = tfm.ApplyOptions()
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> dict:
+        return tfm.init_params(key, self.cfg)
+
+    # -- input embedding (modality stubs) ------------------------------------
+    def _embed_inputs(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.frontend == "audio_stub":
+            return batch["frame_embeds"].astype(params["embed"].dtype)
+        x = embed_tokens(batch["tokens"], params["embed"], cfg.scale_embeddings)
+        if cfg.frontend == "vision_stub":
+            patches = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        return x
+
+    # -- training loss --------------------------------------------------------
+    def loss_fn(self, params, batch) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (loss, aux_loss). Labels are next-token targets."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        opt = dataclasses.replace(self.opt, prefix_len=cfg.prefix_tokens)
+        x, _, aux = tfm.run_stack_dense(x, params, cfg, self.policy, opt)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.frontend == "vision_stub":
+            x = x[:, cfg.prefix_tokens :]  # loss only on text positions
+        table = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = lm_logits(x, table, cfg.logit_softcap, cfg.vocab_size)
+        if self.policy.distributed and self.policy.tp_axis:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            # keep the fp32 logits vocab-sharded through the loss
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(self.policy.mesh,
+                                      P(self.policy.batch_axes or None, None,
+                                        self.policy.tp_axis)))
+        loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        return loss + aux, aux
+
+    # -- prefill --------------------------------------------------------------
+    def prefill(self, params, batch, cache_len: int):
+        """Dense pass over the prompt; returns (last_logits, caches)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        opt = dataclasses.replace(self.opt, prefix_len=cfg.prefix_tokens)
+        x, caches, _ = tfm.run_stack_dense(
+            x, params, cfg, self.policy, opt, collect_cache=True, cache_len=cache_len
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = lm_logits(x[:, -1:], table, cfg.logit_softcap, cfg.vocab_size)
+        return logits, caches
+
+    # -- decode ---------------------------------------------------------------
+    def decode_step(self, params, token, caches, cur_pos):
+        """token [B,1] int32 (or [B,1,D] embeds for audio_stub)."""
+        cfg = self.cfg
+        if cfg.frontend == "audio_stub" and token.ndim == 3:
+            x = token.astype(params["embed"].dtype)
+        else:
+            x = embed_tokens(token, params["embed"], cfg.scale_embeddings)
+        opt = dataclasses.replace(self.opt, remat="none")
+        x, caches, _ = tfm.run_stack_decode(
+            x, params, caches, cur_pos, cfg, self.policy, opt
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = lm_logits(x, table, cfg.logit_softcap, cfg.vocab_size)
+        return logits, caches
+
+    def init_caches(self, b: int, cache_len: int, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.dtype)
+        return tfm.init_caches(self.cfg, b, cache_len, dtype)

@@ -1,0 +1,176 @@
+"""PartitionSpec assignment for params, optimizer state, caches, batches.
+
+Rules (Megatron TP + ZeRO over data axes):
+  * embeddings / LM head: vocab over `model`
+  * attention projections: heads over `model` when divisible, else replicated
+  * dense FFN: hidden (F) over `model`
+  * MoE experts: E over `model` (EP) and F over data axes (ZeRO-3 storage
+    matching the explicit gather in the MoE manual region)
+  * mamba: d_inner-shaped dims over `model` (heads are independent)
+  * optimizer state / fp32 masters: param spec + the largest remaining
+    unsharded dim additionally over the data axes (ZeRO-1)
+Stacked group params carry a leading `n_groups` dim -> prepend None.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_specs(
+    params: Any,
+    cfg: ModelConfig,
+    *,
+    tp: str = "model",
+    tp_size: int,
+    dp_axes: tuple[str, ...] = (),
+    dp_size: int = 1,
+) -> Any:
+    """Spec tree matching ``params`` (works on arrays or ShapeDtypeStructs)."""
+
+    heads_ok = _divisible(cfg.n_heads, tp_size)
+    kv_ok = _divisible(cfg.n_kv_heads, tp_size)
+
+    def leaf_spec(path: tuple, leaf) -> P:
+        names = [getattr(x, "key", getattr(x, "name", str(x))) for x in path]
+        name = names[-1]
+        stacked = "groups" in names  # leading n_groups dim
+        lead = (None,) if stacked else ()
+
+        def sp(*dims):
+            return P(*lead, *dims)
+
+        if name == "embed" or name == "head":
+            return P(tp, None)
+        if name in ("final_norm",):
+            return P(None)
+        # --- attention
+        if name == "wq":
+            return sp(None, tp if heads_ok else None, None)
+        if name in ("wk", "wv"):
+            return sp(None, tp if kv_ok else None, None)
+        if name == "wo":
+            return sp(tp if heads_ok else None, None, None)
+        if name in ("wq_b",):  # [r, H, qd] — MLA heads
+            return sp(None, tp if heads_ok else None, None)
+        if name in ("w_uk", "w_uv"):  # [H, c, n]
+            return sp(tp if heads_ok else None, None, None)
+        if name in ("wq_a", "wkv_a"):
+            return sp(None, None)
+        # --- dense ffn
+        if name in ("w_gate", "w_up") and len(leaf.shape) - len(lead) == 2:
+            return sp(None, tp)
+        if name == "w_down" and len(leaf.shape) - len(lead) == 2:
+            return sp(tp, None)
+        # --- moe experts [E, D, F] / [E, F, D]
+        if name in ("w_gate", "w_up") and len(leaf.shape) - len(lead) == 3:
+            return sp(tp, None, dp_axes if dp_axes else None)
+        if name == "w_down" and len(leaf.shape) - len(lead) == 3:
+            return sp(tp, dp_axes if dp_axes else None, None)
+        if name in ("ws_gate", "ws_up"):
+            return sp(None, tp)
+        if name == "ws_down":
+            return sp(tp, None)
+        if name == "router":
+            return sp(None, None)
+        # --- mamba
+        if name == "in_proj":
+            return sp(None, tp)
+        if name == "out_proj":
+            return sp(tp, None)
+        if name == "conv_w":
+            return sp(None, tp)
+        if name in ("conv_b", "gate_norm"):
+            return sp(tp)
+        if name in ("A_log", "D", "dt_bias"):
+            return sp(None)
+        # --- norms and leftovers: replicated
+        return P(*((None,) * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def zero1_specs(params: Any, specs: Any, *, dp_axes: tuple[str, ...], dp_size: int) -> Any:
+    """Optimizer-state specs: param spec + data axes on the biggest free dim."""
+    if not dp_axes:
+        return specs
+
+    def one(leaf, spec: P) -> P:
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = set()
+        for e in dims:
+            for a in (e if isinstance(e, (tuple, list)) else (e,)):
+                if a is not None:
+                    used.add(a)
+        if used & set(dp_axes):  # dp axes already placed (FSDP/MoE storage)
+            return P(*dims)
+        # find the largest dim that is unsharded and divisible by dp_size
+        best, best_size = -1, 0
+        for i, (d, s) in enumerate(zip(leaf.shape, dims)):
+            if s is None and d % dp_size == 0 and d > best_size and d >= dp_size:
+                best, best_size = i, d
+        if best >= 0:
+            dims[best] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        return P(*dims)
+
+    return jax.tree.map(one, params, specs)
+
+
+def cache_specs(
+    caches: Any,
+    cfg: ModelConfig,
+    *,
+    tp: str = "model",
+    tp_size: int,
+    dp_axes: tuple[str, ...] = (),
+    cache_seq_axes: tuple[str, ...] = (),
+    batch_shardable: bool = True,
+) -> Any:
+    """Specs for decode caches (stacked leading n_groups dim handled)."""
+    kv_ok = _divisible(cfg.n_kv_heads, tp_size) and not cache_seq_axes
+    dp = dp_axes if (dp_axes and batch_shardable) else None
+
+    def leaf_spec(path: tuple, leaf) -> P:
+        names = [getattr(x, "key", getattr(x, "name", str(x))) for x in path]
+        name = names[-1]
+        stacked = "groups" in names
+        lead = (None,) if stacked else ()
+        nd = len(leaf.shape) - len(lead)
+
+        def sp(*dims):
+            return P(*lead, *dims)
+
+        if name in ("k", "v"):  # [B, S, KV, hd]
+            if cache_seq_axes:
+                return sp(dp, cache_seq_axes, None, None)
+            return sp(dp, None, tp if kv_ok else None, None)
+        if name in ("c_kv", "k_rope"):  # [B, S, r]
+            return sp(dp, cache_seq_axes if cache_seq_axes else None, None)
+        if name == "pos":  # [S]
+            return sp(cache_seq_axes if cache_seq_axes else None)
+        if name == "ssm":  # [B, H, P, N]
+            return sp(dp, tp if _divisible(cfg.n_mamba_heads if cfg.mamba else 0, tp_size) else None, None, None)
+        if name == "conv":  # [B, W-1, conv_dim]
+            return sp(dp, None, tp)
+        return P(*((None,) * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+def batch_specs(batch: Any, dp_axes: tuple[str, ...], batch_shardable: bool = True) -> Any:
+    dp = dp_axes if (dp_axes and batch_shardable) else None
+
+    def one(leaf):
+        return P(dp, *((None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(one, batch)

@@ -1,0 +1,387 @@
+"""Decoder assembly: heterogeneous layer patterns, scan-over-groups, caches.
+
+The layer stack is ``prefix + pattern * n_groups``.  Parameters of each
+pattern position are stacked on a leading ``n_groups`` axis and the stack is
+driven by one ``lax.scan`` — HLO contains each distinct layer *once*, which
+keeps CPU compile time bounded for 46-72-layer, 100B+-param configs (the
+whole point of scan-over-layers).
+
+Modes:
+  dense   — training forward / loss (no cache)
+  prefill — dense forward that also emits the full KV/SSM caches + last-pos x
+  decode  — single-token step threading caches (KVCache / MLACache / MambaState)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LayerSpec, ModelConfig
+from . import attention as attn
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from .attention import KVCache, MLACache, ShardingPolicy
+from .layers import gated_mlp, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ApplyOptions:
+    q_chunk: int = 512
+    k_chunk: int = 1024
+    moe_token_chunk: int = 4096
+    remat: str = "full"  # none | full | dots
+    prefix_len: int = 0  # bidirectional prefix (PaliGemma)
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+
+def _init_ffn(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    if kind == "dense":
+        d, f = cfg.d_model, cfg.d_ff
+        k1, k2, k3 = jax.random.split(key, 3)
+        s = d ** -0.5
+        return {
+            "w_gate": jax.random.normal(k1, (d, f), dtype) * s,
+            "w_up": jax.random.normal(k2, (d, f), dtype) * s,
+            "w_down": jax.random.normal(k3, (f, d), dtype) * (f ** -0.5),
+        }
+    if kind == "moe":
+        return moe_mod.init_moe_params(key, cfg, dtype)
+    return {}
+
+
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig, dtype) -> dict:
+    km, kf = jax.random.split(key)
+    p: dict[str, Any] = {
+        "norm_mixer": jnp.zeros((cfg.d_model,), dtype),
+        "norm_ffn": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.post_norms:
+        p["post_norm_mixer"] = jnp.zeros((cfg.d_model,), dtype)
+        p["post_norm_ffn"] = jnp.zeros((cfg.d_model,), dtype)
+    if spec.mixer in ("attn", "attn_local"):
+        p["mixer"] = (
+            attn.init_mla_params(km, cfg, dtype)
+            if cfg.mla is not None
+            else attn.init_attn_params(km, cfg, dtype)
+        )
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_mod.init_mamba_params(km, cfg, dtype)
+    if spec.ffn != "none":
+        p["ffn"] = _init_ffn(kf, cfg, spec.ffn, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    k_embed, k_head, k_prefix, k_groups, k_final = jax.random.split(key, 5)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(k_embed, (cfg.padded_vocab, cfg.d_model), dtype)
+        * (cfg.d_model ** -0.5),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            k_head, (cfg.padded_vocab, cfg.d_model), dtype
+        ) * (cfg.d_model ** -0.5)
+    if cfg.prefix:
+        params["prefix"] = tuple(
+            init_layer(k, spec, cfg, dtype)
+            for k, spec in zip(jax.random.split(k_prefix, len(cfg.prefix)), cfg.prefix)
+        )
+    stacked = []
+    for i, spec in enumerate(cfg.pattern):
+        ks = jax.random.split(jax.random.fold_in(k_groups, i), cfg.n_groups)
+        stacked.append(jax.vmap(lambda kk: init_layer(kk, spec, cfg, dtype))(ks))
+    params["groups"] = tuple(stacked)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# One layer.
+# ---------------------------------------------------------------------------
+
+
+def apply_layer_dense(
+    x, spec: LayerSpec, p, cfg: ModelConfig, policy: ShardingPolicy,
+    opt: ApplyOptions, *, collect_cache: bool, cache_len: int = 0,
+):
+    """Dense pass; returns (x, cache|None, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+    if spec.mixer in ("attn", "attn_local"):
+        window = cfg.window if spec.mixer == "attn_local" else 0
+        if cfg.mla is not None:
+            y = attn.mla_dense(h, p["mixer"], cfg, q_chunk=opt.q_chunk, k_chunk=opt.k_chunk)
+            if collect_cache:
+                cache = _mla_cache_from_dense(h, p["mixer"], cfg, cache_len)
+        else:
+            y = attn.attn_dense(
+                h, p["mixer"], cfg, window=window, q_chunk=opt.q_chunk,
+                k_chunk=opt.k_chunk,
+            )
+            if collect_cache:
+                cache = _kv_cache_from_dense(h, p["mixer"], cfg, window, cache_len)
+    elif spec.mixer == "mamba":
+        y = mamba_mod.mamba_dense(h, p["mixer"], cfg)
+        if collect_cache:
+            cache = _mamba_state_from_dense(h, p["mixer"], cfg)
+    else:
+        y = jnp.zeros_like(x)
+    if cfg.post_norms and spec.mixer != "none":
+        y = rms_norm(y, p["post_norm_mixer"], cfg.norm_eps)
+    x = x + y
+
+    if spec.ffn != "none":
+        h2 = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            f = gated_mlp(h2, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"], cfg.act)
+        else:
+            f, moe_aux = moe_mod.moe_apply(
+                h2, p["ffn"], cfg, policy, token_chunk=opt.moe_token_chunk
+            )
+            aux = aux + moe_aux.load_balance + moe_aux.router_z
+        if cfg.post_norms:
+            f = rms_norm(f, p["post_norm_ffn"], cfg.norm_eps)
+        x = x + f
+    return x, cache, aux
+
+
+def apply_layer_decode(
+    x, spec: LayerSpec, p, cache, cur_pos, cfg: ModelConfig,
+    policy: ShardingPolicy, opt: ApplyOptions,
+):
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+    if spec.mixer in ("attn", "attn_local"):
+        window = cfg.window if spec.mixer == "attn_local" else 0
+        if cfg.mla is not None:
+            y, cache = attn.mla_decode(h, p["mixer"], cache, cur_pos, cfg, policy)
+        else:
+            y, cache = attn.decode_attn(h, p["mixer"], cache, cur_pos, cfg, policy,
+                                        window=window)
+    elif spec.mixer == "mamba":
+        y, cache = mamba_mod.mamba_decode(h, p["mixer"], cache, cfg)
+    else:
+        y = jnp.zeros_like(x)
+    if cfg.post_norms and spec.mixer != "none":
+        y = rms_norm(y, p["post_norm_mixer"], cfg.norm_eps)
+    x = x + y
+
+    if spec.ffn != "none":
+        h2 = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        if spec.ffn == "dense":
+            f = gated_mlp(h2, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"], cfg.act)
+        else:
+            f, moe_aux = moe_mod.moe_apply(h2, p["ffn"], cfg, policy, token_chunk=x.shape[0] * x.shape[1])
+            aux = aux + moe_aux.load_balance + moe_aux.router_z
+        if cfg.post_norms:
+            f = rms_norm(f, p["post_norm_ffn"], cfg.norm_eps)
+        x = x + f
+    return x, cache, aux
+
+
+# ---- cache construction from a dense (prefill) pass ------------------------
+
+
+def _kv_cache_from_dense(h, pm, cfg, window, cache_len) -> KVCache:
+    b, s, _ = h.shape
+    pos = jnp.arange(s)
+    k = jnp.einsum("bsd,dhk->bshk", h, pm["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, pm["wv"])
+    if cfg.qk_norm:
+        k = rms_norm(k, pm["k_norm"], cfg.norm_eps)
+    k = attn.apply_rope(k, pos, cfg.rope_theta)
+    s_cache = cache_len if not window else min(window, cache_len)
+    if s <= s_cache:
+        padk = jnp.zeros((b, s_cache - s, *k.shape[2:]), k.dtype)
+        kc = jnp.concatenate([k, padk], 1)
+        vc = jnp.concatenate([v, jnp.zeros_like(padk)], 1)
+        pc = jnp.concatenate([pos, jnp.full((s_cache - s,), -1, jnp.int32)])
+    else:  # window cache keeps the ring-buffer layout: slot = pos % window
+        idx = jnp.arange(s_cache)
+        src = s - s_cache + ((idx - (s % s_cache)) % s_cache)
+        kc, vc, pc = k[:, src], v[:, src], pos[src]
+    return KVCache(k=kc, v=vc, pos=pc)
+
+
+def _mla_cache_from_dense(h, pm, cfg, cache_len) -> MLACache:
+    m = cfg.mla
+    b, s, _ = h.shape
+    pos = jnp.arange(s)
+    kv_a = jnp.einsum("bsd,dr->bsr", h, pm["wkv_a"])
+    c_kv, k_rope_raw = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, pm["kv_a_norm"], cfg.norm_eps)
+    k_rope = attn.apply_rope(k_rope_raw[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    pad = cache_len - s
+    return MLACache(
+        c_kv=jnp.concatenate([c_kv, jnp.zeros((b, pad, m.kv_lora_rank), c_kv.dtype)], 1),
+        k_rope=jnp.concatenate([k_rope, jnp.zeros((b, pad, m.qk_rope_dim), k_rope.dtype)], 1),
+        pos=jnp.concatenate([pos, jnp.full((pad,), -1, jnp.int32)]),
+    )
+
+
+def _mamba_state_from_dense(h, pm, cfg) -> mamba_mod.MambaState:
+    # Run the recurrent form over the sequence to get the final state.
+    # (Prefill cost of the state is already paid in the dense pass; this is
+    # the exact state without storing per-step values: scan, keep last.)
+    b, s, _ = h.shape
+    st = mamba_mod.init_mamba_state(b, cfg, h.dtype)
+
+    def step(carry, t):
+        _, carry_st = mamba_mod.mamba_decode(
+            jax.lax.dynamic_slice_in_dim(h, t, 1, axis=1), pm, carry, cfg
+        )
+        return carry_st, None
+
+    st, _ = jax.lax.scan(step, st, jnp.arange(s))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Cache init (for decode-only lowering).
+# ---------------------------------------------------------------------------
+
+
+def init_cache_for_spec(spec: LayerSpec, cfg: ModelConfig, b: int, cache_len: int, dtype):
+    if spec.mixer in ("attn", "attn_local"):
+        s_cache = cache_len if spec.mixer == "attn" else min(cfg.window or cache_len, cache_len)
+        if cfg.mla is not None:
+            return attn.init_mla_cache(b, cache_len, cfg.mla, dtype)
+        return attn.init_kv_cache(b, s_cache, cfg.n_kv_heads, cfg.head_dim, dtype)
+    if spec.mixer == "mamba":
+        return mamba_mod.init_mamba_state(b, cfg, dtype)
+    return None
+
+
+def init_caches(cfg: ModelConfig, b: int, cache_len: int, dtype) -> dict:
+    """Cache pytree matching the param structure (stacked per group)."""
+    caches: dict[str, Any] = {}
+    if cfg.prefix:
+        caches["prefix"] = tuple(
+            init_cache_for_spec(s, cfg, b, cache_len, dtype) for s in cfg.prefix
+        )
+    grp = []
+    for spec in cfg.pattern:
+        one = init_cache_for_spec(spec, cfg, b, cache_len, dtype)
+        if one is None:
+            grp.append(None)
+        else:
+            grp.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_groups, *a.shape)), one))
+    caches["groups"] = tuple(grp)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Full stacks.
+# ---------------------------------------------------------------------------
+
+
+def _remat_wrap(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def run_stack_dense(
+    x: jnp.ndarray,
+    params: dict,
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+    opt: ApplyOptions,
+    *,
+    collect_cache: bool = False,
+    cache_len: int = 0,
+):
+    """Apply prefix + scanned groups.  Returns (x, caches|None, aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    prefix_caches = []
+    for spec, p in zip(cfg.prefix, params.get("prefix", ())):
+        x, c, aux = apply_layer_dense(
+            x, spec, p, cfg, policy, opt, collect_cache=collect_cache, cache_len=cache_len
+        )
+        aux_total += aux
+        prefix_caches.append(c)
+
+    def group_body(carry, gp):
+        x, aux_acc = carry
+        caches = []
+        for spec, p in zip(cfg.pattern, gp):
+            x, c, aux = apply_layer_dense(
+                x, spec, p, cfg, policy, opt,
+                collect_cache=collect_cache, cache_len=cache_len,
+            )
+            aux_acc = aux_acc + aux
+            caches.append(c)
+        if policy.distributed and policy.batch_axes:
+            from jax.sharding import NamedSharding
+
+            # SP: sequence-shard the inter-layer activation (and with it the
+            # remat checkpoint / scan carry) over the TP axis — 1/tp_size the
+            # activation residency; GSPMD inserts the Megatron-SP
+            # all-gather/reduce-scatter pair around each layer body.
+            seq_ax = policy.tp_axis if policy.seq_shard else None
+            x = jax.lax.with_sharding_constraint(
+                x, NamedSharding(policy.mesh, P(policy.batch_axes, seq_ax, None))
+            )
+        return (x, aux_acc), tuple(caches)
+
+    body = _remat_wrap(group_body, opt.remat)
+    (x, aux_total), group_caches = jax.lax.scan(
+        body, (x, aux_total), params["groups"]
+    )
+    caches = None
+    if collect_cache:
+        caches = {"groups": group_caches}
+        if cfg.prefix:
+            caches["prefix"] = tuple(prefix_caches)
+    return x, caches, aux_total
+
+
+def run_stack_decode(
+    x: jnp.ndarray,
+    params: dict,
+    caches: dict,
+    cur_pos: jnp.ndarray,
+    cfg: ModelConfig,
+    policy: ShardingPolicy,
+    opt: ApplyOptions,
+):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prefix = []
+    for spec, p, c in zip(cfg.prefix, params.get("prefix", ()), caches.get("prefix", ())):
+        x, c, aux = apply_layer_decode(x, spec, p, c, cur_pos, cfg, policy, opt)
+        aux_total += aux
+        new_prefix.append(c)
+
+    def group_body(carry, inp):
+        x, aux_acc = carry
+        gp, gc = inp
+        new_caches = []
+        for spec, p, c in zip(cfg.pattern, gp, gc):
+            x, c, aux = apply_layer_decode(x, spec, p, c, cur_pos, cfg, policy, opt)
+            aux_acc = aux_acc + aux
+            new_caches.append(c)
+        return (x, aux_acc), tuple(new_caches)
+
+    (x, aux_total), new_group_caches = jax.lax.scan(
+        group_body, (x, aux_total), (params["groups"], caches["groups"])
+    )
+    out_caches = {"groups": new_group_caches}
+    if cfg.prefix:
+        out_caches["prefix"] = tuple(new_prefix)
+    return x, out_caches, aux_total

@@ -1,0 +1,29 @@
+"""Optimizers: AdamW with optional 8-bit (blockwise-quantized) moments.
+
+The 8-bit moment store is a distributed-optimization feature: for the
+100B+-param assigned configs, fp32 (m, v) at 8 bytes/param exceeds the
+per-chip HBM budget even fully ZeRO-sharded; blockwise int8 moments cut
+optimizer state to ~2.1 bytes/param (DESIGN.md §4).
+"""
+
+from .adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    make_lr_schedule,
+)
+from .quant import QTensor, dequantize, quantize
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "make_lr_schedule",
+    "QTensor",
+    "quantize",
+    "dequantize",
+]

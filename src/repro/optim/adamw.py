@@ -1,0 +1,114 @@
+"""AdamW with fp32 or blockwise-int8 moments and fp32 master weights.
+
+Shardable by construction: state leaves mirror param shapes, so ZeRO specs
+from ``models.sharding.zero1_specs`` apply directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .quant import QTensor, dequantize, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantized: bool = False  # int8 moments
+    master_fp32: bool = True  # keep an fp32 master copy of bf16 params
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    m: Any  # tree of arrays or QTensors
+    v: Any
+    master: Any  # fp32 master params or None
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    def zeros(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return quantize(z) if cfg.quantized else z
+
+    master = None
+    if cfg.master_fp32:
+        # copy=True: fp32 params would otherwise alias the master buffers,
+        # breaking donation (donate(params) + donate(opt.master) same buffer)
+        master = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        master=master,
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(
+    grads, state: AdamWState, params, cfg: AdamWConfig, lr: jnp.ndarray
+):
+    """Returns (new_params, new_state, stats)."""
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p, master):
+        g32 = g.astype(jnp.float32)
+        m32 = dequantize(m) if isinstance(m, QTensor) else m
+        v32 = dequantize(v) if isinstance(v, QTensor) else v
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * g32 * g32
+        mh = m32 / c1
+        vh = v32 / c2
+        base = master if master is not None else p.astype(jnp.float32)
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * base
+        new_master = base - lr * step
+        new_p = new_master.astype(p.dtype)
+        m_out = quantize(m32) if isinstance(m, QTensor) else m32
+        v_out = quantize(v32) if isinstance(v, QTensor) else v32
+        return new_p, m_out, v_out, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    flat_master = (
+        treedef.flatten_up_to(state.master) if state.master is not None else [None] * len(flat_p)
+    )
+    outs = [upd(g, m, v, p, ms) for g, m, v, p, ms in zip(flat_g, flat_m, flat_v, flat_p, flat_master)]
+    new_params = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+    new_master = treedef.unflatten([o[3] for o in outs]) if cfg.master_fp32 else None
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(count, new_m, new_v, new_master), stats
+
+
+def make_lr_schedule(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def lr_at(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = base_lr * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, base_lr * cos)
+
+    return lr_at

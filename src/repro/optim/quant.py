@@ -1,0 +1,66 @@
+"""Blockwise int8 quantization for optimizer moments (8-bit Adam).
+
+Blocks run along the LAST dim (padded), so ``scale`` has shape
+``(*leading, ceil(last/BLOCK))`` — it shards with the same leading-dim
+specs as the parameter and never forces a flatten/reshard of a big
+sharded array during the optimizer update.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jnp.ndarray  # int8, original shape
+    scale: jnp.ndarray  # f32 [*leading, n_blocks]
+
+
+BLOCK = 256
+
+
+def quantize(x: jnp.ndarray) -> QTensor:
+    x32 = x.astype(jnp.float32)
+    if x32.ndim == 0:
+        x32 = x32[None]
+        scalar = True
+    else:
+        scalar = False
+    *lead, last = x32.shape
+    pad = (-last) % BLOCK
+    if pad:
+        x32 = jnp.concatenate(
+            [x32, jnp.zeros((*lead, pad), jnp.float32)], axis=-1
+        )
+    nb = x32.shape[-1] // BLOCK
+    blocks = x32.reshape(*lead, nb, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[..., None]), -127, 127).astype(jnp.int8)
+    q = q.reshape(*lead, nb * BLOCK)[..., :last]
+    if scalar:
+        q = q[0]
+    return QTensor(q=q, scale=scale)
+
+
+def dequantize(t: QTensor, shape=None) -> jnp.ndarray:
+    q = t.q
+    if q.ndim == 0:
+        q = q[None]
+        scalar = True
+    else:
+        scalar = False
+    *lead, last = q.shape
+    pad = (-last) % BLOCK
+    q32 = q.astype(jnp.float32)
+    if pad:
+        q32 = jnp.concatenate([q32, jnp.zeros((*lead, pad), jnp.float32)], axis=-1)
+    nb = q32.shape[-1] // BLOCK
+    out = (q32.reshape(*lead, nb, BLOCK) * t.scale[..., None]).reshape(
+        *lead, nb * BLOCK
+    )[..., :last]
+    if scalar:
+        out = out[0]
+    return out

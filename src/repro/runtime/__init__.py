@@ -1,0 +1,3 @@
+from .fault_tolerance import StragglerMonitor, TrainLoop, TrainLoopConfig
+
+__all__ = ["TrainLoop", "TrainLoopConfig", "StragglerMonitor"]

@@ -1,0 +1,3 @@
+from .step import TrainProfile, build_serve_step, build_train_step, build_prefill_step
+
+__all__ = ["TrainProfile", "build_train_step", "build_serve_step", "build_prefill_step"]

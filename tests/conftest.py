@@ -1,0 +1,59 @@
+"""Shared fixtures/helpers.
+
+NOTE: no XLA_FLAGS here — unit/smoke tests see the 1 real CPU device.
+Multi-device integration tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` before importing jax
+(tests/drivers/*.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+DRIVERS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "drivers")
+
+
+def run_driver(name: str, *args: str, devices: int = 8, timeout: int = 420):
+    """Run tests/drivers/<name>.py in a subprocess with N fake CPU devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(DRIVERS, name + ".py"), *args],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"driver {name} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def dict_aggregate(keys, values, op="sum"):
+    """Brute-force python oracle: combine values of equal keys."""
+    out = {}
+    for k, v in zip(np.asarray(keys).tolist(), np.asarray(values).tolist()):
+        if k == -1:
+            continue
+        if k in out:
+            if op == "sum":
+                out[k] += v
+            elif op == "max":
+                out[k] = max(out[k], v)
+            else:
+                out[k] = min(out[k], v)
+        else:
+            out[k] = v
+    return out

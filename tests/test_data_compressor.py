@@ -1,0 +1,146 @@
+"""Data pipeline determinism + gradient->KV compressor properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as configs
+from repro.configs.reduced import reduced_config
+from repro.core import compressor as comp
+from repro.data.pipeline import DataConfig, SyntheticLMData
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline (restart reproducibility is a fault-tolerance requirement).
+# ---------------------------------------------------------------------------
+
+
+def _data(arch="phi4-mini-3.8b", **kw):
+    cfg = reduced_config(arch)
+    d = dict(seq_len=16, global_batch=4, seed=7)
+    d.update(kw)
+    return cfg, SyntheticLMData(cfg, DataConfig(**d))
+
+
+def test_batch_pure_in_step():
+    _, data = _data()
+    b1, b2 = data.batch_at(3), data.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = data.batch_at(4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_labels_are_next_tokens():
+    _, data = _data()
+    b = data.batch_at(0)
+    # labels[i] continues tokens[i]: both come from one (s+1)-length stream
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_tokens_in_vocab_and_zipf_skewed():
+    cfg, data = _data(seq_len=512, global_batch=8)
+    b = data.batch_at(0)
+    toks = b["tokens"]
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+    # Zipf: the most common token should be much more frequent than median
+    counts = np.bincount(toks.reshape(-1), minlength=cfg.vocab_size)
+    assert counts.max() > 10 * max(1, int(np.median(counts[counts > 0])))
+
+
+def test_vision_batch_has_patches():
+    cfg, data = _data("paligemma-3b")
+    b = data.batch_at(0)
+    assert b["patch_embeds"].shape == (4, cfg.prefix_tokens, cfg.d_model)
+
+
+def test_audio_batch_has_frames_no_tokens():
+    cfg, data = _data("musicgen-medium")
+    b = data.batch_at(0)
+    assert "tokens" not in b
+    assert b["frame_embeds"].shape == (4, 16, cfg.d_model)
+
+
+def test_prompt_at_slices():
+    _, data = _data()
+    p = data.prompt_at(0, 8)
+    assert p["tokens"].shape == (4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Compressor: top-k + error feedback.
+# ---------------------------------------------------------------------------
+
+
+def test_topk_compress_selects_largest(rng):
+    g = jnp.asarray(rng.standard_normal((32, 8)).astype(np.float32))
+    state = comp.init_state(g.shape)
+    cg, new_state = comp.topk_compress(g, state, k=16)
+    flat = np.asarray(g).reshape(-1)
+    want = set(np.argsort(-np.abs(flat))[:16].tolist())
+    assert set(np.asarray(cg.keys).tolist()) == want
+    # error feedback: residual holds exactly what was not sent
+    dense = comp.decompress_sum(cg.keys, cg.values, size=flat.size)
+    np.testing.assert_allclose(
+        np.asarray(dense) + np.asarray(new_state.residual).reshape(-1),
+        flat, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.sampled_from([1, 8, 64]), seed=st.integers(0, 2**31 - 1))
+def test_property_error_feedback_conserves(k, seed):
+    """sent + residual == grad + old_residual, always."""
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.standard_normal(128).astype(np.float32))
+    state = comp.CompressorState(residual=jnp.asarray(
+        r.standard_normal(128).astype(np.float32)))
+    cg, ns = comp.topk_compress(g, state, k=k)
+    sent = comp.decompress_sum(cg.keys, cg.values, size=128)
+    np.testing.assert_allclose(
+        np.asarray(sent) + np.asarray(ns.residual),
+        np.asarray(g) + np.asarray(state.residual), atol=1e-5)
+
+
+def test_blockwise_topk_bounded_working_set(rng):
+    g = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    state = comp.init_state(g.shape)
+    cg, ns = comp.blockwise_topk_compress(g, state, k=2, chunk=16)
+    keys = np.asarray(cg.keys).reshape(4, 2)
+    for row in range(4):  # every chunk contributed exactly k keys in-range
+        assert np.all((keys[row] >= row * 16) & (keys[row] < (row + 1) * 16))
+    sent = comp.decompress_sum(cg.keys, cg.values, size=64)
+    np.testing.assert_allclose(
+        np.asarray(sent) + np.asarray(ns.residual), np.asarray(g), atol=1e-6)
+
+
+def test_decompress_sum_accumulates_duplicates():
+    keys = jnp.asarray([2, 2, 5, -1], jnp.int32)
+    vals = jnp.asarray([1.0, 3.0, 7.0, 99.0], jnp.float32)
+    dense = comp.decompress_sum(keys, vals, size=8)
+    want = np.zeros(8, np.float32)
+    want[2], want[5] = 4.0, 7.0
+    np.testing.assert_array_equal(np.asarray(dense), want)
+
+
+def test_compression_ratio():
+    # 1% top-k of fp32 with int32 keys: 2% of dense bytes
+    assert comp.compression_ratio((1000,), 10) == pytest.approx(0.02)
+
+
+def test_error_feedback_converges_unbiased(rng):
+    """Repeatedly compressing the same gradient: total_sent + residual == n*g
+    exactly, and the residual stays bounded (so mean sent -> g at rate 1/n)."""
+    g = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    state = comp.init_state(g.shape)
+    total = np.zeros(64, np.float32)
+    n = 50
+    res_norms = []
+    for _ in range(n):
+        cg, state = comp.topk_compress(g, state, k=4)
+        total += np.asarray(comp.decompress_sum(cg.keys, cg.values, size=64))
+        res_norms.append(float(np.linalg.norm(np.asarray(state.residual))))
+    np.testing.assert_allclose(
+        total + np.asarray(state.residual), n * np.asarray(g), rtol=1e-5, atol=1e-3)
+    # bounded residual: the last 10 norms don't grow
+    assert max(res_norms[-10:]) < 2.0 * max(res_norms[:20]) + 1e-6

@@ -1,0 +1,213 @@
+"""Paper-faithful analytic model: Eq. (1)-(3), Theorems 2.1/2.2.
+
+These tests validate the reproduction against the paper's own claims
+(EXPERIMENTS.md §Paper-validation reads from the benchmark versions).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import reduction_model as rm
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) — fixed-format padding waste.
+# ---------------------------------------------------------------------------
+
+
+def test_eq1_no_waste_when_exact():
+    assert rm.fixed_format_extra_traffic(20, [20, 20, 20]) == 1.0
+
+
+def test_eq1_half_length_pairs_double_traffic():
+    """Paper example: 10B average pairs in 20B slots -> ~50% extra traffic."""
+    t = rm.fixed_format_extra_traffic(20, [10] * 10)
+    assert t == pytest.approx(2.0)
+
+
+def test_eq1_extreme_case():
+    """Paper: M=200, N=20, P_i=1 -> ~20x traffic ('nearly 7 times more' is
+    their conservative phrasing; the formula gives M/sum(P_i) = 20/1)."""
+    t = rm.fixed_format_extra_traffic(20, [1] * 10)
+    assert t == pytest.approx(20.0)
+
+
+def test_switchagg_encoding_beats_fixed_format():
+    """Variable-length + metadata < fixed-slot padding for skewed lengths."""
+    pairs = [4, 8, 12, 20, 6, 9]
+    assert rm.switchagg_extra_traffic(pairs) < rm.fixed_format_extra_traffic(20, pairs)
+
+
+def test_eq1_rejects_oversize_pairs():
+    with pytest.raises(ValueError):
+        rm.fixed_format_extra_traffic(8, [9])
+
+
+# ---------------------------------------------------------------------------
+# Eq. (2) — header overhead.
+# ---------------------------------------------------------------------------
+
+
+def test_eq2_header_overhead():
+    assert rm.header_overhead_bytes(1000, 200, 58) == 1000 + 5 * 58
+
+
+def test_eq2_paper_ratio():
+    """Paper: 200B RMT packets -> 25.3% header overhead (58B TCP/IP)."""
+    assert rm.header_overhead_ratio(229, 58) == pytest.approx(0.253, abs=0.002)
+    # 1500B ethernet is ~7x cheaper
+    assert rm.header_overhead_ratio(1442, 58) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Eq. (3) — reduction ratio model + simulation agreement (paper Fig. 2a).
+# ---------------------------------------------------------------------------
+
+
+def test_eq3_regimes():
+    # N <= C: everything aggregates; R = 1 - N/M
+    assert rm.reduction_ratio(1000, 100, 128) == pytest.approx(0.9)
+    # N > C: bounded by capacity; R = (1/N - 1/M) * C
+    r = rm.reduction_ratio(1000, 500, 128)
+    assert r == pytest.approx((1 / 500 - 1 / 1000) * 128)
+    assert r <= rm.reduction_ratio_bound(500, 128)
+
+
+def test_eq3_monotone_in_capacity():
+    rs = [rm.reduction_ratio(10000, 2000, c) for c in (0, 100, 1000, 2000, 4000)]
+    assert all(b >= a for a, b in zip(rs, rs[1:]))
+
+
+def test_eq3_validates_against_simulation_uniform():
+    """Fig. 2a reproduction: simulated hash node tracks Eq. (3) closely in
+    both regimes (uniform keys)."""
+    M = 20000
+    for N, C in [(128, 1024), (512, 1024), (4096, 1024), (8192, 512)]:
+        keys = rm.uniform_keys(M, N, seed=1)
+        stats, _ = rm.simulate_node(keys, None, capacity=C, ways=4)
+        analytic = rm.reduction_ratio(M, N, C)
+        bound = rm.reduction_ratio_bound(N, C)
+        if N <= C:
+            # memory suffices: simulation tracks Eq. (3) tightly (hash
+            # collisions can cost a little)
+            assert abs(stats.reduction - analytic) < 0.05
+        else:
+            # capacity-limited: Eq. (3) models a static resident set; the
+            # evicting node does a bit better but never beats the C/N bound
+            assert analytic * 0.55 <= stats.reduction <= bound + 0.02
+
+
+def test_fig2a_cascade():
+    """Paper observation: when N >> C the reduction collapses (<10% at 10x)."""
+    M = 20000
+    keys = rm.uniform_keys(M, 10000, seed=0)
+    stats, _ = rm.simulate_node(keys, None, capacity=1000, ways=4)
+    assert stats.reduction < 0.12
+    keys = rm.uniform_keys(M, 500, seed=0)
+    stats, _ = rm.simulate_node(keys, None, capacity=1000, ways=4)
+    assert stats.reduction > 0.8  # paper: >80% when memory suffices
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2.1 — merged flows == single flow.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nflows=st.integers(2, 6))
+def test_theorem_2_1(seed, nflows):
+    rng = np.random.default_rng(seed)
+    flows = [rng.integers(0, 200, size=rng.integers(150, 400)).astype(np.int64)
+             for _ in range(nflows)]
+    merged = rm.merge_flows(flows)
+    single = np.concatenate(flows)
+    s_m, _ = rm.simulate_node(merged, None, capacity=64, ways=4)
+    s_s, _ = rm.simulate_node(single, None, capacity=64, ways=4)
+    # same multiset of keys -> same unique-key count; reduction differs only
+    # through order-dependent eviction noise (shrinks with stream length)
+    assert s_m.input_pairs == s_s.input_pairs
+    assert abs(s_m.reduction - s_s.reduction) < 0.08
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2.2 — multi-hop == single-hop for uniform data (paper Fig. 2b).
+# ---------------------------------------------------------------------------
+
+
+def test_theorem_2_2_uniform():
+    M, N, C = 20000, 8000, 1024
+    keys = rm.uniform_keys(M, N, seed=3)
+    r1, _ = rm.simulate_chain(keys, None, [C])
+    r4, stats4 = rm.simulate_chain(keys, None, [C, C, C, C])
+    # multi-hop does NOT help much for uniform keys (paper's key negative result)
+    assert r4 - r1 < 0.15
+    # and every extra hop helps strictly less (diminishing returns)
+    per_hop = [s.reduction for s in stats4]
+    assert per_hop[0] > per_hop[1] > 0.0 or per_hop[1] < 0.05
+
+
+def test_theorem_2_2_bound():
+    """Multi-hop reduction shares the single-hop upper bound family:
+    R_total <= 1 - N/M (the information-theoretic best)."""
+    M, N = 10000, 2000
+    keys = rm.uniform_keys(M, N, seed=5)
+    best = 1.0 - N / M
+    for hops in (1, 2, 4):
+        r, _ = rm.simulate_chain(keys, None, [512] * hops)
+        assert r <= best + 1e-9
+
+
+def test_skewed_multihop_can_help_more():
+    """For Zipf data the first hop catches hot keys; later hops see the tail."""
+    M, N = 20000, 8000
+    keys = rm.zipf_keys(M, N, skew=0.99, seed=7)
+    r1, _ = rm.simulate_chain(keys, None, [1024])
+    r2, _ = rm.simulate_chain(keys, None, [1024, 1024])
+    assert r2 >= r1  # never hurts
+
+
+# ---------------------------------------------------------------------------
+# Conservation invariant of the simulator itself.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_simulator_conserves_sums(seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 50, size=500).astype(np.int64)
+    vals = rng.standard_normal(500)
+    _, out = rm.simulate_node(keys, vals, capacity=16, ways=2)
+    got: dict = {}
+    for k, v in out:
+        got[k] = got.get(k, 0.0) + v
+    want: dict = {}
+    for k, v in zip(keys.tolist(), vals.tolist()):
+        want[k] = want.get(k, 0.0) + v
+    assert got.keys() == want.keys()
+    for k in want:
+        assert got[k] == pytest.approx(want[k], rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# TPU-domain tree traffic model (the collective-schedule analogue).
+# ---------------------------------------------------------------------------
+
+
+def test_tree_traffic_reduces_root_level():
+    m = rm.TreeTrafficModel(grad_bytes=1 << 30, fanins=(16, 2))
+    flat = m.flat_bytes_per_level()
+    tree = m.tree_bytes_per_level()
+    # root (pod) level: the tree carries 2*(2-1)/2 * grad/16 = grad/16 bytes
+    assert tree[-1] == pytest.approx((1 << 30) / 16)
+    # vs flat's 2*(511/512)*grad — >16x more on the scarce link
+    assert flat[-1] / tree[-1] > 16
+    assert m.tree_reduction_at_root() > 0.9
+
+
+def test_tree_traffic_totals():
+    """Tree total bytes <= flat total bytes for any fanins."""
+    for fanins in [(4,), (8, 2), (16, 2), (4, 4, 4)]:
+        m = rm.TreeTrafficModel(grad_bytes=1000000, fanins=fanins)
+        assert sum(m.tree_bytes_per_level()) <= sum(m.flat_bytes_per_level()) + 1e-6

@@ -1,0 +1,76 @@
+"""Structural cost model sanity: physical ranges + regime classification."""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import shape_by_name
+from repro.launch import hlo_analysis as ha
+from repro.launch import profiles
+from repro.launch.structural import structural_cost
+
+
+class MeshLike:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (16, 16)
+        size = 256
+
+
+@pytest.mark.parametrize("arch", list(configs.ARCH_IDS))
+def test_train_costs_physical(arch):
+    shape = shape_by_name("train_4k")
+    mesh = MeshLike()
+    prof = profiles.make_profile(arch, shape, mesh)
+    c = structural_cost(configs.get_config(arch), shape, mesh, prof)
+    assert c.flops > 0 and c.bytes > 0
+    cfg = configs.get_config(arch)
+    model = ha.model_flops_for(cfg, shape) / 256
+    useful = model / c.flops
+    # executed >= useful (remat/attention/dispatch overhead), but within 3x
+    assert 0.30 <= useful <= 1.05, (arch, useful)
+    # memory traffic physically sane: bounded by ~4x the param-read streams
+    # (3 reads x accum) plus a 64 GB activations/optimizer allowance
+    param_stream = 3 * prof.accum_steps * cfg.param_count() / 16 * 2
+    assert c.bytes < 4 * param_stream + 64e9, (arch, c.bytes, param_stream)
+
+
+def test_decode_dominated_by_cache_or_params():
+    shape = shape_by_name("decode_32k")
+    mesh = MeshLike()
+    for arch in ("gemma2-27b", "mamba2-780m"):
+        prof = profiles.make_profile(arch, shape, mesh)
+        c = structural_cost(configs.get_config(arch), shape, mesh, prof)
+        d = dict(c.detail)
+        mem_heavy = d.get("kv_cache", (0, 0))[1] + d.get("param_reads", (0, 0))[1]
+        assert mem_heavy > 0.8 * c.bytes, d
+
+
+def test_local_attention_cheaper_than_global():
+    """gemma2 local layers must score fewer flops than full-context ones."""
+    import dataclasses
+
+    shape = shape_by_name("prefill_32k")
+    mesh = MeshLike()
+    cfg = configs.get_config("gemma2-27b")
+    prof = profiles.make_profile("gemma2-27b", shape, mesh)
+    with_window = structural_cost(cfg, shape, mesh, prof)
+    no_window = structural_cost(dataclasses.replace(cfg, window=0), shape, mesh, prof)
+    assert with_window.detail["attn_scores"][0] < no_window.detail["attn_scores"][0]
+
+
+def test_fsdp_reduces_resident_not_traffic():
+    import dataclasses
+
+    shape = shape_by_name("train_4k")
+    mesh = MeshLike()
+    prof = profiles.make_profile("deepseek-v2-236b", shape, mesh)
+    assert prof.fsdp
+    c = structural_cost(configs.get_config("deepseek-v2-236b"), shape, mesh, prof)
+    # param reads stay ~(2-3 x accum) x params/tp regardless of FSDP storage
+    pr = c.detail["param_reads"][1]
+    cfg = configs.get_config("deepseek-v2-236b")
+    per_read = cfg.param_count() / 16 * 2
+    assert pr == pytest.approx(3 * prof.accum_steps * per_read, rel=0.1)
