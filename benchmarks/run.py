@@ -103,6 +103,15 @@ def main() -> None:
     _, us = _timeit(pallas_node, reps=1)
     print(f"kvagg_pallas_interpret,{us:.0f},correctness_mode")
 
+    # --- multi-job congestion-aware controller (DESIGN.md §3) -------------
+    from benchmarks import bench_multijob
+
+    mj, us = _timeit(lambda: bench_multijob.run_once(
+        4, budget_mb=128.0, partition="weighted", base_mb=256.0), reps=1)
+    results["multijob_4"] = mj
+    print(f"multijob_scarce_cut,{us:.0f},{mj['total_scarce_mb']:.1f}MiB_vs_"
+          f"flat_{mj['flat_total_scarce_mb']:.1f}MiB")
+
     # --- roofline summary (from dry-run artifacts, if present) ------------
     try:
         from benchmarks import roofline

@@ -6,12 +6,19 @@ Public surface:
   compressor      — gradient -> KV payload (top-k + error feedback)
   tree            — aggregation-tree construction over a mesh
   collectives     — flat / tree / compressed gradient exchanges (shard_map)
-  planner         — the controller: job config, memory partitioning, plans
+  planner         — the controller: job config, memory partitioning, plans,
+                    and the multi-job congestion-aware JobScheduler
 """
 
 from . import collectives, compressor, kvagg, planner, reduction_model, tree
 from .collectives import GradAggMode
-from .planner import ExchangePlan, plan_grad_exchange
+from .planner import (
+    ExchangePlan,
+    JobScheduler,
+    LaunchRequest,
+    Topology,
+    plan_grad_exchange,
+)
 
 __all__ = [
     "collectives",
@@ -22,5 +29,8 @@ __all__ = [
     "tree",
     "GradAggMode",
     "ExchangePlan",
+    "JobScheduler",
+    "LaunchRequest",
+    "Topology",
     "plan_grad_exchange",
 ]

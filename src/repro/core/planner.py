@@ -7,10 +7,18 @@ Our planner does the same trace-time work for a JAX mesh:
 
   * builds the `AggregationTree` from the mesh,
   * partitions combiner memory among concurrent jobs (paper §4.2.2 divides
-    switch memory evenly among trees),
+    switch memory evenly among trees; the weighted policy skews it by each
+    job's key variety),
   * sizes the FPE capacity from the reduction model (Eq. 3) given the
     expected key variety,
   * and emits an `ExchangePlan` the training/serving step consumes.
+
+The multi-job layer (`JobScheduler`, DESIGN.md §3) admits N concurrent
+launch requests against one shared `Topology`: every job's tree is chosen
+by searching candidate level orderings against `TreeTrafficModel` plus a
+shared-link congestion term (SOAR-style bounded per-level byte budget),
+and jobs that would blow the scarce-link budget are escalated to the
+compressed exchange with `k_fraction` sized to fit.
 
 The paper's wire protocol (Launch / Configure / Ack / Aggregation packets,
 Table 1) survives as the dataclasses below.
@@ -19,6 +27,7 @@ Table 1) survives as the dataclasses below.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Sequence
 
@@ -39,6 +48,10 @@ class LaunchRequest:
     expected_pairs: int  # data amount M (pairs) per worker
     key_variety: int  # N
     op: str = "sum"
+    # multi-job scheduling terms (DESIGN.md §3); zero/default = KV-only job
+    grad_bytes: int = 0  # dense gradient bytes per exchange (0: pure KV job)
+    mode: GradAggMode = GradAggMode.TREE  # requested exchange mode
+    k_fraction: float = 0.01  # top-k fraction if the job compresses
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +84,19 @@ class ExchangePlan:
     # analytics
     predicted_root_reduction: float  # traffic cut on the scarcest level vs flat
     predicted_kv_reduction: float  # Eq. 3 prediction for the KV combine
+    # multi-job analytics (DESIGN.md §3); defaults keep single-job callers total
+    job_id: int = -1
+    fanins: tuple[int, ...] = ()  # leaf -> root, matches (leaf_axis, *upper_axes)
+    level_bytes: tuple[float, ...] = ()  # modeled bytes per level, same order
+    scarce_link_bytes: float = 0.0  # this job's bytes on the scarcest level
+
+    def describe(self) -> str:
+        axes = (self.leaf_axis, *self.upper_axes)
+        order = " -> ".join(f"{a}(x{f})" for a, f in zip(axes, self.fanins)) \
+            if self.fanins else " -> ".join(axes)
+        return (f"job {self.job_id}: {self.mode.value} [{order}] "
+                f"k={self.k_fraction:g} fpe={self.fpe_capacity} "
+                f"scarce={self.scarce_link_bytes/2**20:.2f}MiB")
 
 
 class Controller:
@@ -134,6 +160,15 @@ def plan_grad_exchange(
         m = max(key_variety, int(fanin * max(1, key_variety * k_fraction)))
         kv_red = rm.reduction_ratio(m, key_variety, combiner_budget_pairs)
 
+    fanins = tuple(l.fanin for l in tree.levels)
+    lvl_bytes = modeled_level_bytes(grad_bytes, fanins, mode=mode,
+                                    k_fraction=k_fraction) if grad_bytes else ()
+    scarce_bytes = 0.0
+    if lvl_bytes:
+        scarce_lvl = min(range(len(tree.levels)),
+                         key=lambda i: tree.levels[i].link_gbps)
+        scarce_bytes = lvl_bytes[scarce_lvl]
+
     return ExchangePlan(
         mode=mode,
         leaf_axis=leaf,
@@ -142,7 +177,393 @@ def plan_grad_exchange(
         fpe_capacity=combiner_budget_pairs,
         predicted_root_reduction=root_red,
         predicted_kv_reduction=kv_red,
+        fanins=fanins,
+        level_bytes=lvl_bytes,
+        scarce_link_bytes=scarce_bytes,
     )
+
+
+# ---------------------------------------------------------------------------
+# Multi-job, congestion-aware scheduling (paper §3/§4.2.2; DESIGN.md §3).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkBudget:
+    """One shared topology level: group size, bandwidth, byte bound.
+
+    ``byte_budget`` is the SOAR-style per-exchange-round cap on the bytes this
+    level may carry across ALL jobs; ``inf`` disables the bound.
+    """
+
+    axis: str
+    fanin: int
+    gbps: float
+    byte_budget: float = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """The shared network every concurrent job's tree is placed on.
+
+    ``links`` is canonical cheap->scarce order; candidate tree orderings are
+    permutations of it.  The scarcest level is the one with minimum gbps —
+    for the production mesh that is the inter-pod DCN level.
+    """
+
+    links: tuple[LinkBudget, ...]
+
+    @property
+    def axes(self) -> tuple[str, ...]:
+        return tuple(l.axis for l in self.links)
+
+    @property
+    def scarce_axis(self) -> str:
+        return min(self.links, key=lambda l: (l.gbps, l.axis)).axis
+
+    def link(self, axis: str) -> LinkBudget:
+        for l in self.links:
+            if l.axis == axis:
+                return l
+        raise KeyError(axis)
+
+    @classmethod
+    def from_mesh(
+        cls,
+        mesh,
+        *,
+        reduce_axes: Sequence[str] = ("data", "pod"),
+        link_gbps: dict[str, float] | None = None,
+        scarce_budget_bytes: float = math.inf,
+    ) -> "Topology":
+        """Mirror of tree.from_mesh: absent / size-1 axes are skipped."""
+        gbps = link_gbps or {"data": tree_lib.ICI_GBPS, "model": tree_lib.ICI_GBPS,
+                             "pod": tree_lib.DCN_GBPS}
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        links = [
+            LinkBudget(axis=ax, fanin=sizes[ax],
+                       gbps=gbps.get(ax, tree_lib.ICI_GBPS))
+            for ax in reduce_axes if sizes.get(ax, 1) > 1
+        ]
+        if not links:
+            links = [LinkBudget(axis=mesh.axis_names[0], fanin=1,
+                                gbps=tree_lib.ICI_GBPS)]
+        topo = cls(links=tuple(links))
+        return topo.with_scarce_budget(scarce_budget_bytes)
+
+    @classmethod
+    def production(cls, *, multi_pod: bool = True,
+                   scarce_budget_bytes: float = math.inf) -> "Topology":
+        """The 512-chip target: data=16 intra-pod ICI, pod=2 inter-pod DCN."""
+        links = [LinkBudget(axis="data", fanin=16, gbps=tree_lib.ICI_GBPS)]
+        if multi_pod:
+            links.append(LinkBudget(axis="pod", fanin=2, gbps=tree_lib.DCN_GBPS))
+        return cls(links=tuple(links)).with_scarce_budget(scarce_budget_bytes)
+
+    def with_scarce_budget(self, byte_budget: float) -> "Topology":
+        scarce = self.scarce_axis
+        return Topology(links=tuple(
+            dataclasses.replace(l, byte_budget=byte_budget) if l.axis == scarce
+            else l for l in self.links))
+
+    def tree_for(self, ordering: Sequence[LinkBudget]) -> tree_lib.AggregationTree:
+        return tree_lib.AggregationTree(levels=tuple(
+            tree_lib.TreeLevel(axis=l.axis, fanin=l.fanin, link_gbps=l.gbps)
+            for l in ordering))
+
+
+def modeled_level_bytes(
+    grad_bytes: float,
+    fanins: Sequence[int],
+    *,
+    mode: GradAggMode = GradAggMode.TREE,
+    k_fraction: float = 0.01,
+) -> tuple[float, ...]:
+    """Bytes each level (leaf->root order) carries for one exchange.
+
+    TREE matches ``TreeTrafficModel.tree_bytes_per_level``; FLAT/GATHER put
+    the full ring all-reduce bytes on every level (no on-path reduction);
+    TREE_COMPRESS replaces the payload above the leaf level with the top-k
+    KV stream — 8 bytes (key+value) per retained 4-byte element, i.e. a
+    ``2*k_fraction`` payload factor — which the bounded-memory combine keeps
+    from regrowing across upper levels.
+    """
+    fanins = tuple(fanins)
+    model = rm.TreeTrafficModel(grad_bytes=grad_bytes, fanins=fanins)
+    if mode in (GradAggMode.FLAT, GradAggMode.GATHER):
+        return tuple(model.flat_bytes_per_level())
+    dense = model.tree_bytes_per_level()
+    if mode != GradAggMode.TREE_COMPRESS or len(fanins) < 2:
+        return tuple(dense)
+    # leaf reduce-scatter stays exact; above it the KV payload replaces the
+    # dense shard and the bounded-memory combine keeps it from regrowing
+    shard = float(grad_bytes) / fanins[0]
+    payload = min(shard, 2.0 * k_fraction * shard)
+    out = [dense[0]]
+    out.extend(2.0 * (f - 1) / f * payload for f in fanins[1:])
+    return tuple(out)
+
+
+def flat_scarce_bytes(grad_bytes: float, topology: Topology) -> float:
+    """Scarce-level bytes of the naive flat all-reduce over every chip."""
+    w = math.prod(l.fanin for l in topology.links)
+    if w <= 1:
+        return 0.0
+    return 2.0 * (w - 1) / w * grad_bytes
+
+
+def partition_memory(
+    budget_pairs: int,
+    requests: Sequence[LaunchRequest],
+    policy: str = "even",
+) -> dict[int, int]:
+    """Split combiner memory among concurrent trees (paper §4.2.2).
+
+    ``even``     — the paper's policy: budget // n_trees each.
+    ``weighted`` — proportional to each job's key variety N: a job whose
+                   working set is larger needs more resident pairs to hit
+                   the same Eq. 3 reduction ratio (R <= C/N when N > C).
+    Every job gets >= 1 pair, so partitions sum to
+    <= max(budget_pairs, n_jobs); with budget_pairs >= n_jobs (every real
+    configuration) they sum to <= budget_pairs.
+    """
+    if not requests:
+        return {}
+    n = len(requests)
+    if policy == "even":
+        cap = max(1, budget_pairs // n)
+        return {r.job_id: cap for r in requests}
+    if policy != "weighted":
+        raise ValueError(f"unknown partition policy {policy!r}")
+    weights = {r.job_id: float(max(1, r.key_variety)) for r in requests}
+    total_w = sum(weights.values())
+    caps = {j: max(1, int(budget_pairs * w / total_w)) for j, w in weights.items()}
+    # the max(1,) floor can push the sum past the budget (skewed weights
+    # flooring several jobs up); shave the largest partitions, keeping >= 1
+    overflow = sum(caps.values()) - budget_pairs
+    for j in sorted(caps, key=lambda j: (-caps[j], j)):
+        if overflow <= 0:
+            break
+        take = min(overflow, caps[j] - 1)
+        caps[j] -= take
+        overflow -= take
+    return caps
+
+
+@dataclasses.dataclass(frozen=True)
+class JobPlan:
+    """One admitted job: its tree, switch config, and exchange plan."""
+
+    request: LaunchRequest
+    tree: tree_lib.AggregationTree
+    configure: ConfigureMsg
+    exchange: ExchangePlan
+    bytes_by_axis: dict[str, float]
+    flat_scarce_bytes: float
+    over_budget: bool = False  # admitted despite exceeding the byte budget
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerReport:
+    """Aggregate view over every active job (the bench/dry-run report)."""
+
+    jobs: tuple[JobPlan, ...]
+    link_totals: dict[str, float]
+    scarce_axis: str
+    total_scarce_bytes: float
+    baseline_flat_scarce_bytes: float
+    max_drain_s: float  # congestion: slowest level's time to drain one round
+
+    @property
+    def scarce_traffic_cut(self) -> float:
+        if self.baseline_flat_scarce_bytes <= 0:
+            return 0.0
+        return 1.0 - self.total_scarce_bytes / self.baseline_flat_scarce_bytes
+
+    def summary(self) -> str:
+        lines = [
+            f"{len(self.jobs)} job(s); scarce axis '{self.scarce_axis}': "
+            f"{self.total_scarce_bytes/2**20:.2f} MiB vs flat "
+            f"{self.baseline_flat_scarce_bytes/2**20:.2f} MiB "
+            f"(cut {self.scarce_traffic_cut:.1%}); "
+            f"max drain {self.max_drain_s*1e3:.3f} ms"
+        ]
+        for jp in self.jobs:
+            lines.append("  " + jp.exchange.describe()
+                         + (" [over-budget]" if jp.over_budget else ""))
+        return "\n".join(lines)
+
+
+class JobScheduler:
+    """Admit N concurrent jobs onto one topology, congestion-aware.
+
+    For each `LaunchRequest` the scheduler searches candidate level
+    orderings of the shared topology (every permutation of the link levels)
+    and scores the resulting `AggregationTree` by the congestion it adds:
+    the drain time of the most-loaded level given the bytes already placed
+    by active jobs, tie-broken by total bytes, then by ordering.  A dense
+    TREE job whose best placement still violates the scarce level's byte
+    budget is escalated to TREE_COMPRESS with the largest ``k_fraction``
+    that fits (halving ladder, bounded below by ``min_k_fraction``).
+
+    Combiner memory is re-partitioned among all active trees on every
+    admit/release (policy ``even`` or ``weighted``; see
+    :func:`partition_memory`), so each job's `ConfigureMsg`/`ExchangePlan`
+    always reflects the current tenancy — the paper's §4.2.2 behavior.
+    """
+
+    def __init__(
+        self,
+        topology: Topology,
+        *,
+        combiner_budget_pairs: int = 1 << 20,
+        partition_policy: str = "even",
+        min_k_fraction: float = 1e-4,
+    ):
+        self.topology = topology
+        self.budget = combiner_budget_pairs
+        self.partition_policy = partition_policy
+        self.min_k_fraction = min_k_fraction
+        self.jobs: dict[int, JobPlan] = {}
+
+    # -- load accounting ----------------------------------------------------
+
+    def link_loads(self) -> dict[str, float]:
+        loads = {l.axis: 0.0 for l in self.topology.links}
+        for jp in self.jobs.values():
+            for ax, b in jp.bytes_by_axis.items():
+                loads[ax] += b
+        return loads
+
+    def _drain_s(self, loads: dict[str, float]) -> float:
+        return max(
+            (loads[l.axis] / (l.gbps * 1e9) for l in self.topology.links),
+            default=0.0,
+        )
+
+    # -- candidate search ---------------------------------------------------
+
+    def _score_candidates(self, req: LaunchRequest, mode: GradAggMode,
+                          k_fraction: float):
+        """Yield (score, ordering, bytes_by_axis) for every level ordering."""
+        loads = self.link_loads()
+        for perm in itertools.permutations(self.topology.links):
+            fanins = tuple(l.fanin for l in perm)
+            lvl = modeled_level_bytes(req.grad_bytes, fanins, mode=mode,
+                                      k_fraction=k_fraction)
+            by_axis = {l.axis: b for l, b in zip(perm, lvl)}
+            trial = {ax: loads[ax] + by_axis.get(ax, 0.0) for ax in loads}
+            feasible = all(trial[l.axis] <= l.byte_budget
+                           for l in self.topology.links)
+            score = (
+                not feasible,  # feasible placements first
+                self._drain_s(trial),  # then least congestion
+                sum(by_axis.values()),  # then fewest total bytes
+                tuple(l.axis for l in perm),  # then deterministic order
+            )
+            yield score, perm, by_axis, feasible
+
+    def _best(self, req: LaunchRequest, mode: GradAggMode, k_fraction: float):
+        return min(self._score_candidates(req, mode, k_fraction),
+                   key=lambda t: t[0])
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self, req: LaunchRequest) -> JobPlan:
+        if req.job_id in self.jobs:
+            raise ValueError(f"job {req.job_id} already active")
+        mode, k = req.mode, req.k_fraction
+        score, perm, by_axis, feasible = self._best(req, mode, k)
+        if (not feasible and req.grad_bytes
+                and mode in (GradAggMode.TREE, GradAggMode.TREE_COMPRESS)):
+            # congestion escalation: compress across the scarce levels,
+            # walking k down a halving ladder until the placement fits
+            # (jobs that already requested compression keep their mode but
+            # still walk the ladder)
+            mode = GradAggMode.TREE_COMPRESS
+            while True:
+                score, perm, by_axis, feasible = self._best(req, mode, k)
+                if feasible or k <= self.min_k_fraction:
+                    break
+                k = max(self.min_k_fraction, k / 2.0)
+        tree = self.topology.tree_for(perm)
+        self.jobs[req.job_id] = self._make_plan(req, tree, by_axis, mode, k,
+                                                over_budget=not feasible)
+        self._repartition()
+        return self.jobs[req.job_id]
+
+    def release(self, job_id: int) -> None:
+        self.jobs.pop(job_id, None)
+        self._repartition()
+
+    def plan_all(self, requests: Sequence[LaunchRequest]) -> SchedulerReport:
+        """Admit a batch (largest gradient first — the placements that
+        matter most pick first) and return the aggregate report."""
+        for r in sorted(requests, key=lambda r: (-r.grad_bytes, r.job_id)):
+            self.admit(r)
+        return self.report()
+
+    # -- plan construction --------------------------------------------------
+
+    def _make_plan(self, req, tree, by_axis, mode, k_fraction, over_budget):
+        axes = tree.axes
+        fanins = tuple(l.fanin for l in tree.levels)
+        lvl_bytes = tuple(by_axis[a] for a in axes)
+        scarce = self.topology.scarce_axis
+        flat = flat_scarce_bytes(req.grad_bytes, self.topology)
+        scarce_bytes = by_axis.get(scarce, 0.0)
+        root_red = 1.0 - scarce_bytes / flat if flat > 0 else 0.0
+        cfg = ConfigureMsg(tree_id=req.job_id, level_axes=axes, fanins=fanins,
+                           fpe_capacity=self.budget, op=req.op)
+        plan = ExchangePlan(
+            mode=mode, leaf_axis=axes[0], upper_axes=axes[1:],
+            k_fraction=k_fraction, fpe_capacity=self.budget,
+            predicted_root_reduction=root_red, predicted_kv_reduction=0.0,
+            job_id=req.job_id, fanins=fanins, level_bytes=lvl_bytes,
+            scarce_link_bytes=scarce_bytes,
+        )
+        return JobPlan(request=req, tree=tree, configure=cfg, exchange=plan,
+                       bytes_by_axis=dict(by_axis), flat_scarce_bytes=flat,
+                       over_budget=over_budget)
+
+    def _repartition(self) -> None:
+        reqs = [jp.request for jp in self.jobs.values()]
+        caps = partition_memory(self.budget, reqs, self.partition_policy)
+        for jid, jp in list(self.jobs.items()):
+            cap = caps[jid]
+            req = jp.request
+            # Eq. 3 at the leaf node: data arriving = leaf fanin * per-worker
+            # pairs (KV jobs) or the job's retained top-k stream (grad jobs)
+            if req.expected_pairs:
+                m = jp.tree.levels[0].fanin * req.expected_pairs
+            else:
+                m = jp.tree.levels[0].fanin * max(
+                    1, int(req.grad_bytes / 4 * jp.exchange.k_fraction))
+            kv_red = 0.0
+            if req.key_variety:
+                m = max(m, req.key_variety)
+                kv_red = rm.reduction_ratio(m, req.key_variety, cap)
+            self.jobs[jid] = dataclasses.replace(
+                jp,
+                configure=dataclasses.replace(jp.configure, fpe_capacity=cap),
+                exchange=dataclasses.replace(jp.exchange, fpe_capacity=cap,
+                                             predicted_kv_reduction=kv_red),
+            )
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> SchedulerReport:
+        loads = self.link_loads()
+        scarce = self.topology.scarce_axis
+        jobs = tuple(self.jobs[j] for j in sorted(self.jobs))
+        return SchedulerReport(
+            jobs=jobs,
+            link_totals=loads,
+            scarce_axis=scarce,
+            total_scarce_bytes=loads.get(scarce, 0.0),
+            baseline_flat_scarce_bytes=sum(jp.flat_scarce_bytes for jp in jobs),
+            max_drain_s=self._drain_s(loads),
+        )
 
 
 def size_fpe_capacity(key_variety: int, target_reduction: float, data_amount: int) -> int:

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 import repro.configs as configs
 from repro.configs.base import shape_by_name
+from repro.core import planner
 from repro.core.collectives import GradAggMode
 from repro.launch import hlo_analysis as ha
 from repro.launch import hlo_cost
@@ -57,10 +58,30 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     model = LMModel(cfg)
     params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     batch_sds = profiles.input_specs(arch, shape)
+    # the controller's gradient-exchange plan: mode, level ordering, and
+    # modeled per-level traffic (fpe=0 keeps the exact sorted-combine node).
+    # Only train cells run an exchange; serve cells carry no plan.
+    grad_plan = None
+    if shape.kind == "train":
+        grad_plan = planner.plan_grad_exchange(
+            mesh, mode=GradAggMode(mode), grad_bytes=4 * cfg.param_count(),
+            k_fraction=k_fraction, combiner_budget_pairs=0,
+            reduce_axes=("data", "pod"))
     meta = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
             "mode": mode, "accum": prof.accum_steps, "fsdp": prof.fsdp,
             "quant_opt": prof.quantized_opt, "seq_shard": seq_shard,
-            "post_accum": post_accum, "wire_bf16": wire_bf16}
+            "post_accum": post_accum, "wire_bf16": wire_bf16,
+            "plan": None if grad_plan is None else {
+                "leaf_axis": grad_plan.leaf_axis,
+                "upper_axes": list(grad_plan.upper_axes),
+                "fanins": list(grad_plan.fanins),
+                "k_fraction": grad_plan.k_fraction,
+                "fpe_capacity": grad_plan.fpe_capacity,
+                "level_bytes": [round(b, 1) for b in grad_plan.level_bytes],
+                "scarce_link_bytes": round(grad_plan.scarce_link_bytes, 1),
+                "predicted_root_reduction": round(
+                    grad_plan.predicted_root_reduction, 4),
+            }}
 
     manual = post_accum or mode == "tree_compress"
     if shape.kind == "train" and manual:
@@ -75,12 +96,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         opt_cfg = AdamWConfig(quantized=prof.quantized_opt,
                               master_fp32=prof.master_fp32)
         lr_fn = make_lr_schedule(3e-4, 100, 10000)
+        # mode / k / fpe capacity come from the controller's plan; the
+        # post-accum tree case overrides the requested mode to exact TREE
+        xplan = grad_plan if mode == "tree_compress" else _dc.replace(
+            grad_plan, mode=GradAggMode.TREE)
         step_fn, sh = build_compressed_train_step(
             cfg, mesh, prof, opt_cfg, lr_fn,
             batch_example=batch_sds, params_example=params_sds,
-            k_fraction=k_fraction,
-            mode=(GradAggMode.TREE_COMPRESS if mode == "tree_compress"
-                  else GradAggMode.TREE),
+            plan=xplan,
             wire_dtype=jnp.bfloat16 if wire_bf16 else None,
         )
         opt_sds = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_sds)
@@ -144,6 +167,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()  # raw XLA numbers (loop bodies counted once)
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     walk = hlo_cost.analyze(hlo, mesh)  # trip-count-aware
     coll = ha.collectives_from_events(walk["coll"], mesh)
@@ -258,10 +283,20 @@ def main():
                                  wire_bf16=args.wire_bf16,
                                  k_fraction=args.k_fraction)
                     rf = r["roofline"]
+                    pl = r.get("plan")
+                    plan_txt = ""
+                    if pl:
+                        order = " -> ".join([pl["leaf_axis"],
+                                             *pl["upper_axes"]])
+                        plan_txt = (
+                            f" plan=[{order}] "
+                            f"scarce={pl['scarce_link_bytes']/2**20:.1f}MiB "
+                            f"(cut {pl['predicted_root_reduction']:.1%})")
                     print(f"OK {label}: compile={r['compile_s']}s "
                           f"mem/dev={r['memory']['total_per_device']/2**30:.2f}GiB "
                           f"compute={rf['compute_s']:.4f}s mem={rf['memory_s']:.4f}s "
-                          f"coll={rf['collective_s']:.4f}s dom={rf['dominant']}",
+                          f"coll={rf['collective_s']:.4f}s dom={rf['dominant']}"
+                          f"{plan_txt}",
                           flush=True)
                     results.append(r)
                 except Exception as e:

@@ -16,6 +16,7 @@ orthogonal to the gradient exchange under study (DESIGN.md §5).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any
 
@@ -25,7 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import collectives as coll
-from repro.core.collectives import GradAggMode
+from repro.core.collectives import GradAggMode, axis_size_compat
 from repro.models.attention import ShardingPolicy
 from repro.models.model import LMModel
 from repro.models.transformer import ApplyOptions
@@ -72,6 +73,7 @@ def build_compressed_train_step(
     fpe_capacity: int = 0,
     mode: GradAggMode | None = None,
     wire_dtype=None,
+    plan=None,
 ):
     """Returns (jitted step, shardings).  Step signature:
     (params, opt_state, residuals, batch, step) ->
@@ -81,7 +83,19 @@ def build_compressed_train_step(
     gradients accumulate LOCALLY inside the manual region (zero collectives
     in the loop — unlike the pjit path, where the loop-carried sharded sum
     forces a reduction per microbatch), then ONE tree exchange crosses the
-    wire.  ``wire_dtype`` (e.g. bf16) casts just the exchanged bytes."""
+    wire.  ``wire_dtype`` (e.g. bf16) casts just the exchanged bytes.
+
+    ``plan`` (a planner ``ExchangePlan``) overrides mode / k_fraction /
+    fpe_capacity with the controller's decision for this job (DESIGN.md §3);
+    its level ordering must use the profile's dp axes."""
+    if plan is not None:
+        mode = plan.mode
+        k_fraction = plan.k_fraction
+        fpe_capacity = plan.fpe_capacity
+        plan_axes = (plan.leaf_axis, *plan.upper_axes)
+        assert set(plan_axes) == set(prof.dp_axes), (
+            f"plan axes {plan_axes} != profile dp axes {prof.dp_axes}")
+        prof = dataclasses.replace(prof, dp_axes=plan_axes)
     # model math sees a single logical worker (dp manual, tp via GSPMD auto)
     model = LMModel(
         cfg,
@@ -158,7 +172,7 @@ def build_compressed_train_step(
         # mean over workers
         w = 1.0
         for ax in prof.dp_axes:
-            w *= jax.lax.axis_size(ax)
+            w *= axis_size_compat(ax)
         grads = jax.tree.map(lambda g: g / w, grads)
         if wire_dtype is not None:
             grads = jax.tree.map(lambda g: g.astype(wire_dtype), grads)
@@ -179,7 +193,7 @@ def build_compressed_train_step(
 
         return jax.tree.map(one, b)
 
-    mapped = jax.shard_map(
+    mapped = coll.shard_map_compat(
         region,
         mesh=mesh,
         in_specs=(pspecs_region, batch_region_specs(batch_example),

@@ -15,6 +15,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import collectives as coll
+from repro.core.collectives import shard_map_compat
 from repro.core import kvagg
 
 assert jax.device_count() == 8, jax.device_count()
@@ -35,7 +36,7 @@ def check_tree_equals_flat():
             return coll.tree_allreduce(xl, "data", ("pod",))
 
         specs = P("pod", "data")
-        run = lambda f: jax.jit(jax.shard_map(
+        run = lambda f: jax.jit(shard_map_compat(
             f, mesh=mesh, in_specs=specs, out_specs=specs,
             axis_names={"pod", "data"}, check_vma=False))(x)
         a, b = run(flat), run(tree)
@@ -61,12 +62,12 @@ def check_compressed_exact_when_k_full():
     def flat(xl):
         return coll.flat_allreduce(xl, ("data", "pod"))
 
-    got, nr = jax.jit(jax.shard_map(
+    got, nr = jax.jit(shard_map_compat(
         cmp_fn, mesh=mesh,
         in_specs=(P("pod", "data"), P("pod", "data", "model")),
         out_specs=(P("pod", "data"), P("pod", "data", "model")),
         axis_names={"pod", "data", "model"}, check_vma=False))(x, res0)
-    want = jax.jit(jax.shard_map(
+    want = jax.jit(shard_map_compat(
         flat, mesh=mesh, in_specs=P("pod", "data"), out_specs=P("pod", "data"),
         axis_names={"pod", "data"}, check_vma=False))(x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
@@ -88,7 +89,7 @@ def check_compressed_with_fpe_node():
             fpe_capacity=16)  # tiny FPE: heavy eviction path
         return out.reshape(xl.shape), nr.reshape(rl.shape)
 
-    got, _ = jax.jit(jax.shard_map(
+    got, _ = jax.jit(shard_map_compat(
         cmp_fn, mesh=mesh,
         in_specs=(P("pod", "data"), P("pod", "data", "model")),
         out_specs=(P("pod", "data"), P("pod", "data", "model")),
@@ -97,7 +98,7 @@ def check_compressed_with_fpe_node():
     def flat(xl):
         return coll.flat_allreduce(xl, ("data", "pod"))
 
-    want = jax.jit(jax.shard_map(
+    want = jax.jit(shard_map_compat(
         flat, mesh=mesh, in_specs=P("pod", "data"), out_specs=P("pod", "data"),
         axis_names={"pod", "data"}, check_vma=False))(x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -3,6 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="dev-only dep: pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from conftest import dict_aggregate

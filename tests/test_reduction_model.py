@@ -6,6 +6,7 @@ These tests validate the reproduction against the paper's own claims
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="dev-only dep: pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import reduction_model as rm

@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Verify every `DESIGN.md §N` reference in the source tree resolves.
+
+Docstrings cite design sections as ``DESIGN.md §3``; this checker fails
+(exit 1) if a cited section has no matching ``## §N`` heading in
+DESIGN.md — the doc contract CI enforces.
+
+    python tools/check_design_refs.py [--root .]
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+REF_RE = re.compile(r"DESIGN\.md\s*§\s*(\d+)")
+HEADING_RE = re.compile(r"^#+\s*§(\d+)\b", re.MULTILINE)
+
+
+def collect_refs(root: pathlib.Path) -> list[tuple[pathlib.Path, int, int]]:
+    """(file, line, section) for every DESIGN.md §N reference under src/."""
+    refs = []
+    for py in sorted((root / "src").rglob("*.py")):
+        for lineno, line in enumerate(py.read_text().splitlines(), 1):
+            for m in REF_RE.finditer(line):
+                refs.append((py.relative_to(root), lineno, int(m.group(1))))
+    return refs
+
+
+def check(root: pathlib.Path) -> int:
+    design = root / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist")
+        return 1
+    sections = {int(n) for n in HEADING_RE.findall(design.read_text())}
+    refs = collect_refs(root)
+    if not refs:
+        print("WARNING: no DESIGN.md §N references found under src/")
+    bad = [(f, ln, n) for f, ln, n in refs if n not in sections]
+    for f, ln, n in bad:
+        print(f"FAIL: {f}:{ln} cites DESIGN.md §{n}, "
+              f"but DESIGN.md has sections {sorted(sections)}")
+    if not bad:
+        print(f"OK: {len(refs)} reference(s) across "
+              f"{len({f for f, _, _ in refs})} file(s) all resolve "
+              f"(sections {sorted(sections)})")
+    return 1 if bad else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=pathlib.Path(__file__).resolve().parents[1],
+                    type=pathlib.Path)
+    args = ap.parse_args()
+    sys.exit(check(args.root))
+
+
+if __name__ == "__main__":
+    main()
