@@ -103,6 +103,21 @@ def main() -> None:
     _, us = _timeit(pallas_node, reps=1)
     print(f"kvagg_pallas_interpret,{us:.0f},correctness_mode")
 
+    # --- cascade dataplane: capacity x levels x op (DESIGN.md §6) ---------
+    from benchmarks import bench_dataplane
+
+    dp_rows = bench_dataplane.sweep(
+        ops=("sum", "max", "count", "mean", "logsumexp"),
+        capacities=(32, 128), levels=(1, 2), n=2048, variety=512,
+        dist="zipf", backend="jnp", reps=1)
+    results["dataplane"] = dp_rows
+    bench_dataplane.write_out(
+        dp_rows, os.path.join(out_dir, "BENCH_dataplane.json"))
+    best = max(dp_rows, key=lambda r: r["end_to_end_reduction"])
+    print(f"dataplane_best_reduction,{best['wall_us']:.0f},"
+          f"{best['op']}xL{best['levels']}xC{best['capacity_per_node']}"
+          f"=R{best['end_to_end_reduction']:.3f}")
+
     # --- multi-job congestion-aware controller (DESIGN.md §3) -------------
     from benchmarks import bench_multijob
 

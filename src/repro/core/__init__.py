@@ -2,7 +2,10 @@
 
 Public surface:
   reduction_model — paper Eq. 1-3, Theorems 2.1/2.2, simulators
+  aggops          — the AggOp registry: one source of op semantics
+                    (combine/identity/segment reduce; DESIGN.md §6)
   kvagg           — FPE/BPE bounded-memory KV combine (pure jnp semantics)
+  dataplane       — plan-driven multi-level cascade executor + telemetry
   compressor      — gradient -> KV payload (top-k + error feedback)
   tree            — aggregation-tree construction over a mesh
   collectives     — flat / tree / compressed gradient exchanges (shard_map)
@@ -10,8 +13,19 @@ Public surface:
                     and the multi-job congestion-aware JobScheduler
 """
 
-from . import collectives, compressor, kvagg, planner, reduction_model, tree
+from . import (
+    aggops,
+    collectives,
+    compressor,
+    dataplane,
+    kvagg,
+    planner,
+    reduction_model,
+    tree,
+)
+from .aggops import AggOp
 from .collectives import GradAggMode
+from .dataplane import CascadePlan, LevelSpec, run_cascade
 from .planner import (
     ExchangePlan,
     JobScheduler,
@@ -21,16 +35,22 @@ from .planner import (
 )
 
 __all__ = [
+    "aggops",
     "collectives",
     "compressor",
+    "dataplane",
     "kvagg",
     "planner",
     "reduction_model",
     "tree",
+    "AggOp",
+    "CascadePlan",
     "GradAggMode",
     "ExchangePlan",
     "JobScheduler",
     "LaunchRequest",
+    "LevelSpec",
     "Topology",
     "plan_grad_exchange",
+    "run_cascade",
 ]

@@ -30,7 +30,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from . import aggops
 from . import compressor as comp
+from . import dataplane
 from . import kvagg
 
 
@@ -125,19 +127,37 @@ def tree_compress_allreduce(
     *,
     k: int,
     fpe_capacity: int = 0,
+    cascade: dataplane.CascadePlan | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Compressed SwitchAgg exchange for one flat-reshapeable array.
 
     1. exact reduce-scatter over the cheap leaf axis (intra-pod);
     2. top-k compress the local shard (+ error feedback residual);
-    3. the KV stream crosses the scarce upper axes: all-gather(KV) there and
-       combine by key with the bounded-memory aggregator — this is the
-       aggregation node sitting on the pod boundary;
+    3. the KV stream crosses the scarce upper axes as a multi-level
+       CASCADE (``core.dataplane``): hop *i* all-gathers over upper axis
+       *i* and pushes the merged stream through that level's bounded-memory
+       FPE/BPE node, whose eviction-plus-flush stream feeds hop *i+1*;
     4. decompress to the dense shard; all-gather over the leaf axis.
+
+    ``cascade`` carries the planner's per-level node specs (capacity per
+    hop — DESIGN.md §6); when None, every hop gets ``fpe_capacity`` (0 =
+    the exact unbounded node).  Gradient exchange is a SUM dataplane:
+    non-sum cascades are rejected because decompression scatter-adds.
 
     Returns (result, new_residual).  Result is *approximate* (top-k), with
     error feedback making the bias vanish across steps.
     """
+    if cascade is None:
+        cascade = dataplane.CascadePlan(
+            op="sum",
+            levels=dataplane.uniform_levels(fpe_capacity,
+                                            len(upper_axes)))
+    if cascade.op != "sum":
+        raise ValueError(f"gradient exchange needs a sum cascade, got {cascade.op!r}")
+    if upper_axes and len(cascade.levels) != len(upper_axes):
+        raise ValueError(
+            f"cascade has {len(cascade.levels)} level(s) for "
+            f"{len(upper_axes)} upper axis hop(s)")
     flat = x.reshape(-1)
     n = flat.shape[0]
     fanin = axis_size_compat(leaf_axis)
@@ -155,18 +175,11 @@ def tree_compress_allreduce(
 
     if upper_axes:
         keys = idx.astype(jnp.int32)
-        # The scarce links carry only the KV stream.
-        for ax in upper_axes:
+        # The scarce links carry only the KV stream, one cascade level per hop.
+        for ax, spec in zip(upper_axes, cascade.levels):
             gk = jax.lax.all_gather(keys, ax, axis=0, tiled=True)
             gv = jax.lax.all_gather(vals, ax, axis=0, tiled=True)
-            if fpe_capacity > 0:
-                # paper-faithful bounded-memory node (FPE + BPE)
-                res = kvagg.two_level_aggregate(gk, gv, capacity=fpe_capacity, bpe=True)
-                m = gk.shape[0]
-                keys, vals = res.out_keys[: m + fpe_capacity], res.out_values[: m + fpe_capacity]
-            else:
-                cres = kvagg.sorted_combine(gk, gv)
-                keys, vals = cres.unique_keys, cres.combined_values
+            keys, vals, _ = dataplane.run_level(gk, gv, spec, cascade.op)
         dense = comp.decompress_sum(keys, vals, size=shard_n)
     else:
         dense = comp.decompress_sum(idx.astype(jnp.int32), vals, size=shard_n)
@@ -191,6 +204,7 @@ def exchange_in_shardmap(
     k_fraction: float = 0.01,
     fpe_capacity: int = 0,
     residuals=None,
+    cascade: dataplane.CascadePlan | None = None,
 ):
     """Apply the chosen exchange to every leaf of a gradient pytree.
 
@@ -215,7 +229,8 @@ def exchange_in_shardmap(
         for g, r in zip(leaves, res_leaves):
             k = max(1, int(g.size / axis_size_compat(leaf_axis) * k_fraction))
             o, nr = tree_compress_allreduce(
-                g, r, leaf_axis, upper_axes, k=k, fpe_capacity=fpe_capacity
+                g, r, leaf_axis, upper_axes, k=k, fpe_capacity=fpe_capacity,
+                cascade=cascade,
             )
             outs.append(o)
             new_res.append(nr)
@@ -242,19 +257,38 @@ def init_residuals(grads_shape_tree, leaf_axis_size: int, world_size: int = 1):
     return jax.tree.map(one, grads_shape_tree)
 
 
+def cascade_for_plan(plan) -> dataplane.CascadePlan | None:
+    """The one plan->cascade policy for the compressed gradient exchange:
+    TREE_COMPRESS plans with upper hops run the per-hop cascade (budget
+    split per level), everything else runs cascade-free.  plan.op flows
+    through so a non-sum plan trips the sum-only guard in
+    :func:`tree_compress_allreduce` instead of silently running as SUM.
+    Used by both :func:`exchange_from_plan` and
+    ``train.compressed.build_compressed_train_step``.
+    """
+    if plan.mode == GradAggMode.TREE_COMPRESS and plan.upper_axes:
+        return dataplane.cascade_from_exchange_plan(plan)
+    return None
+
+
 def exchange_from_plan(grads, plan, *, residuals=None):
     """Run the exchange a planner ``ExchangePlan`` describes.
 
     Mode, level ordering, top-k fraction, and FPE capacity all come from the
     plan (the controller's decision for this job under current tenancy) —
-    callers stop hardcoding them.  Must be called inside a shard_map whose
-    manual axes include the plan's axes.  ``plan`` is duck-typed to avoid a
-    circular import with ``planner``.
+    callers stop hardcoding them.  The compressed mode executes the plan as
+    a multi-level CASCADE: the plan's combiner budget is partitioned across
+    its upper-axis hops (``dataplane.cascade_from_exchange_plan``) so every
+    hop runs a bounded node at its own memory slice — DESIGN.md §6.
+    Must be called inside a shard_map whose manual axes include the plan's
+    axes.  ``plan`` is duck-typed to avoid a circular import with
+    ``planner``.
     """
+    cascade = cascade_for_plan(plan)
     return exchange_in_shardmap(
         grads, plan.mode, plan.leaf_axis, tuple(plan.upper_axes),
         k_fraction=plan.k_fraction, fpe_capacity=plan.fpe_capacity,
-        residuals=residuals,
+        residuals=residuals, cascade=cascade,
     )
 
 
@@ -268,6 +302,7 @@ class KVTreeResult(NamedTuple):
     values: jnp.ndarray
     level_in: jnp.ndarray  # [n_levels] pairs entering each level's node
     level_out: jnp.ndarray  # [n_levels] pairs leaving each level's node
+    level_evict: jnp.ndarray  # [n_levels] FPE evictions at each level's node
 
 
 def kv_tree_aggregate(
@@ -279,32 +314,58 @@ def kv_tree_aggregate(
     ways: int = 4,
     bpe: bool = True,
     op: str = "sum",
+    plan: dataplane.CascadePlan | None = None,
 ) -> KVTreeResult:
     """Aggregate per-worker KV streams up an aggregation tree.
 
     At each level the streams of that level's group are merged (Theorem 2.1:
     all-gather over the level axis == the node receiving all child flows) and
-    pushed through one bounded-memory SwitchAgg node.  Output stream feeds
-    the next level.  Per-level in/out pair counts give the measured
-    reduction ratio of every hop (paper Fig. 2b / Fig. 9).
+    pushed through that level's bounded-memory SwitchAgg node
+    (``dataplane.run_level``).  Output stream feeds the next level.
+    Per-level in/out/eviction counts give the measured reduction ratio of
+    every hop (paper Fig. 2b / Fig. 9).
+
+    ``op`` is any registered AggOp (DESIGN.md §6): carried values enter the
+    tree via ``prepare`` and the root stream is ``finalize``d, so e.g.
+    ``mean`` stays exact across levels.  ``plan`` overrides the uniform
+    (fpe_capacity, ways, bpe) node geometry with the controller's per-level
+    memory partition.
 
     Runs inside shard_map over ``level_axes``.
     """
-    lvl_in, lvl_out = [], []
-    k, v = keys, values
-    for ax in level_axes:
+    if plan is None:
+        plan = dataplane.CascadePlan(
+            op=op,
+            levels=dataplane.uniform_levels(fpe_capacity, len(level_axes),
+                                            ways=ways, bpe=bpe))
+    elif op not in ("sum", plan.op):
+        # plan.op drives the cascade; a conflicting explicit op is a caller
+        # bug ("sum" is indistinguishable from the default and defers)
+        raise ValueError(f"op={op!r} conflicts with plan.op={plan.op!r}")
+    if len(plan.levels) != len(level_axes):
+        raise ValueError(f"plan has {len(plan.levels)} level(s) for "
+                         f"{len(level_axes)} tree axes")
+    aggop = aggops.get(plan.op)
+    lvl_in, lvl_out, lvl_ev = [], [], []
+    k, v = keys, aggop.prepare_values(values)
+    for ax, spec in zip(level_axes, plan.levels):
         gk = jax.lax.all_gather(k, ax, axis=0, tiled=True)
         gv = jax.lax.all_gather(v, ax, axis=0, tiled=True)
-        res = kvagg.two_level_aggregate(
-            gk, gv, capacity=fpe_capacity, ways=ways, op=op, bpe=bpe
-        )
-        lvl_in.append(res.n_in)
-        lvl_out.append(res.n_out)
         # Compact the stream: keep a fixed-size output per level to bound
         # downstream shapes (real switches flush variable traffic; fixed
         # shapes are the TPU adaptation — sized at capacity + input).
-        k, v = res.out_keys, res.out_values
-    return KVTreeResult(k, v, jnp.stack(lvl_in), jnp.stack(lvl_out))
+        k, v, stats = dataplane.run_level(gk, gv, spec, plan.op)
+        lvl_in.append(stats.n_in)
+        lvl_out.append(stats.n_out)
+        lvl_ev.append(stats.n_evict)
+    # Root packing: the last node's stream may hold duplicate keys (table +
+    # BPE overlap — see kvagg.TwoLevelResult); combine exactly on carried
+    # values BEFORE finalize (a finalized mean cannot be re-combined).
+    packed = kvagg.sorted_combine(k, v, op=plan.op)
+    return KVTreeResult(packed.unique_keys,
+                        aggop.finalize_values(packed.combined_values),
+                        jnp.stack(lvl_in), jnp.stack(lvl_out),
+                        jnp.stack(lvl_ev))
 
 
 def make_kv_tree_aggregator(
@@ -315,6 +376,7 @@ def make_kv_tree_aggregator(
     ways: int = 4,
     bpe: bool = True,
     op: str = "sum",
+    plan: dataplane.CascadePlan | None = None,
 ) -> Callable:
     """jit-ready word-count aggregator: per-worker streams in, root stream out."""
 
@@ -325,13 +387,14 @@ def make_kv_tree_aggregator(
         ways=ways,
         bpe=bpe,
         op=op,
+        plan=plan,
     )
     spec = P(level_axes)
     mapped = shard_map_compat(
         fn,
         mesh=mesh,
         in_specs=(spec, spec),
-        out_specs=KVTreeResult(P(), P(), P(), P()),
+        out_specs=KVTreeResult(P(), P(), P(), P(), P()),
         axis_names=set(level_axes),
         check_vma=False,
     )

@@ -1,0 +1,315 @@
+"""Plan-driven multi-level aggregation dataplane (DESIGN.md §6).
+
+The paper's data reduction ratio is governed by how much aggregation state
+each hop holds (Eq. 3's ``C``) and what reduction function it runs; the
+FPE/BPE hierarchy exists to lift that bound at EVERY level of the tree.
+This module is the execution layer that honors a controller plan end to
+end: it takes the per-tree memory partition the planner emitted
+(``ConfigureMsg`` / ``ExchangePlan``, DESIGN.md §3) and runs the full
+multi-level cascade —
+
+    level 0 FPE/BPE node  --evictions+flush-->  level 1 node  --> ... root
+
+— each level a bounded-memory SwitchAgg node sized by its slice of the
+plan's combiner budget, with per-level telemetry (records in/out,
+evictions, reduction ratio: the paper's key metric, Fig. 2b/Fig. 9).
+
+Two backends execute the same plan: ``jnp`` (the ``core.kvagg`` scan
+oracle) and ``pallas`` (the VMEM FPE kernel, ``kernels.kv_aggregate``).
+Op semantics come from the ``core.aggops`` registry; cascades carry the
+op's *carried* representation between levels (e.g. ``mean``'s (sum, count)
+lanes) and finalize only at the root, which is what makes multi-level
+mean/logsumexp exact.
+
+A ``LevelSpec`` with ``capacity == 0`` is the exact unbounded node (pure
+sorted combine, no FPE) — the planner's ``fpe_capacity=0`` convention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import aggops, kvagg
+from . import reduction_model as rm
+
+EMPTY_KEY = kvagg.EMPTY_KEY
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSpec:
+    """One cascade hop: an FPE/BPE node's geometry.
+
+    capacity == 0 means the exact unbounded combine (no FPE, no evictions).
+    """
+
+    capacity: int
+    ways: int = 4
+    bpe: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadePlan:
+    """The dataplane's view of a controller plan: op + per-level nodes."""
+
+    op: str
+    levels: tuple[LevelSpec, ...]
+
+    def __post_init__(self):
+        if not self.levels:
+            raise ValueError("a cascade needs at least one level")
+        aggops.get(self.op)  # fail fast on unknown ops
+
+    @property
+    def capacities(self) -> tuple[int, ...]:
+        return tuple(l.capacity for l in self.levels)
+
+    def describe(self) -> str:
+        caps = " -> ".join(str(c) for c in self.capacities)
+        return f"{self.op} cascade [{caps}]"
+
+
+def even_split_levels(budget: int, n_levels: int, *, ways: int = 4,
+                      bpe: bool = True) -> tuple[LevelSpec, ...]:
+    """THE per-level memory partition rule: a tree's combiner budget split
+    evenly among its levels (each slice >= 1 pair); budget 0 means every
+    level is the exact unbounded node.  Both plan builders below use this —
+    change the partition policy here and nowhere else."""
+    n_levels = max(1, n_levels)
+    cap = max(1, budget // n_levels) if budget > 0 else 0
+    return tuple(LevelSpec(capacity=cap, ways=ways, bpe=bpe)
+                 for _ in range(n_levels))
+
+
+def uniform_levels(capacity: int, n_levels: int, *, ways: int = 4,
+                   bpe: bool = True) -> tuple[LevelSpec, ...]:
+    """Per-NODE sizing: every level gets the full ``capacity`` (each switch
+    owns its own memory — the paper's testbed view, and the legacy
+    ``fpe_capacity=`` call convention)."""
+    return tuple(LevelSpec(capacity=max(0, capacity), ways=ways, bpe=bpe)
+                 for _ in range(max(1, n_levels)))
+
+
+def plan_from_configure(cfg, *, ways: int = 4, bpe: bool = True) -> CascadePlan:
+    """Per-level memory partition of a controller ``ConfigureMsg``.
+
+    ``cfg.fpe_capacity`` is the whole tree's combiner budget (the §4.2.2
+    per-job partition); each of the tree's levels gets an even slice — the
+    per-LEVEL partition the cascade executes.  ``cfg`` is duck-typed
+    (``level_axes``, ``fpe_capacity``, ``op``) to avoid importing planner.
+    """
+    cfg = getattr(cfg, "configure", cfg)  # accept a JobPlan directly
+    return CascadePlan(
+        op=cfg.op,
+        levels=even_split_levels(cfg.fpe_capacity, len(cfg.level_axes),
+                                 ways=ways, bpe=bpe),
+    )
+
+
+def cascade_from_exchange_plan(xplan, *, ways: int = 4,
+                               bpe: bool = True, op: str | None = None
+                               ) -> CascadePlan:
+    """Cascade for a gradient ``ExchangePlan``: one node per upper (scarce)
+    axis hop, splitting the plan's combiner budget evenly among them."""
+    return CascadePlan(
+        op=op if op is not None else getattr(xplan, "op", "sum"),
+        levels=even_split_levels(xplan.fpe_capacity, len(xplan.upper_axes),
+                                 ways=ways, bpe=bpe),
+    )
+
+
+class LevelStats(NamedTuple):
+    n_in: jnp.ndarray  # [] int32 — real pairs entering the node
+    n_out: jnp.ndarray  # [] int32 — forwarded pairs leaving the node
+    n_evict: jnp.ndarray  # [] int32 — FPE evictions at the node
+
+
+def run_level(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    spec: LevelSpec,
+    op: str,
+    *,
+    backend: str = "jnp",
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, LevelStats]:
+    """One cascade hop on carried values; traceable inside jit/shard_map.
+
+    Returns (out_keys, out_values, stats).  With ``capacity > 0`` the
+    output is [capacity + n] (table flush + eviction stream, BPE-combined
+    when ``spec.bpe``); with ``capacity == 0`` it is the exact packed
+    combine of shape [n].
+    """
+    if spec.capacity == 0:
+        n_in = jnp.sum(keys != EMPTY_KEY).astype(jnp.int32)
+        c = kvagg.sorted_combine(keys, values, op=op)
+        return c.unique_keys, c.combined_values, LevelStats(
+            n_in=n_in, n_out=c.n_unique, n_evict=jnp.zeros((), jnp.int32))
+    if backend == "pallas":
+        from repro.kernels.kv_aggregate import fpe_aggregate_pallas
+
+        tk, tv, ek, ev = fpe_aggregate_pallas(
+            keys, values, capacity=spec.capacity, ways=spec.ways, op=op,
+            block_n=block_n, interpret=interpret)
+    elif backend == "jnp":
+        tk, tv, ek, ev = kvagg.fpe_aggregate(
+            keys, values, capacity=spec.capacity, ways=spec.ways, op=op)
+    else:
+        raise ValueError(f"unknown dataplane backend: {backend!r}")
+    # one node-assembly policy for all paths (kvagg.assemble_node)
+    res = kvagg.assemble_node(keys, tk, tv, ek, ev, op=op, bpe=spec.bpe)
+    return res.out_keys, res.out_values, LevelStats(
+        n_in=res.n_in, n_out=res.n_out, n_evict=res.n_evict)
+
+
+class CascadeResult(NamedTuple):
+    """Root output + per-level telemetry of one cascade execution.
+
+    ``keys``/``values`` are the root stream (packed unique + finalized when
+    run with the defaults).  ``n_in``/``n_out`` are the cascade's traffic
+    endpoints: pairs entering level 0 and pairs leaving the last level
+    (BEFORE any final packing — the wire metric).  The ``level_*`` arrays
+    are leaf->root telemetry.
+    """
+
+    keys: jnp.ndarray
+    values: jnp.ndarray
+    n_in: jnp.ndarray  # [] int32
+    n_out: jnp.ndarray  # [] int32
+    level_in: jnp.ndarray  # [n_levels] int32
+    level_out: jnp.ndarray  # [n_levels] int32
+    level_evict: jnp.ndarray  # [n_levels] int32
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "backend", "block_n", "interpret",
+                     "final_combine", "prepare", "finalize"),
+)
+def run_cascade(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    plan: CascadePlan,
+    *,
+    backend: str = "jnp",
+    block_n: int = 512,
+    interpret: bool | None = None,
+    final_combine: bool = True,
+    prepare: bool = True,
+    finalize: bool = True,
+) -> CascadeResult:
+    """Execute a full multi-level cascade plan over one KV stream.
+
+    The eviction-plus-flush stream of level *i* feeds level *i+1* (the
+    paper's multi-hop streamline, Fig. 2b / ``reduction_model.simulate_chain``).
+    ``prepare``/``finalize`` apply the op's carried-representation
+    conversions at the edges; ``final_combine`` packs the root stream into
+    unique keys (exact grouped result) without affecting ``n_out``, which
+    always measures the traffic leaving the last level.
+    """
+    op = aggops.get(plan.op)
+    k = keys
+    v = op.prepare_values(values) if prepare else values
+    li, lo, le = [], [], []
+    for spec in plan.levels:
+        k, v, stats = run_level(k, v, spec, plan.op, backend=backend,
+                                block_n=block_n, interpret=interpret)
+        li.append(stats.n_in)
+        lo.append(stats.n_out)
+        le.append(stats.n_evict)
+    n_out = lo[-1]
+    if final_combine:
+        c = kvagg.sorted_combine(k, v, op=plan.op)
+        k, v = c.unique_keys, c.combined_values
+    if finalize:
+        v = op.finalize_values(v)
+    return CascadeResult(
+        keys=k, values=v, n_in=li[0], n_out=n_out,
+        level_in=jnp.stack(li), level_out=jnp.stack(lo),
+        level_evict=jnp.stack(le),
+    )
+
+
+def level_reductions(res: CascadeResult) -> jnp.ndarray:
+    """Per-hop measured reduction ratio R_i = 1 - out_i/in_i (paper's R)."""
+    return 1.0 - res.level_out / jnp.maximum(res.level_in, 1)
+
+
+def end_to_end_reduction(res: CascadeResult) -> jnp.ndarray:
+    """Whole-cascade reduction: traffic leaving the root vs entering leaf."""
+    return 1.0 - res.n_out / jnp.maximum(res.n_in, 1)
+
+
+def predicted_level_reductions(
+    plan: CascadePlan, data_amount: int, key_variety: int
+) -> list[float]:
+    """Eq. 3 applied hop by hop: level *i* sees the (modeled) survivor
+    stream of level *i-1*; key variety is preserved by aggregation."""
+    preds = []
+    m = float(max(1, data_amount))
+    n = float(max(1, min(key_variety, data_amount)))
+    for spec in plan.levels:
+        if spec.capacity == 0:  # exact node: ideal reduction
+            r = 1.0 - min(n, m) / m
+        else:
+            r = rm.reduction_ratio(m, min(n, m), spec.capacity)
+        preds.append(r)
+        m = max(n, m * (1.0 - r))
+    return preds
+
+
+def telemetry(res: CascadeResult, plan: CascadePlan) -> dict:
+    """JSON-able per-level report (the dry-run / bench record)."""
+    li = [int(x) for x in jax.device_get(res.level_in)]
+    lo = [int(x) for x in jax.device_get(res.level_out)]
+    le = [int(x) for x in jax.device_get(res.level_evict)]
+    levels = []
+    for i, spec in enumerate(plan.levels):
+        levels.append({
+            "level": i,
+            "capacity": spec.capacity,
+            "records_in": li[i],
+            "records_out": lo[i],
+            "evictions": le[i],
+            "reduction": round(1.0 - lo[i] / max(li[i], 1), 4),
+        })
+    return {
+        "op": plan.op,
+        "levels": levels,
+        "n_in": int(res.n_in),
+        "n_out": int(res.n_out),
+        "end_to_end_reduction": round(float(end_to_end_reduction(res)), 4),
+    }
+
+
+def simulate_plan(
+    plan: CascadePlan,
+    *,
+    data_amount: int = 4096,
+    key_variety: int = 512,
+    dist: str = "uniform",
+    seed: int = 0,
+    backend: str = "jnp",
+    interpret: bool | None = None,
+) -> dict:
+    """Run a synthetic stream through the cascade and report per-level
+    predicted (Eq. 3) vs simulated reduction — the dry-run's dataplane
+    validation record.
+    """
+    gen = rm.uniform_keys if dist == "uniform" else rm.zipf_keys
+    keys = jnp.asarray(gen(data_amount, key_variety, seed=seed).astype("int32"))
+    values = jnp.ones((data_amount,), jnp.float32)
+    res = run_cascade(keys, values, plan, backend=backend, interpret=interpret)
+    report = telemetry(res, plan)
+    preds = predicted_level_reductions(plan, data_amount, key_variety)
+    for lvl, p in zip(report["levels"], preds):
+        lvl["predicted_reduction"] = round(p, 4)
+    report["dist"] = dist
+    report["data_amount"] = data_amount
+    report["key_variety"] = key_variety
+    return report

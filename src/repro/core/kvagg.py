@@ -17,6 +17,12 @@ Invariant (checked by property tests): grouping the *outputs* (FPE flush +
 BPE output) by key and combining gives exactly the input grouped-by-key
 combine — aggregation never loses or double-counts data.
 
+Op semantics (combine / identity / segment reduce) come from the
+``core.aggops`` registry (DESIGN.md §6) — the one source of truth shared
+with the Pallas kernels; this module never hardcodes an op.  Values may
+carry trailing lane dimensions (e.g. ``mean``'s paired (sum, count) lanes):
+eviction decisions are key-driven, so lanes ride along untouched.
+
 This module is the pure-jnp implementation; ``repro.kernels.kv_aggregate``
 is the Pallas/TPU version of the FPE loop with identical semantics.
 """
@@ -28,6 +34,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from . import aggops
 
 EMPTY_KEY = jnp.int32(-1)
 
@@ -41,31 +49,11 @@ def hash_key(key: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
     return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
 
 
-def _combine(op: str, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    if op == "sum":
-        return a + b
-    if op == "max":
-        return jnp.maximum(a, b)
-    if op == "min":
-        return jnp.minimum(a, b)
-    raise ValueError(f"unsupported aggregation op: {op}")
-
-
-def _identity(op: str, dtype) -> jnp.ndarray:
-    if op == "sum":
-        return jnp.zeros((), dtype)
-    if op == "max":
-        return jnp.array(-jnp.inf, dtype)
-    if op == "min":
-        return jnp.array(jnp.inf, dtype)
-    raise ValueError(f"unsupported aggregation op: {op}")
-
-
 class FPEResult(NamedTuple):
     table_keys: jnp.ndarray  # [capacity] int32, EMPTY_KEY where vacant
-    table_values: jnp.ndarray  # [capacity]
+    table_values: jnp.ndarray  # [capacity, *lanes]
     evict_keys: jnp.ndarray  # [n] int32, EMPTY_KEY where no eviction
-    evict_values: jnp.ndarray  # [n]
+    evict_values: jnp.ndarray  # [n, *lanes]
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "ways", "op"))
@@ -80,24 +68,27 @@ def fpe_aggregate(
     """Paper-faithful FPE: sequential hash-probe-aggregate-or-evict.
 
     keys: [n] int32 (EMPTY_KEY entries are skipped — allows padded streams)
-    values: [n]
+    values: [n] or [n, lanes] (carried lane dims, e.g. mean's (sum, count))
     Returns the resident table plus an eviction stream aligned with the
     input (evict_keys[i] is the pair evicted while processing input i).
     """
+    aggop = aggops.get(op)
     n = keys.shape[0]
     ways = max(1, min(ways, capacity))
     n_buckets = max(1, capacity // ways)
     cap = n_buckets * ways
+    lane_shape = values.shape[1:]  # () for scalar values
+    lane_nd = len(lane_shape)
 
     tk0 = jnp.full((n_buckets, ways), EMPTY_KEY, dtype=jnp.int32)
-    tv0 = jnp.zeros((n_buckets, ways), dtype=values.dtype)
+    tv0 = jnp.zeros((n_buckets, ways) + lane_shape, dtype=values.dtype)
 
     def step(carry, inp):
         tk, tv = carry
         k, v = inp
         b = hash_key(k, n_buckets)
         row_k = tk[b]  # [ways]
-        row_v = tv[b]
+        row_v = tv[b]  # [ways, *lanes]
         is_pad = k == EMPTY_KEY
 
         hit = row_k == k  # [ways]
@@ -106,9 +97,10 @@ def fpe_aggregate(
         any_empty = jnp.any(empty) & ~is_pad
         # first empty way
         empty_idx = jnp.argmax(empty)
+        hit_l = hit.reshape(hit.shape + (1,) * lane_nd)  # broadcast over lanes
 
         # --- hit: aggregate into the matching way
-        agg_row_v = jnp.where(hit, _combine(op, row_v, v), row_v)
+        agg_row_v = jnp.where(hit_l, aggop.combine(row_v, v), row_v)
 
         # --- miss+empty: insert at first empty way
         ins_row_k = row_k.at[empty_idx].set(k)
@@ -126,7 +118,7 @@ def fpe_aggregate(
         )
         evicted = (~any_hit) & (~any_empty) & (~is_pad)
         out_k = jnp.where(evicted, ev_k, EMPTY_KEY)
-        out_v = jnp.where(evicted, ev_v, jnp.zeros((), tv.dtype))
+        out_v = jnp.where(evicted, ev_v, jnp.zeros_like(ev_v))
 
         new_row_k = jnp.where(is_pad, row_k, new_row_k)
         new_row_v = jnp.where(is_pad, row_v, new_row_v)
@@ -135,12 +127,12 @@ def fpe_aggregate(
         return (tk, tv), (out_k, out_v)
 
     (tk, tv), (ek, ev) = jax.lax.scan(step, (tk0, tv0), (keys, values))
-    return FPEResult(tk.reshape(cap), tv.reshape(cap), ek, ev)
+    return FPEResult(tk.reshape(cap), tv.reshape((cap,) + lane_shape), ek, ev)
 
 
 class CombineResult(NamedTuple):
     unique_keys: jnp.ndarray  # [n] int32, EMPTY_KEY past n_unique
-    combined_values: jnp.ndarray  # [n]
+    combined_values: jnp.ndarray  # [n, *lanes]
     n_unique: jnp.ndarray  # [] int32
 
 
@@ -150,27 +142,25 @@ def sorted_combine(keys: jnp.ndarray, values: jnp.ndarray, *, op: str = "sum") -
     beyond-paper vectorized aggregator).  EMPTY_KEY inputs are ignored.
 
     Output is fixed-shape [n]: unique keys packed to the front in ascending
-    order, EMPTY_KEY padding after ``n_unique``.
+    order, EMPTY_KEY padding after ``n_unique`` (padding value slots hold
+    the op's dtype-aware identity).  Values may carry trailing lane dims.
     """
+    aggop = aggops.get(op)
     n = keys.shape[0]
+    lane_nd = values.ndim - 1
     pad = keys == EMPTY_KEY
-    # Sort padding to the end: sort by (is_pad, key).
-    sort_key = jnp.where(pad, jnp.iinfo(jnp.int32).max, keys)
-    order = jnp.argsort(sort_key)
-    sk = sort_key[order]
+    # Sort padding to the end lexicographically by (is_pad, key) — no
+    # sentinel remap, so INT32_MAX stays a legal, distinct key.
+    order = jnp.lexsort((keys, pad))
+    sk = keys[order]
     sv = values[order]
 
     # Segment ids: increment where the key changes.
     change = jnp.concatenate([jnp.ones((1,), jnp.int32), (sk[1:] != sk[:-1]).astype(jnp.int32)])
     seg = jnp.cumsum(change) - 1  # [n] in [0, n)
 
-    ident = _identity(op, values.dtype)
-    if op == "sum":
-        comb = jax.ops.segment_sum(sv, seg, num_segments=n)
-    elif op == "max":
-        comb = jax.ops.segment_max(sv, seg, num_segments=n)
-    else:
-        comb = jax.ops.segment_min(sv, seg, num_segments=n)
+    ident = aggop.identity(values.dtype)
+    comb = aggop.segment_reduce(sv, seg, n)
 
     # First occurrence of each segment gives its key.
     first_idx = jax.ops.segment_min(jnp.arange(n), seg, num_segments=n)
@@ -181,18 +171,32 @@ def sorted_combine(keys: jnp.ndarray, values: jnp.ndarray, *, op: str = "sum") -
 
     slot = jnp.arange(n)
     valid = slot < n_unique
+    valid_l = valid.reshape(valid.shape + (1,) * lane_nd)
     uk = jnp.where(valid, sk[jnp.clip(first_idx, 0, n - 1)], EMPTY_KEY)
-    cv = jnp.where(valid, comb, ident)
+    cv = jnp.where(valid_l, comb, ident)
     return CombineResult(uk.astype(jnp.int32), cv, n_unique)
 
 
 class TwoLevelResult(NamedTuple):
-    """Full SwitchAgg node output: FPE flush + BPE combine, plus traffic stats."""
+    """Full SwitchAgg node output: FPE flush + BPE combine, plus traffic stats.
+
+    INVARIANT (traffic semantics, paper Fig. 9): ``out_keys`` is a traffic
+    stream, not a key set — the same key may appear more than once.  With
+    ``bpe=False`` the raw eviction stream is forwarded unaggregated (the
+    SRAM-only "S-*" switch), so every re-eviction of a key is a distinct
+    forwarded pair; with ``bpe=True`` the evictions are combined but a key
+    resident in the FPE table at flush may ALSO appear in the BPE output.
+    ``n_out`` therefore counts forwarded pairs (the bytes a downstream link
+    carries), NOT distinct keys — use :func:`n_distinct_keys` for the
+    latter.  Grouping ``out`` by key always reproduces the exact input
+    combine (the conservation property tests).
+    """
 
     out_keys: jnp.ndarray  # [capacity + n]
-    out_values: jnp.ndarray  # [capacity + n]
-    n_out: jnp.ndarray  # [] int32 — number of real output pairs
+    out_values: jnp.ndarray  # [capacity + n, *lanes]
+    n_out: jnp.ndarray  # [] int32 — number of forwarded output pairs
     n_in: jnp.ndarray  # [] int32 — number of real input pairs
+    n_evict: jnp.ndarray  # [] int32 — FPE evictions (pre-BPE traffic)
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "ways", "op", "bpe"))
@@ -210,21 +214,48 @@ def two_level_aggregate(
     With ``bpe=False`` this models the SRAM-only programmable switch
     (DAIET-like): evictions leave the node unaggregated — the paper's Fig. 9
     "S-*" curves.  With ``bpe=True`` evictions are combined in the back-end
-    ("M-*" curves).
+    ("M-*" curves).  See :class:`TwoLevelResult` for the ``n_out``
+    duplicate-key invariant.  Ops operate on *carried* values (see
+    ``aggops.AggOp.prepare_values``); multi-lane ops pass [n, lanes] values.
     """
     fpe = fpe_aggregate(keys, values, capacity=capacity, ways=ways, op=op)
-    n = keys.shape[0]
-    cap = fpe.table_keys.shape[0]
+    return assemble_node(keys, fpe.table_keys, fpe.table_values,
+                         fpe.evict_keys, fpe.evict_values, op=op, bpe=bpe)
+
+
+def assemble_node(keys, table_keys, table_values, evict_keys, evict_values,
+                  *, op: str, bpe: bool) -> TwoLevelResult:
+    """THE node-assembly policy (flush + eviction stream -> output stream),
+    shared by the jnp node above, the Pallas node (``kernels.ops``), and the
+    cascade executor (``core.dataplane.run_level``) — one copy of the
+    n_out/n_in/n_evict accounting and the BPE-vs-raw forwarding choice."""
+    n_evict = jnp.sum(evict_keys != EMPTY_KEY).astype(jnp.int32)
     if bpe:
-        bpe_out = sorted_combine(fpe.evict_keys, fpe.evict_values, op=op)
-        ok = jnp.concatenate([fpe.table_keys, bpe_out.unique_keys])
-        ov = jnp.concatenate([fpe.table_values, bpe_out.combined_values])
+        bpe_out = sorted_combine(evict_keys, evict_values, op=op)
+        ok = jnp.concatenate([table_keys, bpe_out.unique_keys])
+        ov = jnp.concatenate([table_values, bpe_out.combined_values])
     else:
-        ok = jnp.concatenate([fpe.table_keys, fpe.evict_keys])
-        ov = jnp.concatenate([fpe.table_values, fpe.evict_values])
+        ok = jnp.concatenate([table_keys, evict_keys])
+        ov = jnp.concatenate([table_values, evict_values])
     n_out = jnp.sum(ok != EMPTY_KEY).astype(jnp.int32)
     n_in = jnp.sum(keys != EMPTY_KEY).astype(jnp.int32)
-    return TwoLevelResult(ok, ov, n_out, n_in)
+    return TwoLevelResult(ok, ov, n_out, n_in, n_evict)
+
+
+def n_distinct_keys(keys: jnp.ndarray) -> jnp.ndarray:
+    """Number of distinct non-EMPTY keys in a stream (telemetry helper).
+
+    Counts segment starts in sorted order — the set-size counterpart to the
+    pair-count ``n_out`` (which may exceed it; see TwoLevelResult).  No
+    sentinel remapping: every key value except EMPTY_KEY itself is legal,
+    including INT32_MAX.
+    """
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((), jnp.int32)
+    sk = jnp.sort(keys)
+    starts = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    return jnp.sum(starts & (sk != EMPTY_KEY)).astype(jnp.int32)
 
 
 def reduction_ratio(res: TwoLevelResult) -> jnp.ndarray:

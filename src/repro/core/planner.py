@@ -85,6 +85,7 @@ class ExchangePlan:
     predicted_root_reduction: float  # traffic cut on the scarcest level vs flat
     predicted_kv_reduction: float  # Eq. 3 prediction for the KV combine
     # multi-job analytics (DESIGN.md §3); defaults keep single-job callers total
+    op: str = "sum"  # AggOp the job's dataplane cascade runs (aggops registry)
     job_id: int = -1
     fanins: tuple[int, ...] = ()  # leaf -> root, matches (leaf_axis, *upper_axes)
     level_bytes: tuple[float, ...] = ()  # modeled bytes per level, same order
@@ -143,6 +144,7 @@ def plan_grad_exchange(
     k_fraction: float = 0.01,
     combiner_budget_pairs: int = 1 << 20,
     reduce_axes: Sequence[str] = ("data", "pod"),
+    op: str = "sum",
 ) -> ExchangePlan:
     """Build the exchange plan for gradient aggregation on this mesh."""
     tree = tree_lib.from_mesh(mesh, reduce_axes=reduce_axes)
@@ -177,6 +179,7 @@ def plan_grad_exchange(
         fpe_capacity=combiner_budget_pairs,
         predicted_root_reduction=root_red,
         predicted_kv_reduction=kv_red,
+        op=op,
         fanins=fanins,
         level_bytes=lvl_bytes,
         scarce_link_bytes=scarce_bytes,
@@ -519,8 +522,8 @@ class JobScheduler:
             mode=mode, leaf_axis=axes[0], upper_axes=axes[1:],
             k_fraction=k_fraction, fpe_capacity=self.budget,
             predicted_root_reduction=root_red, predicted_kv_reduction=0.0,
-            job_id=req.job_id, fanins=fanins, level_bytes=lvl_bytes,
-            scarce_link_bytes=scarce_bytes,
+            op=req.op, job_id=req.job_id, fanins=fanins,
+            level_bytes=lvl_bytes, scarce_link_bytes=scarce_bytes,
         )
         return JobPlan(request=req, tree=tree, configure=cfg, exchange=plan,
                        bytes_by_axis=dict(by_axis), flat_scarce_bytes=flat,

@@ -23,6 +23,14 @@ TPU adaptation of the paper's front-end processing engine (§4.2.4):
 
 Semantics are bit-identical to ``repro.core.kvagg.fpe_aggregate`` (the
 pure-jnp oracle re-exported via ``ref.py``).
+
+Op semantics come from the ``core.aggops`` registry (DESIGN.md §6): the
+``op`` string is resolved to its ``combine`` at trace time, so each
+compiled kernel stays specialized to one op — exactly like the string
+dispatch it replaces, but with one source of truth.  Multi-lane ops
+(``mean``'s paired (sum, count) lanes) are handled in the wrapper: eviction
+decisions are key-driven, so running the single-lane kernel once per lane
+with the same key stream yields bit-aligned tables and eviction streams.
 """
 
 from __future__ import annotations
@@ -34,6 +42,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import aggops
+
 EMPTY_KEY = -1  # plain int so kernels inline it as a literal
 _HASH_MULT = 0x9E3779B1
 
@@ -42,16 +52,6 @@ def _hash(k: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
     h = k.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)
     h = h ^ (h >> jnp.uint32(15))
     return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
-
-
-def _combine(op, a, b):
-    if op == "sum":
-        return a + b
-    if op == "max":
-        return jnp.maximum(a, b)
-    if op == "min":
-        return jnp.minimum(a, b)
-    raise ValueError(op)
 
 
 def _fpe_kernel(
@@ -94,8 +94,8 @@ def _fpe_kernel(
         any_empty = jnp.any(empty) & ~is_pad
         empty_idx = jnp.argmax(empty.astype(jnp.int32))  # first empty way
 
-        # hit: aggregate into the matching way
-        agg_v = jnp.where(hit, _combine(op, row_v, v), row_v)
+        # hit: aggregate into the matching way (op resolved at trace time)
+        agg_v = jnp.where(hit, aggops.get(op).combine(row_v, v), row_v)
 
         # miss+empty: insert at first empty way
         at_empty = lane == empty_idx
@@ -147,12 +147,23 @@ def fpe_aggregate_pallas(
 ):
     """Run the FPE kernel over a KV stream.
 
-    Returns (table_keys [capacity], table_values [capacity],
-             evict_keys [n], evict_values [n]) — same contract as
-    ``core.kvagg.fpe_aggregate``.
+    Returns (table_keys [capacity], table_values [capacity, *lanes],
+             evict_keys [n], evict_values [n, *lanes]) — same contract as
+    ``core.kvagg.fpe_aggregate``.  Values with a trailing lane dim (multi-
+    lane carried ops, e.g. ``mean``) run the kernel once per lane over the
+    shared key stream; key outputs are lane-invariant by construction.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if values.ndim == 2:
+        lanes = values.shape[1]
+        tks, tvs, eks, evs = zip(*(
+            fpe_aggregate_pallas(
+                keys, values[:, l], capacity=capacity, ways=ways, op=op,
+                block_n=block_n, interpret=interpret)
+            for l in range(lanes)))
+        return (tks[0], jnp.stack(tvs, axis=-1), eks[0],
+                jnp.stack(evs, axis=-1))
     n = keys.shape[0]
     ways = max(1, min(ways, capacity))
     n_buckets = max(1, capacity // ways)

@@ -2,8 +2,14 @@
 
 ``two_level_aggregate`` is the full SwitchAgg node: the Pallas FPE kernel
 (VMEM hash table, evict-on-collision) feeding a BPE bulk combine
-(sort + segment-sum over the eviction stream — the large/slow memory level,
-overlapped with the next FPE block on real hardware).
+(sort + segment reduce over the eviction stream — the large/slow memory
+level, overlapped with the next FPE block on real hardware).
+
+Op semantics resolve through the ``core.aggops`` registry (DESIGN.md §6);
+any registered op — including multi-lane carried ops like ``mean`` — works
+here, and ``n_out`` follows the forwarded-pairs traffic invariant
+documented on ``core.kvagg.TwoLevelResult``.  Multi-level plans run via
+``core.dataplane.run_cascade(backend="pallas")``.
 """
 
 from __future__ import annotations
@@ -26,6 +32,7 @@ class TwoLevelOut(NamedTuple):
     out_values: jnp.ndarray
     n_out: jnp.ndarray
     n_in: jnp.ndarray
+    n_evict: jnp.ndarray
 
 
 @functools.partial(
@@ -42,21 +49,17 @@ def two_level_aggregate(
     bpe: bool = True,
     interpret: bool | None = None,
 ) -> TwoLevelOut:
-    """SwitchAgg node with the Pallas FPE (kernel) + BPE (bulk combine)."""
+    """SwitchAgg node with the Pallas FPE (kernel) + BPE (bulk combine).
+
+    Node assembly/accounting delegates to ``kvagg.assemble_node`` — the one
+    copy of the policy shared with the jnp node and the cascade executor.
+    """
     tk, tv, ek, ev = fpe_aggregate_pallas(
         keys, values, capacity=capacity, ways=ways, op=op, block_n=block_n,
         interpret=interpret,
     )
-    if bpe:
-        b = _kvagg.sorted_combine(ek, ev, op=op)
-        ok = jnp.concatenate([tk, b.unique_keys])
-        ov = jnp.concatenate([tv, b.combined_values])
-    else:
-        ok = jnp.concatenate([tk, ek])
-        ov = jnp.concatenate([tv, ev])
-    n_out = jnp.sum(ok != EMPTY_KEY).astype(jnp.int32)
-    n_in = jnp.sum(keys != EMPTY_KEY).astype(jnp.int32)
-    return TwoLevelOut(ok, ov, n_out, n_in)
+    return TwoLevelOut(*_kvagg.assemble_node(keys, tk, tv, ek, ev,
+                                             op=op, bpe=bpe))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk", "block_rows", "interpret"))

@@ -2,6 +2,11 @@
 
 Each kernel in this package has an exact reference here; kernel tests sweep
 shapes/dtypes and assert_allclose kernel-vs-ref (interpret=True on CPU).
+
+Op semantics are NOT defined here: the ``repro.core.aggops`` registry
+(DESIGN.md §6) is the one source of truth for combine/identity/segment
+reductions, re-exported below so kernel callers and tests resolve ops
+through the same table the kernels compile against.
 """
 
 from __future__ import annotations
@@ -9,7 +14,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import aggops
 from repro.core import kvagg as _kvagg
+from repro.core.aggops import AggOp, get as get_aggop, names as aggop_names
 
 EMPTY_KEY = _kvagg.EMPTY_KEY
 

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 import repro.configs as configs
 from repro.configs.base import shape_by_name
-from repro.core import planner
+from repro.core import dataplane, planner
 from repro.core.collectives import GradAggMode
 from repro.launch import hlo_analysis as ha
 from repro.launch import hlo_cost
@@ -62,11 +62,24 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     # modeled per-level traffic (fpe=0 keeps the exact sorted-combine node).
     # Only train cells run an exchange; serve cells carry no plan.
     grad_plan = None
+    dp_report = None
     if shape.kind == "train":
         grad_plan = planner.plan_grad_exchange(
             mesh, mode=GradAggMode(mode), grad_bytes=4 * cfg.param_count(),
             k_fraction=k_fraction, combiner_budget_pairs=0,
             reduce_axes=("data", "pod"))
+        # dataplane validation: run a small synthetic KV stream through the
+        # plan's cascade and record per-level predicted (Eq. 3) vs simulated
+        # reduction ratio (DESIGN.md §6).  A bounded sibling plan shows the
+        # capacity-limited regime next to the plan's exact (capacity=0) one.
+        cascade = dataplane.cascade_from_exchange_plan(grad_plan, op="sum")
+        dp_report = dataplane.simulate_plan(
+            cascade, data_amount=4096, key_variety=512)
+        bounded = dataplane.CascadePlan(
+            op="sum", levels=tuple(
+                dataplane.LevelSpec(capacity=128) for _ in cascade.levels))
+        dp_report["bounded_c128"] = dataplane.simulate_plan(
+            bounded, data_amount=4096, key_variety=512)["levels"]
     meta = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
             "mode": mode, "accum": prof.accum_steps, "fsdp": prof.fsdp,
             "quant_opt": prof.quantized_opt, "seq_shard": seq_shard,
@@ -75,12 +88,14 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 "leaf_axis": grad_plan.leaf_axis,
                 "upper_axes": list(grad_plan.upper_axes),
                 "fanins": list(grad_plan.fanins),
+                "op": grad_plan.op,
                 "k_fraction": grad_plan.k_fraction,
                 "fpe_capacity": grad_plan.fpe_capacity,
                 "level_bytes": [round(b, 1) for b in grad_plan.level_bytes],
                 "scarce_link_bytes": round(grad_plan.scarce_link_bytes, 1),
                 "predicted_root_reduction": round(
                     grad_plan.predicted_root_reduction, 4),
+                "dataplane": dp_report,
             }}
 
     manual = post_accum or mode == "tree_compress"
@@ -292,6 +307,12 @@ def main():
                             f" plan=[{order}] "
                             f"scarce={pl['scarce_link_bytes']/2**20:.1f}MiB "
                             f"(cut {pl['predicted_root_reduction']:.1%})")
+                        dp = pl.get("dataplane")
+                        if dp:
+                            lv = "/".join(
+                                f"{l['reduction']:.2f}~{l['predicted_reduction']:.2f}"
+                                for l in dp["levels"])
+                            plan_txt += f" dp[sim~eq3]={lv}"
                     print(f"OK {label}: compile={r['compile_s']}s "
                           f"mem/dev={r['memory']['total_per_device']/2**30:.2f}GiB "
                           f"compute={rf['compute_s']:.4f}s mem={rf['memory_s']:.4f}s "

@@ -87,7 +87,10 @@ def build_compressed_train_step(
 
     ``plan`` (a planner ``ExchangePlan``) overrides mode / k_fraction /
     fpe_capacity with the controller's decision for this job (DESIGN.md §3);
-    its level ordering must use the profile's dp axes."""
+    its level ordering must use the profile's dp axes.  Compressed plans run
+    the multi-level cascade dataplane across the upper hops, the plan's
+    combiner budget partitioned per level (DESIGN.md §6)."""
+    cascade = None
     if plan is not None:
         mode = plan.mode
         k_fraction = plan.k_fraction
@@ -96,6 +99,7 @@ def build_compressed_train_step(
         assert set(plan_axes) == set(prof.dp_axes), (
             f"plan axes {plan_axes} != profile dp axes {prof.dp_axes}")
         prof = dataclasses.replace(prof, dp_axes=plan_axes)
+        cascade = coll.cascade_for_plan(plan)
     # model math sees a single logical worker (dp manual, tp via GSPMD auto)
     model = LMModel(
         cfg,
@@ -179,7 +183,7 @@ def build_compressed_train_step(
         new_grads, new_res = coll.exchange_in_shardmap(
             grads, xmode, leaf_axis, upper_axes,
             k_fraction=k_fraction, fpe_capacity=fpe_capacity,
-            residuals=residuals,
+            residuals=residuals, cascade=cascade,
         )
         if wire_dtype is not None:
             new_grads = jax.tree.map(lambda g: g.astype(jnp.float32), new_grads)

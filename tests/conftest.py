@@ -42,18 +42,24 @@ def rng():
 
 
 def dict_aggregate(keys, values, op="sum"):
-    """Brute-force python oracle: combine values of equal keys."""
-    out = {}
+    """Brute-force python oracle: group values by key, reduce with ``op``.
+
+    Covers every registered AggOp (repro.core.aggops) so cascade tests can
+    compare any op's *finalized* output against first-principles semantics.
+    """
+    groups = {}
     for k, v in zip(np.asarray(keys).tolist(), np.asarray(values).tolist()):
         if k == -1:
             continue
-        if k in out:
-            if op == "sum":
-                out[k] += v
-            elif op == "max":
-                out[k] = max(out[k], v)
-            else:
-                out[k] = min(out[k], v)
-        else:
-            out[k] = v
-    return out
+        groups.setdefault(k, []).append(v)
+    reducers = {
+        "sum": np.sum,
+        "max": np.max,
+        "min": np.min,
+        "count": len,
+        "mean": np.mean,
+        "logsumexp": lambda xs: float(
+            np.logaddexp.reduce(np.asarray(xs, np.float64))),
+    }
+    f = reducers[op]
+    return {k: f(vs) for k, vs in groups.items()}

@@ -1,0 +1,149 @@
+"""core.aggops — the AggOp registry, the one source of op semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import dict_aggregate
+from repro.core import aggops, kvagg
+
+EMPTY = int(kvagg.EMPTY_KEY)
+
+
+# --------------------------------------------------------------------------
+# registry surface
+# --------------------------------------------------------------------------
+
+
+def test_registry_contains_paper_and_extended_ops():
+    assert set(aggops.names()) >= {"sum", "max", "min", "count", "mean",
+                                   "logsumexp"}
+
+
+def test_unknown_op_raises_with_known_names():
+    with pytest.raises(ValueError, match="logsumexp"):
+        aggops.get("median")
+
+
+def test_get_returns_registered_instance():
+    assert aggops.get("sum") is aggops.SUM
+    assert aggops.get("mean").lanes == 2
+
+
+@pytest.mark.parametrize("name", ["sum", "max", "min", "count", "logsumexp"])
+def test_combine_associative_commutative_samples(name, rng):
+    op = aggops.get(name)
+    a, b, c = (jnp.asarray(rng.standard_normal(16).astype(np.float32))
+               for _ in range(3))
+    left = op.combine(op.combine(a, b), c)
+    right = op.combine(a, op.combine(b, c))
+    np.testing.assert_allclose(left, right, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(op.combine(a, b), op.combine(b, a))
+
+
+# --------------------------------------------------------------------------
+# dtype-aware identities — the ±inf-for-integers bugfix
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int16])
+def test_minmax_identity_uses_integer_bounds(dtype):
+    info = jnp.iinfo(dtype)
+    assert int(aggops.get("max").identity(dtype)) == info.min
+    assert int(aggops.get("min").identity(dtype)) == info.max
+    assert aggops.get("max").identity(dtype).dtype == jnp.dtype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_minmax_identity_uses_float_bounds(dtype):
+    info = jnp.finfo(dtype)
+    assert float(aggops.get("max").identity(dtype)) == float(info.min)
+    assert float(aggops.get("min").identity(dtype)) == float(info.max)
+
+
+def test_identity_neutral_under_combine():
+    for name in ("sum", "max", "min", "logsumexp"):
+        op = aggops.get(name)
+        x = jnp.asarray([-3.5, 0.0, 7.25], jnp.float32)
+        np.testing.assert_allclose(op.combine(x, op.identity(jnp.float32)), x)
+    for name in ("sum", "max", "min"):
+        op = aggops.get(name)
+        xi = jnp.asarray([-3, 0, 7], jnp.int32)
+        np.testing.assert_array_equal(op.combine(xi, op.identity(jnp.int32)), xi)
+
+
+def test_int32_max_min_sorted_combine_regression(rng):
+    """REGRESSION: ±inf identities corrupted int32 max/min aggregation."""
+    keys = jnp.asarray(rng.integers(0, 8, 64).astype(np.int32))
+    vals = jnp.asarray(rng.integers(-1000, 1000, 64).astype(np.int32))
+    for op in ("max", "min"):
+        res = kvagg.sorted_combine(keys, vals, op=op)
+        assert res.combined_values.dtype == jnp.int32
+        got = dict_aggregate(res.unique_keys, res.combined_values, op=op)
+        want = dict_aggregate(keys, vals, op=op)
+        assert got == want
+        # padding slots hold the dtype-aware identity, not cast garbage
+        nu = int(res.n_unique)
+        pad_vals = np.asarray(res.combined_values)[nu:]
+        bound = jnp.iinfo(jnp.int32).min if op == "max" else jnp.iinfo(jnp.int32).max
+        assert np.all(pad_vals == int(bound))
+
+
+def test_int32_max_min_two_level_regression(rng):
+    keys = jnp.asarray(rng.integers(0, 32, 256).astype(np.int32))
+    vals = jnp.asarray(rng.integers(-1000, 1000, 256).astype(np.int32))
+    for op in ("max", "min"):
+        res = kvagg.two_level_aggregate(keys, vals, capacity=8, ways=2, op=op)
+        got = dict_aggregate(res.out_keys, res.out_values, op=op)
+        want = dict_aggregate(keys, vals, op=op)
+        assert got == want
+
+
+# --------------------------------------------------------------------------
+# prepare / finalize (carried representations)
+# --------------------------------------------------------------------------
+
+
+def test_count_prepare_maps_records_to_ones(rng):
+    v = jnp.asarray(rng.standard_normal(10).astype(np.float32))
+    carried = aggops.get("count").prepare_values(v)
+    assert carried.dtype == jnp.int32
+    np.testing.assert_array_equal(carried, np.ones(10, np.int32))
+
+
+def test_mean_prepare_finalize_roundtrip(rng):
+    v = jnp.asarray(rng.standard_normal(10).astype(np.float32))
+    op = aggops.get("mean")
+    carried = op.prepare_values(v)
+    assert carried.shape == (10, 2)
+    np.testing.assert_allclose(carried[:, 0], v)
+    np.testing.assert_allclose(carried[:, 1], 1.0)
+    np.testing.assert_allclose(op.finalize_values(carried), v, rtol=1e-6)
+
+
+def test_mean_finalize_zero_count_is_zero_not_nan():
+    out = aggops.get("mean").finalize_values(jnp.zeros((4, 2), jnp.float32))
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_array_equal(out, 0.0)
+
+
+def test_mean_of_int_values_is_fractional():
+    keys = jnp.asarray([7, 7, 7], jnp.int32)
+    vals = jnp.asarray([1, 2, 2], jnp.int32)
+    op = aggops.get("mean")
+    res = kvagg.sorted_combine(keys, op.prepare_values(vals), op="mean")
+    out = op.finalize_values(res.combined_values)
+    np.testing.assert_allclose(np.asarray(out)[0], 5.0 / 3.0, rtol=1e-6)
+
+
+def test_logsumexp_matches_numpy(rng):
+    keys = jnp.asarray(rng.integers(0, 6, 64).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal(64).astype(np.float32) * 10)
+    op = aggops.get("logsumexp")
+    res = kvagg.sorted_combine(keys, op.prepare_values(vals), op="logsumexp")
+    got = dict_aggregate(res.unique_keys, res.combined_values, op="sum")
+    # grouped logsumexp computed directly on the raw stream
+    want = dict_aggregate(keys, vals, op="logsumexp")
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,293 @@
+"""core.dataplane — the plan-driven multi-level cascade executor."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import dict_aggregate
+from repro.core import aggops, dataplane, kvagg, planner
+from repro.core.dataplane import CascadePlan, LevelSpec
+
+EMPTY = int(kvagg.EMPTY_KEY)
+
+
+def _got(res):
+    keys = np.asarray(res.keys)
+    vals = np.asarray(res.values)
+    return {int(k): float(v) for k, v in zip(keys, vals) if k != EMPTY}
+
+
+# --------------------------------------------------------------------------
+# plan construction
+# --------------------------------------------------------------------------
+
+
+def test_plan_requires_levels_and_known_op():
+    with pytest.raises(ValueError):
+        CascadePlan(op="sum", levels=())
+    with pytest.raises(ValueError):
+        CascadePlan(op="nope", levels=(LevelSpec(4),))
+
+
+def test_plan_from_configure_splits_budget_per_level():
+    msg = planner.ConfigureMsg(tree_id=0, level_axes=("data", "pod"),
+                               fanins=(16, 2), fpe_capacity=1024, op="mean")
+    plan = dataplane.plan_from_configure(msg)
+    assert plan.op == "mean"
+    assert plan.capacities == (512, 512)
+
+
+def test_plan_from_scheduler_jobplan_end_to_end(rng):
+    """Acceptance: a JobScheduler plan executes through the dataplane."""
+    topo = planner.Topology.production()
+    sched = planner.JobScheduler(topo, combiner_budget_pairs=64)
+    jp = sched.admit(planner.LaunchRequest(
+        job_id=0, n_workers=32, expected_pairs=1024, key_variety=128,
+        op="mean", grad_bytes=0))
+    plan = dataplane.plan_from_configure(jp)
+    assert len(plan.levels) == len(jp.tree.levels)
+    keys = jnp.asarray(rng.integers(0, 128, 2048).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal(2048).astype(np.float32))
+    res = dataplane.run_cascade(keys, vals, plan)
+    got = _got(res)
+    want = dict_aggregate(keys, vals, op="mean")
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-5)
+    tele = dataplane.telemetry(res, plan)
+    assert len(tele["levels"]) == len(plan.levels)
+    assert tele["n_in"] == 2048
+    assert all(l["records_out"] <= l["records_in"] for l in tele["levels"])
+
+
+def test_cascade_from_exchange_plan_partitions_upper_hops():
+    xp = planner.ExchangePlan(
+        mode=planner.GradAggMode.TREE_COMPRESS, leaf_axis="data",
+        upper_axes=("pod", "dcn"), k_fraction=0.01, fpe_capacity=100,
+        predicted_root_reduction=0.0, predicted_kv_reduction=0.0)
+    plan = dataplane.cascade_from_exchange_plan(xp)
+    assert plan.capacities == (50, 50)
+    assert plan.op == "sum"
+
+
+def test_even_and_uniform_level_builders():
+    assert dataplane.even_split_levels(100, 2)[0].capacity == 50
+    assert dataplane.even_split_levels(1, 4)[0].capacity == 1  # >= 1 floor
+    assert dataplane.even_split_levels(0, 3) == (dataplane.LevelSpec(0),) * 3
+    assert dataplane.uniform_levels(64, 3) == (dataplane.LevelSpec(64),) * 3
+
+
+def test_non_sum_exchange_plan_raises_not_silently_sums():
+    """REGRESSION: a non-sum plan must trip the sum-only exchange guard,
+    not execute as SUM (workers-count-factor wrong gradients)."""
+    from repro.core import collectives as coll
+
+    xp = planner.ExchangePlan(
+        mode=planner.GradAggMode.TREE_COMPRESS, leaf_axis="data",
+        upper_axes=("pod",), k_fraction=0.01, fpe_capacity=16,
+        predicted_root_reduction=0.0, predicted_kv_reduction=0.0, op="mean")
+    cascade = dataplane.cascade_from_exchange_plan(xp)
+    assert cascade.op == "mean"  # plan.op flows through...
+    with pytest.raises(ValueError, match="sum cascade"):
+        # ...and the dataplane-level guard rejects it before any math runs
+        coll.tree_compress_allreduce(
+            jnp.zeros((8,)), jnp.zeros((8,)), "data", ("pod",), k=2,
+            cascade=cascade)
+
+
+# --------------------------------------------------------------------------
+# cascade exactness (the hypothesis property tests over arbitrary level /
+# capacity splits live in tests/test_dataplane_properties.py so THIS module
+# runs everywhere — hypothesis is an optional dev dep)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", sorted(aggops.names()))
+@pytest.mark.parametrize("caps", [(1,), (4, 16), (64, 1, 4)])
+def test_cascade_equals_grouped_combine_fixed_cases(op, caps, rng):
+    keys = jnp.asarray(rng.integers(0, 48, size=200).astype(np.int32))
+    vals = jnp.asarray(rng.integers(-8, 8, size=200).astype(np.float32))
+    plan = CascadePlan(op=op, levels=tuple(LevelSpec(c) for c in caps))
+    res = dataplane.run_cascade(keys, vals, plan)
+    got = _got(res)
+    want = dict_aggregate(keys, vals, op=op)
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-5)
+    li, lo = np.asarray(res.level_in), np.asarray(res.level_out)
+    assert li[0] == 200
+    np.testing.assert_array_equal(li[1:], lo[:-1])
+    assert int(res.n_out) == lo[-1]
+
+
+def test_exact_capacity_zero_level_is_sorted_combine(rng):
+    keys = jnp.asarray(rng.integers(0, 16, 128).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal(128).astype(np.float32))
+    plan = CascadePlan(op="sum", levels=(LevelSpec(0),))
+    res = dataplane.run_cascade(keys, vals, plan)
+    assert res.keys.shape == keys.shape  # exact node: packed [n], no flush
+    got = _got(res)
+    want = dict_aggregate(keys, vals)
+    assert got.keys() == want.keys()
+    assert int(res.level_evict[0]) == 0
+
+
+# --------------------------------------------------------------------------
+# node-level invariants (kvagg) the cascade builds on — kept here, NOT in
+# the hypothesis-gated test_kvagg_core.py, so they run everywhere
+# --------------------------------------------------------------------------
+
+
+def test_bpe_false_out_counts_forwarded_pairs_not_distinct_keys():
+    """INVARIANT (documented on TwoLevelResult): with bpe=False the output
+    is a traffic stream — re-evicted keys appear multiple times and n_out
+    counts forwarded PAIRS (what a downstream link carries), which can
+    exceed the number of distinct keys; conservation still holds."""
+    # ways=1, capacity=1: keys 5/9 alternate, every arrival re-evicts
+    keys = jnp.asarray([5, 9, 5, 9, 5, 9], dtype=jnp.int32)
+    vals = jnp.ones((6,), jnp.float32)
+    res = kvagg.two_level_aggregate(keys, vals, capacity=1, ways=1, bpe=False)
+    n_out = int(res.n_out)
+    n_distinct = int(kvagg.n_distinct_keys(res.out_keys))
+    assert n_distinct == 2
+    assert n_out == 6  # 5 evictions + 1 resident pair, duplicates included
+    assert n_out > n_distinct
+    # conservation: grouping the duplicated stream is still exact
+    got = dict_aggregate(res.out_keys, res.out_values)
+    assert got == dict_aggregate(keys, vals)
+    # the BPE digests the duplicates: n_out becomes <= capacity + distinct
+    res_bpe = kvagg.two_level_aggregate(keys, vals, capacity=1, ways=1, bpe=True)
+    assert int(res_bpe.n_out) <= 1 + n_distinct
+
+
+def test_n_distinct_keys_handles_int32_max_and_padding():
+    """REGRESSION: INT32_MAX is a legal key, not a sentinel."""
+    keys = jnp.asarray([2147483647, 5, EMPTY, 5, 2147483647], jnp.int32)
+    assert int(kvagg.n_distinct_keys(keys)) == 2
+    assert int(kvagg.n_distinct_keys(jnp.full((4,), EMPTY, jnp.int32))) == 0
+
+
+def test_sorted_combine_int32_max_key_with_padding():
+    """REGRESSION: the old is-pad sentinel remap to INT32_MAX merged a real
+    INT32_MAX key into the padding segment, silently dropping its value."""
+    keys = jnp.asarray([2147483647, EMPTY, 5], jnp.int32)
+    vals = jnp.asarray([-5.0, 0.0, 2.0], jnp.float32)
+    res = kvagg.sorted_combine(keys, vals)
+    assert int(res.n_unique) == 2
+    got = dict_aggregate(res.unique_keys, res.combined_values)
+    assert got == {5: 2.0, 2147483647: -5.0}
+    # and through a full bounded cascade
+    plan = CascadePlan(op="sum", levels=(LevelSpec(1, ways=1),))
+    cres = dataplane.run_cascade(keys, vals, plan)
+    assert _got(cres) == {5: 2.0, 2147483647: -5.0}
+
+
+def test_kv_tree_op_conflicting_with_plan_raises():
+    """REGRESSION: an explicit op that contradicts plan.op must raise, not
+    silently run the plan's op."""
+    from repro.core import collectives as coll
+
+    plan = CascadePlan(op="sum", levels=(LevelSpec(4),))
+    with pytest.raises(ValueError, match="conflicts with plan.op"):
+        coll.kv_tree_aggregate(jnp.zeros((8,), jnp.int32),
+                               jnp.zeros((8,), jnp.float32),
+                               ("data",), fpe_capacity=4, op="max", plan=plan)
+
+
+def test_two_level_nodes_report_evictions():
+    keys = jnp.asarray([5, 9, 5, 9], jnp.int32)
+    vals = jnp.ones((4,), jnp.float32)
+    res = kvagg.two_level_aggregate(keys, vals, capacity=1, ways=1)
+    assert int(res.n_evict) == 3
+    from repro.kernels import ops as kops
+
+    pres = kops.two_level_aggregate(keys, vals, capacity=1, ways=1,
+                                    block_n=4, interpret=True)
+    assert int(pres.n_evict) == 3
+
+
+def test_fpe_multilane_values_share_eviction_pattern(rng):
+    """Carried lane dims (mean's (sum,count)) ride the key-driven engine."""
+    keys = jnp.asarray(rng.integers(0, 24, 128).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal(128).astype(np.float32))
+    lanes = jnp.stack([vals, jnp.ones_like(vals)], axis=-1)
+    r1 = kvagg.fpe_aggregate(keys, vals, capacity=8, ways=2)
+    r2 = kvagg.fpe_aggregate(keys, lanes, capacity=8, ways=2)
+    np.testing.assert_array_equal(r2.table_keys, r1.table_keys)
+    np.testing.assert_array_equal(r2.evict_keys, r1.evict_keys)
+    np.testing.assert_allclose(r2.table_values[:, 0], r1.table_values)
+    np.testing.assert_allclose(r2.evict_values[:, 0], r1.evict_values)
+    # lane 1 counts multiplicity: table + evictions conserve the 128 records
+    total = float(jnp.sum(jnp.where(r2.table_keys != EMPTY,
+                                    r2.table_values[:, 1], 0.0))
+                  + jnp.sum(jnp.where(r2.evict_keys != EMPTY,
+                                      r2.evict_values[:, 1], 0.0)))
+    assert total == 128.0
+
+
+# --------------------------------------------------------------------------
+# pallas backend parity (interpret mode on CPU)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", sorted(aggops.names()))
+def test_pallas_backend_matches_jnp(op, rng):
+    keys = jnp.asarray(rng.integers(0, 40, 256).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+    plan = CascadePlan(op=op, levels=(LevelSpec(16), LevelSpec(8)))
+    a = dataplane.run_cascade(keys, vals, plan, backend="jnp")
+    b = dataplane.run_cascade(keys, vals, plan, backend="pallas",
+                              block_n=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a.keys), np.asarray(b.keys))
+    np.testing.assert_allclose(np.asarray(a.values), np.asarray(b.values),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.level_evict),
+                                  np.asarray(b.level_evict))
+
+
+def test_unknown_backend_raises(rng):
+    keys = jnp.zeros((8,), jnp.int32)
+    vals = jnp.zeros((8,), jnp.float32)
+    with pytest.raises(ValueError, match="backend"):
+        dataplane.run_level(keys, vals, LevelSpec(4), "sum", backend="tpu9000")
+
+
+# --------------------------------------------------------------------------
+# telemetry & prediction
+# --------------------------------------------------------------------------
+
+
+def test_reduction_helpers_and_telemetry(rng):
+    keys = jnp.asarray(rng.integers(0, 64, 1024).astype(np.int32))
+    vals = jnp.ones((1024,), jnp.float32)
+    plan = CascadePlan(op="sum", levels=(LevelSpec(32), LevelSpec(32)))
+    res = dataplane.run_cascade(keys, vals, plan)
+    lr = np.asarray(dataplane.level_reductions(res))
+    assert lr.shape == (2,)
+    e2e = float(dataplane.end_to_end_reduction(res))
+    assert 0.0 <= e2e <= 1.0
+    tele = dataplane.telemetry(res, plan)
+    assert tele["end_to_end_reduction"] == pytest.approx(e2e, abs=1e-3)
+    for lvl, r in zip(tele["levels"], lr):
+        assert lvl["reduction"] == pytest.approx(float(r), abs=1e-3)
+
+
+def test_predicted_level_reductions_eq3_regimes():
+    # N <= C: ideal 1 - N/M at the first hop
+    plan = CascadePlan(op="sum", levels=(LevelSpec(512),))
+    [p] = dataplane.predicted_level_reductions(plan, 4096, 256)
+    assert p == pytest.approx(1 - 256 / 4096)
+    # N > C: bounded by C/N
+    plan = CascadePlan(op="sum", levels=(LevelSpec(64),))
+    [p] = dataplane.predicted_level_reductions(plan, 4096, 256)
+    assert p <= 64 / 256 + 1e-9
+
+
+def test_simulate_plan_report_shape():
+    plan = CascadePlan(op="sum", levels=(LevelSpec(64), LevelSpec(64)))
+    rep = dataplane.simulate_plan(plan, data_amount=1024, key_variety=128)
+    assert len(rep["levels"]) == 2
+    for lvl in rep["levels"]:
+        assert {"records_in", "records_out", "evictions", "reduction",
+                "predicted_reduction"} <= set(lvl)
+    assert rep["n_in"] == 1024

@@ -1,0 +1,72 @@
+"""core.dataplane hypothesis property tests (optional dev dep).
+
+Kept separate from tests/test_dataplane.py so the deterministic executor
+coverage runs on every environment; only THIS module skips without
+hypothesis.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="dev-only dep: pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st
+
+from conftest import dict_aggregate
+from repro.core import aggops, dataplane, kvagg
+from repro.core.dataplane import CascadePlan, LevelSpec
+
+EMPTY = int(kvagg.EMPTY_KEY)
+
+
+def _got(res):
+    keys = np.asarray(res.keys)
+    vals = np.asarray(res.values)
+    return {int(k): float(v) for k, v in zip(keys, vals) if k != EMPTY}
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    variety=st.integers(1, 64),
+    caps=st.lists(st.sampled_from([1, 4, 16, 64]), min_size=1, max_size=4),
+    ways=st.sampled_from([1, 2, 4]),
+    op=st.sampled_from(sorted(aggops.names())),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_cascade_equals_grouped_combine(n, variety, caps, ways, op, seed):
+    """For ANY level count / capacity split and EVERY registered AggOp, the
+    finalized cascade output grouped by key equals the grouped-by-key
+    combine of the raw input."""
+    r = np.random.default_rng(seed)
+    keys = jnp.asarray(r.integers(0, variety, size=n).astype(np.int32))
+    vals = jnp.asarray(r.integers(-8, 8, size=n).astype(np.float32))
+    plan = CascadePlan(op=op, levels=tuple(LevelSpec(c, ways=ways) for c in caps))
+    res = dataplane.run_cascade(keys, vals, plan)
+    got = _got(res)
+    want = dict_aggregate(keys, vals, op=op)
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-5)
+    # telemetry invariants: levels chain, evictions bounded by traffic
+    li = np.asarray(res.level_in)
+    lo = np.asarray(res.level_out)
+    le = np.asarray(res.level_evict)
+    assert li[0] == n
+    np.testing.assert_array_equal(li[1:], lo[:-1])
+    assert int(res.n_out) == lo[-1]
+    assert np.all(le <= li) and np.all(le >= 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_deeper_cascade_never_loses_data(seed):
+    r = np.random.default_rng(seed)
+    keys = jnp.asarray(r.integers(0, 100, size=256).astype(np.int32))
+    vals = jnp.asarray(r.standard_normal(256).astype(np.float32))
+    want = dict_aggregate(keys, vals)
+    for depth in (1, 2, 3):
+        plan = CascadePlan(op="sum", levels=(LevelSpec(16),) * depth)
+        got = _got(dataplane.run_cascade(keys, vals, plan))
+        assert got.keys() == want.keys()
+        for k in want:
+            np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-4)
