@@ -1,0 +1,160 @@
+"""JCT network-sim benchmark: fanout × loss-rate × key-variety sweep
+(DESIGN.md §7).
+
+For each configuration the packet-level simulator (``repro.net.sim``) runs
+the Zipf word-count job twice on the same emulated 10 GbE network — with
+the in-network cascade and as the host-only baseline — and records the
+paper's Fig. 10 metric (JCT with vs without aggregation) plus transport
+telemetry (retransmissions, per-level wire bytes) into a stable JSON
+(``BENCH_jct.json``) CI regenerates every run.
+
+    PYTHONPATH=src python benchmarks/bench_jct.py
+    PYTHONPATH=src python benchmarks/bench_jct.py --smoke \
+        --out benchmarks/out/BENCH_jct.json
+
+``--smoke`` runs one tiny lossy config — the CI job — and cross-checks the
+delivered table against the lossless run so an exactly-once regression
+fails the bench, not just the unit suite.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
+                           "BENCH_jct.json")
+
+
+def run_config(fanins, loss_rate: float, variety: int, *,
+               per_mapper: int = 256, capacity: int = 128, op: str = "sum",
+               records_per_packet: int | None = None, seed: int = 0,
+               check: bool = False) -> dict:
+    """One cell: both JCT runs (switchagg + host-only) on one network."""
+    import math
+
+    from repro.core import dataplane
+    from repro.core import reduction_model as rm
+    from repro.net import sim as netsim, wire
+
+    fanins = tuple(fanins)
+    n = math.prod(fanins) * per_mapper
+    keys = rm.zipf_keys(n, variety, skew=0.99, seed=seed).astype(np.int32)
+    vals = np.ones((n,), np.float32)
+    plan = dataplane.CascadePlan(op=op, levels=tuple(
+        dataplane.LevelSpec(capacity=capacity) for _ in fanins))
+    cfg = netsim.NetConfig(
+        link_gbps=(netsim.TEN_GBE,) * len(fanins),
+        reducer_gbps=netsim.TEN_GBE, loss_rate=loss_rate, seed=seed,
+        records_per_packet=records_per_packet or wire.RECORDS_PER_PACKET)
+    t0 = time.perf_counter()
+    jct = netsim.jct_comparison(keys, vals, fanins=fanins, plan=plan, cfg=cfg)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    sw, _ = jct["_results"]
+    if check:  # exactly-once cross-check vs the lossless network
+        lossless = sw if loss_rate == 0.0 else netsim.simulate_job(
+            keys, vals, fanins=fanins, plan=plan,
+            cfg=dataclasses.replace(cfg, loss_rate=0.0))
+        got = sw.delivered_table()
+        want = lossless.delivered_table()
+        assert got.keys() == want.keys(), "loss changed the delivered key set"
+        for k in want:
+            np.testing.assert_allclose(got[k], want[k], rtol=1e-4,
+                                       err_msg=f"key {k}")
+    return {
+        "fanins": list(fanins),
+        "loss_rate": loss_rate,
+        "key_variety": variety,
+        "per_mapper": per_mapper,
+        "capacity_per_node": capacity,
+        "op": op,
+        "jct_switchagg_s": jct["jct_switchagg_s"],
+        "jct_host_only_s": jct["jct_host_only_s"],
+        "jct_saved": round(jct["jct_saved"], 4),
+        "reducer_traffic_cut": round(jct["reduction"], 4),
+        "retransmissions": sw.retransmissions,
+        "packets_dropped": sw.packets_dropped,
+        "scarce_wire_bytes": sw.link_stats.get(
+            "reducer", {}).get("bytes", 0),
+        "wall_us": round(wall_us, 1),
+    }
+
+
+def sweep(*, fanouts, loss_rates, varieties, per_mapper: int = 256,
+          capacity: int = 128, records_per_packet: int | None = None,
+          check: bool = False) -> list[dict]:
+    rows = []
+    for fanins in fanouts:
+        for loss in loss_rates:
+            for variety in varieties:
+                rows.append(run_config(
+                    fanins, loss, variety, per_mapper=per_mapper,
+                    capacity=capacity,
+                    records_per_packet=records_per_packet, check=check))
+    rows.sort(key=lambda r: (r["fanins"], r["loss_rate"], r["key_variety"]))
+    return rows
+
+
+def smoke_rows() -> list[dict]:
+    """One tiny lossy config + exactly-once cross-check (the CI job)."""
+    return sweep(fanouts=[(2, 2)], loss_rates=[0.0, 0.1], varieties=[64],
+                 per_mapper=64, capacity=32, records_per_packet=16,
+                 check=True)
+
+
+def write_out(rows: list[dict], out_path: str) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"bench": "jct", "rows": rows}, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+
+
+def print_rows(rows: list[dict]) -> None:
+    hdr = (f"{'fanins':<8} {'loss':>5} {'N':>6} {'jct_sw_us':>10} "
+           f"{'jct_host_us':>11} {'saved':>6} {'retx':>5} {'us':>9}")
+    print(hdr)
+    for r in rows:
+        fan = "x".join(str(f) for f in r["fanins"])
+        print(f"{fan:<8} {r['loss_rate']:>5.2f} {r['key_variety']:>6} "
+              f"{r['jct_switchagg_s']*1e6:>10.1f} "
+              f"{r['jct_host_only_s']*1e6:>11.1f} "
+              f"{r['jct_saved']:>6.1%} {r['retransmissions']:>5} "
+              f"{r['wall_us']:>9.0f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fanouts", default="4x2,8,4x2x2")
+    ap.add_argument("--loss-rates", default="0,0.001,0.01")
+    ap.add_argument("--varieties", default="256,2048")
+    ap.add_argument("--per-mapper", type=int, default=256)
+    ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny lossy config + exactly-once cross-check "
+                         "(the CI job)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows = smoke_rows()
+    else:
+        fanouts = [tuple(int(x) for x in f.split("x"))
+                   for f in args.fanouts.split(",")]
+        rows = sweep(fanouts=fanouts,
+                     loss_rates=[float(x) for x in args.loss_rates.split(",")],
+                     varieties=[int(x) for x in args.varieties.split(",")],
+                     per_mapper=args.per_mapper, capacity=args.capacity)
+    print_rows(rows)
+    write_out(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,18 @@ def main() -> None:
           f"{best['op']}xL{best['levels']}xC{best['capacity_per_node']}"
           f"=R{best['end_to_end_reduction']:.3f}")
 
+    # --- packet-level JCT: switchagg vs host-only (DESIGN.md §7) ----------
+    from benchmarks import bench_jct
+
+    jct_rows = bench_jct.sweep(
+        fanouts=[(4, 2)], loss_rates=(0.0, 0.01), varieties=(512,),
+        per_mapper=128, capacity=128, records_per_packet=32)
+    results["jct"] = jct_rows
+    bench_jct.write_out(jct_rows, os.path.join(out_dir, "BENCH_jct.json"))
+    best_jct = max(jct_rows, key=lambda r: r["jct_saved"])
+    print(f"jct_saved,{best_jct['wall_us']:.0f},"
+          f"{best_jct['jct_saved']:.1%}@loss{best_jct['loss_rate']}")
+
     # --- multi-job congestion-aware controller (DESIGN.md §3) -------------
     from benchmarks import bench_multijob
 

@@ -40,8 +40,10 @@ def main():
         batch_example=data.batch_at(0), params_example=params)
     opt = adamw_init(params, opt_cfg)
 
-    print("training 60 steps...")
-    for i in range(60):
+    # QUICKSTART_STEPS lets the CI smoke test run a short budget
+    n_steps = int(os.environ.get("QUICKSTART_STEPS", "60"))
+    print(f"training {n_steps} steps...")
+    for i in range(n_steps):
         params, opt, m = step_fn(params, opt, data.batch_at(i),
                                  jnp.asarray(i, jnp.int32))
         if i % 10 == 0:

@@ -3,12 +3,15 @@
 Eight mapper workers (devices) emit (word, 1) KV pairs with a Zipf-0.99
 skew (paper §6.1); the aggregation tree combines them hop by hop through
 bounded-memory FPE/BPE nodes.  Reports per-level reduction ratios, traffic
-with vs without in-network aggregation, and a modeled job-completion-time —
+with vs without in-network aggregation, and a packet-level *measured*
+job-completion-time (``repro.net.sim``: MTU framing, per-link
+serialization, go-back-N loss recovery) against the host-only baseline —
 the paper's Fig. 9 / Fig. 10 story end to end.
 
     PYTHONPATH=src python examples/wordcount_switchagg.py
 """
 
+import dataclasses
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -22,9 +25,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import collectives as coll
-from repro.core import planner, reduction_model as rm, tree as tree_lib
-
-PAIR_BYTES = 24  # avg variable-length pair incl. metadata (paper: 16-64B keys)
+from repro.core import dataplane, planner, reduction_model as rm, tree as tree_lib
+from repro.net import sim as netsim
 
 
 def main():
@@ -75,15 +77,38 @@ def main():
     ok = all(abs(got.get(k, 0.0) - c) < 1e-3 for k, c in enumerate(want) if c)
     print(f"word counts exact: {ok}")
 
-    # --- modeled JCT with vs without in-network aggregation (Fig. 10) -----
-    print("\nmodeled job-completion-time (reducer in-link is the bottleneck):")
-    for wl_gb in (2, 4, 8, 16):
-        total_bytes = wl_gb * (1 << 30)
-        link = 10e9 / 8  # 10 Gbps reducer in-link, as the paper's testbed
-        t_no = total_bytes / link
-        t_sw = total_bytes * (1 - root_red) / link
-        print(f"  workload {wl_gb:2d} GB: no-agg {t_no:6.1f}s  "
-              f"switchagg {t_sw:6.1f}s  saved {1 - t_sw/t_no:.0%}")
+    # --- measured JCT with vs without in-network aggregation (Fig. 10) ----
+    # The packet-level simulator streams the same mapper output through the
+    # tree: MTU-framed packets, 10 GbE links (the paper's testbed), line-rate
+    # switch processing, and the reducer in-link as the host-only bottleneck.
+    print("\nsimulated job-completion-time (packet-level, 10 GbE):")
+    cascade = dataplane.plan_from_configure(msg)
+    net_cfg = netsim.NetConfig(link_gbps=(netsim.TEN_GBE,) * len(msg.fanins),
+                               reducer_gbps=netsim.TEN_GBE)
+    jct = netsim.jct_comparison(keys, vals, fanins=msg.fanins, plan=cascade,
+                                cfg=net_cfg, axes=tree.axes)
+    sw, host = jct["switchagg"], jct["host_only"]
+    print(f"  host-only: JCT {jct['jct_host_only_s']*1e3:8.3f} ms  "
+          f"({host['arrived_records']} records over the reducer in-link)")
+    print(f"  switchagg: JCT {jct['jct_switchagg_s']*1e3:8.3f} ms  "
+          f"({sw['arrived_records']} records reach the reducer)")
+    print(f"  JCT saved: {jct['jct_saved']:.0%}  "
+          f"(reducer-traffic cut {jct['reduction']:.0%})")
+    print("  per-level wire bytes (switchagg): "
+          + ", ".join(f"{ax}={sw['link_bytes'][ax]/1024:.1f}KiB"
+                      for ax in (*tree.axes, "reducer")))
+
+    # loss resilience: 1% packet loss, go-back-N recovery, PSN dedupe —
+    # the delivered word counts stay exact while JCT pays for retransmits
+    lossy_cfg = dataclasses.replace(net_cfg, loss_rate=0.01, seed=7)
+    lossy = netsim.simulate_job(keys, vals, fanins=msg.fanins, plan=cascade,
+                                cfg=lossy_cfg, axes=tree.axes)
+    still_exact = all(
+        abs(lossy.delivered_table().get(k, 0.0) - c) < 1e-3
+        for k, c in enumerate(want) if c)
+    print(f"\n1% packet loss: JCT {lossy.jct_s*1e3:.3f} ms "
+          f"({lossy.retransmissions} retransmits, "
+          f"{lossy.packets_dropped} drops), counts exact: {still_exact}")
     ctl.release(1)
 
 

@@ -29,10 +29,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Sequence
+from typing import Iterable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import aggops, kvagg
 from . import reduction_model as rm
@@ -232,6 +233,233 @@ def run_cascade(
         keys=k, values=v, n_in=li[0], n_out=n_out,
         level_in=jnp.stack(li), level_out=jnp.stack(lo),
         level_evict=jnp.stack(le),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streaming (packet-batched) ingest — DESIGN.md §7.
+# ---------------------------------------------------------------------------
+
+_EMPTY = int(EMPTY_KEY)
+
+
+class LevelState:
+    """One cascade node ingesting packet-sized batches (DESIGN.md §7).
+
+    The stateful, eager counterpart of :func:`run_level`: the FPE table
+    persists *across* ``ingest`` calls — exactly a switch whose resident
+    pairs survive between packets and leave only as evictions or in the
+    end-of-task ``flush``.  ``net.sim`` runs one ``LevelState`` per switch;
+    :func:`run_cascade_stream` chains one per level.
+
+    ``batch_pad`` pads every ingest to a fixed length (the packet record
+    capacity) so the underlying jitted FPE compiles once; batches longer
+    than ``batch_pad`` are chunked.  A ``capacity == 0`` spec is the exact
+    unbounded node: it absorbs every record (no evictions) and emits its
+    whole table at ``flush`` — ingests just buffer rows, compacted to the
+    unique-key combine by a bulk ``sorted_combine`` (pow2-padded so the
+    jit compiles once per size bucket) whenever the buffer tops
+    ``COMPACT_THRESHOLD`` and at flush.
+
+    Telemetry mirrors :class:`LevelStats`: ``n_in`` real pairs ingested,
+    ``n_evict`` FPE evictions, ``n_out`` pairs forwarded downstream
+    (per-batch BPE-combined evictions when ``spec.bpe``, plus the flush).
+    """
+
+    #: pending-row count above which the capacity-0 node compacts its
+    #: buffer with one bulk sorted_combine (keeps memory ~O(variety))
+    COMPACT_THRESHOLD = 8192
+
+    def __init__(self, spec: LevelSpec, op: str, *,
+                 batch_pad: int | None = None):
+        self.spec = spec
+        self.op = op
+        self._aggop = aggops.get(op)
+        self.batch_pad = batch_pad
+        self._tk: jnp.ndarray | None = None
+        self._tv: jnp.ndarray | None = None
+        # capacity == 0: buffered rows, bulk-combined lazily — per-record
+        # combine() calls would pay a jax dispatch per record for jnp ops
+        self._exact: list[tuple[np.ndarray, np.ndarray]] | None = (
+            [] if spec.capacity == 0 else None)
+        self._exact_rows = 0
+        self._value_sample: np.ndarray | None = None  # dtype/lane template
+        self.n_in = 0
+        self.n_evict = 0
+        self.n_out = 0
+        self._flushed = False
+
+    def _empty_out(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._value_sample is None:
+            return (np.zeros((0,), np.int32), np.zeros((0,), np.float32))
+        v = self._value_sample
+        return (np.zeros((0,), np.int32),
+                np.zeros((0,) + v.shape, v.dtype))
+
+    def ingest(self, keys, values) -> tuple[np.ndarray, np.ndarray]:
+        """Feed one batch of carried-representation records; returns the
+        packed (keys, values) this node forwards downstream right now."""
+        if self._flushed:
+            raise RuntimeError("LevelState already flushed")
+        keys = np.asarray(keys, np.int32)
+        values = np.asarray(values)
+        if keys.shape[0] != values.shape[0]:
+            raise ValueError("keys/values leading dims differ")
+        if self._value_sample is None and values.shape[0]:
+            self._value_sample = np.zeros(values.shape[1:], values.dtype)
+        real = keys != _EMPTY
+        self.n_in += int(real.sum())
+        if not real.any():
+            return self._empty_out()
+        if self._exact is not None:  # capacity == 0: exact unbounded node
+            self._exact.append((keys[real], values[real]))
+            self._exact_rows += int(real.sum())
+            if self._exact_rows > self.COMPACT_THRESHOLD:
+                self._compact_exact()
+            return self._empty_out()
+        pad = self.batch_pad or keys.shape[0]
+        out_k, out_v = [], []
+        for lo in range(0, keys.shape[0], pad):
+            ek, ev = self._ingest_chunk(keys[lo:lo + pad],
+                                        values[lo:lo + pad], pad)
+            if ek.size:
+                out_k.append(ek)
+                out_v.append(ev)
+        if not out_k:
+            return self._empty_out()
+        fk, fv = np.concatenate(out_k), np.concatenate(out_v)
+        self.n_out += fk.shape[0]
+        return fk, fv
+
+    def _ingest_chunk(self, keys: np.ndarray, values: np.ndarray,
+                      pad: int) -> tuple[np.ndarray, np.ndarray]:
+        if keys.shape[0] < pad:
+            fill = pad - keys.shape[0]
+            keys = np.concatenate(
+                [keys, np.full((fill,), _EMPTY, np.int32)])
+            values = np.concatenate(
+                [values, np.zeros((fill,) + values.shape[1:], values.dtype)])
+        res = kvagg.fpe_aggregate(
+            jnp.asarray(keys), jnp.asarray(values),
+            capacity=self.spec.capacity, ways=self.spec.ways, op=self.op,
+            table_keys=self._tk, table_values=self._tv)
+        self._tk, self._tv = res.table_keys, res.table_values
+        self.n_evict += int(np.sum(np.asarray(res.evict_keys) != _EMPTY))
+        ek, ev = res.evict_keys, res.evict_values
+        if self.spec.bpe:  # combine this packet's evictions (fixed shape)
+            c = kvagg.sorted_combine(ek, ev, op=self.op)
+            ek, ev = c.unique_keys, c.combined_values
+        ek, ev = np.asarray(ek), np.asarray(ev)
+        mask = ek != _EMPTY
+        return ek[mask], ev[mask]
+
+    def _compact_exact(self) -> None:
+        """Collapse the capacity-0 buffer to its unique-key combine (one
+        bulk sorted_combine instead of per-record combine dispatches).
+        Input is padded to a power-of-two length so the jitted combine
+        compiles once per size bucket, not once per compaction."""
+        k = np.concatenate([k for k, _ in self._exact])
+        v = np.concatenate([v for _, v in self._exact])
+        pad = max(1, 1 << (int(k.shape[0]) - 1).bit_length()) - k.shape[0]
+        if pad:
+            k = np.concatenate([k, np.full((pad,), _EMPTY, np.int32)])
+            v = np.concatenate([v, np.zeros((pad,) + v.shape[1:], v.dtype)])
+        c = kvagg.sorted_combine(jnp.asarray(k), jnp.asarray(v), op=self.op)
+        nu = int(c.n_unique)
+        ck = np.asarray(c.unique_keys)[:nu]
+        cv = np.asarray(c.combined_values)[:nu]
+        self._exact = [(ck, cv)]
+        self._exact_rows = nu
+
+    def flush(self) -> tuple[np.ndarray, np.ndarray]:
+        """End-of-task flush: pack and emit every resident pair."""
+        self._flushed = True
+        if self._exact is not None:
+            if not self._exact_rows:
+                return self._empty_out()
+            self._compact_exact()
+            fk, fv = self._exact[0]
+        elif self._tk is None:
+            return self._empty_out()
+        else:
+            tk, tv = np.asarray(self._tk), np.asarray(self._tv)
+            mask = tk != _EMPTY
+            fk, fv = tk[mask].astype(np.int32), tv[mask]
+        self.n_out += fk.shape[0]
+        return fk, fv
+
+
+def run_cascade_stream(
+    batches: Iterable[tuple[jnp.ndarray, jnp.ndarray]],
+    plan: CascadePlan,
+    *,
+    batch_pad: int | None = None,
+    final_combine: bool = True,
+    prepare: bool = True,
+    finalize: bool = True,
+) -> CascadeResult:
+    """Packet-batched counterpart of :func:`run_cascade` (DESIGN.md §7).
+
+    ``batches`` is an iterator of (keys, values) ingests — packets off the
+    wire instead of one monolithic array.  Per-level node state persists
+    across batches and each batch's evictions cascade downstream
+    immediately (the paper's streamline, batch- rather than task-clocked);
+    the end-of-stream flush then drains the tables leaf to root.  Grouping
+    the root stream by key equals :func:`run_cascade`'s exact result for
+    every registered op — packetization changes *traffic* (what ``n_out``
+    measures), never totals.
+    """
+    op = aggops.get(plan.op)
+    states = [LevelState(spec, plan.op, batch_pad=batch_pad)
+              for spec in plan.levels]
+    root_k: list[np.ndarray] = []
+    root_v: list[np.ndarray] = []
+
+    def push(i: int, k, v) -> None:
+        if np.asarray(k).shape[0] == 0:
+            return
+        if i == len(states):
+            root_k.append(np.asarray(k, np.int32))
+            root_v.append(np.asarray(v))
+            return
+        ek, ev = states[i].ingest(k, v)
+        push(i + 1, ek, ev)
+
+    for k, v in batches:
+        v = np.asarray(op.prepare_values(jnp.asarray(v))) if prepare \
+            else np.asarray(v)
+        push(0, np.asarray(k, np.int32), v)
+    for i, st in enumerate(states):
+        fk, fv = st.flush()
+        push(i + 1, fk, fv)
+
+    if root_k:
+        rk = np.concatenate(root_k)
+        rv = np.concatenate(root_v)
+    else:
+        rk = np.zeros((0,), np.int32)
+        # empty root still needs the op's carried lane shape (mean carries
+        # (sum, count)) or finalize below would index a missing lane axis
+        tmpl = states[0]._value_sample
+        if tmpl is not None:
+            rv = np.zeros((0,) + tmpl.shape, tmpl.dtype)
+        elif prepare:
+            rv = np.asarray(op.prepare_values(jnp.zeros((0,), jnp.float32)))
+        else:
+            rv = np.zeros((0,), np.float32)
+    k_out, v_out = jnp.asarray(rk), jnp.asarray(rv)
+    if final_combine and rk.size:
+        c = kvagg.sorted_combine(k_out, v_out, op=plan.op)
+        k_out, v_out = c.unique_keys, c.combined_values
+    if finalize:
+        v_out = op.finalize_values(v_out)
+    i32 = lambda xs: jnp.asarray(np.asarray(xs, np.int32))  # noqa: E731
+    return CascadeResult(
+        keys=k_out, values=v_out,
+        n_in=i32(states[0].n_in), n_out=i32(states[-1].n_out),
+        level_in=i32([s.n_in for s in states]),
+        level_out=i32([s.n_out for s in states]),
+        level_evict=i32([s.n_evict for s in states]),
     )
 
 

@@ -64,6 +64,8 @@ def fpe_aggregate(
     capacity: int,
     ways: int = 4,
     op: str = "sum",
+    table_keys: jnp.ndarray | None = None,
+    table_values: jnp.ndarray | None = None,
 ) -> FPEResult:
     """Paper-faithful FPE: sequential hash-probe-aggregate-or-evict.
 
@@ -71,6 +73,12 @@ def fpe_aggregate(
     values: [n] or [n, lanes] (carried lane dims, e.g. mean's (sum, count))
     Returns the resident table plus an eviction stream aligned with the
     input (evict_keys[i] is the pair evicted while processing input i).
+
+    ``table_keys``/``table_values`` (the flat ``[capacity]`` layout a prior
+    call returned) resume from an existing resident table — the streaming
+    ingest used by ``core.dataplane.LevelState`` and the packet simulator
+    (``net.sim``), where a switch's table persists across packets and is
+    flushed only at end-of-task.
     """
     aggop = aggops.get(op)
     n = keys.shape[0]
@@ -80,8 +88,12 @@ def fpe_aggregate(
     lane_shape = values.shape[1:]  # () for scalar values
     lane_nd = len(lane_shape)
 
-    tk0 = jnp.full((n_buckets, ways), EMPTY_KEY, dtype=jnp.int32)
-    tv0 = jnp.zeros((n_buckets, ways) + lane_shape, dtype=values.dtype)
+    if table_keys is None:
+        tk0 = jnp.full((n_buckets, ways), EMPTY_KEY, dtype=jnp.int32)
+        tv0 = jnp.zeros((n_buckets, ways) + lane_shape, dtype=values.dtype)
+    else:
+        tk0 = table_keys.reshape(n_buckets, ways)
+        tv0 = table_values.reshape((n_buckets, ways) + lane_shape)
 
     def step(carry, inp):
         tk, tv = carry

@@ -413,6 +413,11 @@ class JobScheduler:
     admit/release (policy ``even`` or ``weighted``; see
     :func:`partition_memory`), so each job's `ConfigureMsg`/`ExchangePlan`
     always reflects the current tenancy — the paper's §4.2.2 behavior.
+
+    The drain term is calibratable: the packet-level simulator
+    (``net.sim``, DESIGN.md §7) runs an admitted `JobPlan` end to end and
+    its measured per-axis drain factors feed back via :meth:`calibrate`,
+    closing the model-vs-measurement loop.
     """
 
     def __init__(
@@ -422,11 +427,13 @@ class JobScheduler:
         combiner_budget_pairs: int = 1 << 20,
         partition_policy: str = "even",
         min_k_fraction: float = 1e-4,
+        drain_calibration: dict[str, float] | None = None,
     ):
         self.topology = topology
         self.budget = combiner_budget_pairs
         self.partition_policy = partition_policy
         self.min_k_fraction = min_k_fraction
+        self.drain_calibration = dict(drain_calibration or {})
         self.jobs: dict[int, JobPlan] = {}
 
     # -- load accounting ----------------------------------------------------
@@ -440,9 +447,25 @@ class JobScheduler:
 
     def _drain_s(self, loads: dict[str, float]) -> float:
         return max(
-            (loads[l.axis] / (l.gbps * 1e9) for l in self.topology.links),
+            (loads[l.axis] / (l.gbps * 1e9)
+             * self.drain_calibration.get(l.axis, 1.0)
+             for l in self.topology.links),
             default=0.0,
         )
+
+    def calibrate(self, factors: dict[str, float]) -> None:
+        """Feed measured drain time back into the congestion scoring.
+
+        ``factors`` maps axis -> measured/modeled drain ratio — what the
+        packet-level simulator reports via ``net.sim.drain_calibration``
+        (headers, retransmissions, and queueing that the payload-only byte
+        model cannot see).  Subsequent placement scoring and
+        ``report().max_drain_s`` use the calibrated drain.
+        """
+        for ax, f in factors.items():
+            if f <= 0:
+                raise ValueError(f"calibration factor for {ax!r} must be > 0")
+            self.drain_calibration[ax] = float(f)
 
     # -- candidate search ---------------------------------------------------
 

@@ -2,6 +2,9 @@
 
 This module is the paper-faithful analytic layer.  It is pure Python/NumPy
 (no jax) so the planner can call it at trace time without entering a jit.
+Byte-size assumptions (pair size, Ethernet-domain header, per-pair
+metadata) come from ``repro.net.wire`` — the single wire-format source
+shared with the packet simulator (DESIGN.md §7), itself jax-free.
 
 Paper quantities (all in units of one average KV pair unless noted):
     M  — data amount arriving at an aggregation node
@@ -26,6 +29,8 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from repro.net import wire
+
 # ---------------------------------------------------------------------------
 # Eq. (1): extra-traffic ratio of fixed-format KV encapsulation (RMT/DAIET).
 # ---------------------------------------------------------------------------
@@ -47,7 +52,10 @@ def fixed_format_extra_traffic(slot_bytes: int, pair_bytes: Sequence[int]) -> fl
     return packet / total_payload
 
 
-def switchagg_extra_traffic(pair_bytes: Sequence[int], metadata_bytes: int = 2) -> float:
+def switchagg_extra_traffic(
+    pair_bytes: Sequence[int],
+    metadata_bytes: int = wire.PAIR_META_BYTES,
+) -> float:
     """SwitchAgg's variable-length encoding: per-pair metadata instead of padding."""
     total_payload = float(sum(pair_bytes))
     encoded = total_payload + metadata_bytes * len(pair_bytes)
@@ -59,14 +67,21 @@ def switchagg_extra_traffic(pair_bytes: Sequence[int], metadata_bytes: int = 2) 
 # ---------------------------------------------------------------------------
 
 
-def header_overhead_bytes(data_bytes: int, max_payload: int, header_bytes: int = 58) -> int:
+def header_overhead_bytes(
+    data_bytes: int,
+    max_payload: int,
+    header_bytes: int = wire.ETH_HEADER_BYTES,
+) -> int:
     """Eq. (2): T = D + floor(D / M) * H  (paper's formula, Ethernet domain)."""
     if max_payload <= 0:
         raise ValueError("max_payload must be positive")
     return data_bytes + (data_bytes // max_payload) * header_bytes
 
 
-def header_overhead_ratio(max_payload: int, header_bytes: int = 58) -> float:
+def header_overhead_ratio(
+    max_payload: int,
+    header_bytes: int = wire.ETH_HEADER_BYTES,
+) -> float:
     """Asymptotic overhead ratio H/M (paper: 58/229 ≈ 25.3% for 200B RMT)."""
     return header_bytes / float(max_payload)
 

@@ -75,11 +75,42 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         cascade = dataplane.cascade_from_exchange_plan(grad_plan, op="sum")
         dp_report = dataplane.simulate_plan(
             cascade, data_amount=4096, key_variety=512)
+        bounded_cap = 128  # the capacity-limited regime, shared with JCT sim
         bounded = dataplane.CascadePlan(
             op="sum", levels=tuple(
-                dataplane.LevelSpec(capacity=128) for _ in cascade.levels))
+                dataplane.LevelSpec(capacity=bounded_cap)
+                for _ in cascade.levels))
         dp_report["bounded_c128"] = dataplane.simulate_plan(
             bounded, data_amount=4096, key_variety=512)["levels"]
+        # packet-level JCT measurement (DESIGN.md §7): stream a small Zipf
+        # KV job through the plan's full tree on the emulated network and
+        # record in-network vs host-only completion time (paper Fig. 10).
+        import math
+
+        import numpy as np
+
+        from repro.core import reduction_model as rm
+        from repro.core import tree as tree_lib
+        from repro.net import sim as netsim
+
+        fanins = grad_plan.fanins
+        axes = (grad_plan.leaf_axis, *grad_plan.upper_axes)
+        gbps = tuple(tree_lib.DCN_GBPS if ax == "pod" else tree_lib.ICI_GBPS
+                     for ax in axes)
+        n_mappers = math.prod(fanins)
+        sim_keys = rm.zipf_keys(64 * n_mappers, 512, seed=0)
+        jct = netsim.jct_comparison(
+            sim_keys, np.ones((sim_keys.size,), np.float32),
+            fanins=fanins,
+            plan=dataplane.CascadePlan(op="sum", levels=tuple(
+                dataplane.LevelSpec(capacity=bounded_cap) for _ in fanins)),
+            cfg=netsim.NetConfig(link_gbps=gbps), axes=axes)
+        dp_report["jct"] = {
+            "jct_switchagg_s": jct["jct_switchagg_s"],
+            "jct_host_only_s": jct["jct_host_only_s"],
+            "jct_saved": round(jct["jct_saved"], 4),
+            "reducer_traffic_cut": round(jct["reduction"], 4),
+        }
     meta = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
             "mode": mode, "accum": prof.accum_steps, "fsdp": prof.fsdp,
             "quant_opt": prof.quantized_opt, "seq_shard": seq_shard,
@@ -313,6 +344,9 @@ def main():
                                 f"{l['reduction']:.2f}~{l['predicted_reduction']:.2f}"
                                 for l in dp["levels"])
                             plan_txt += f" dp[sim~eq3]={lv}"
+                            if "jct" in dp:
+                                plan_txt += (
+                                    f" jct_cut={dp['jct']['jct_saved']:.0%}")
                     print(f"OK {label}: compile={r['compile_s']}s "
                           f"mem/dev={r['memory']['total_per_device']/2**30:.2f}GiB "
                           f"compute={rf['compute_s']:.4f}s mem={rf['memory_s']:.4f}s "

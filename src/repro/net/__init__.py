@@ -1,0 +1,30 @@
+"""Packet-level network emulation + job-completion-time simulator
+(DESIGN.md §7).
+
+Submodules:
+  wire      — MTU framing of KV records; THE byte-size constants
+              (pure numpy: importable from ``core.reduction_model``)
+  links     — per-link bandwidth / latency / FIFO-queue model
+  transport — seeded loss injection + go-back-N retransmit
+  sim       — discrete-event engine: mappers -> switch cascade -> reducer
+
+Submodules load lazily: ``core.reduction_model`` imports ``net.wire`` for
+its byte constants while ``net.sim`` imports ``core.dataplane`` — eager
+package imports here would close that cycle.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("wire", "links", "transport", "sim")
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

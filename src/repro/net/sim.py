@@ -1,0 +1,470 @@
+"""Discrete-event job simulator: mappers -> switch cascade -> reducer
+(DESIGN.md §7; paper §6 Figs. 9-10).
+
+The missing layer between the planner and the dataplane: the planner
+*models* per-level bytes and drain times, the dataplane *computes* exact
+aggregation — this module runs a whole job over an emulated network and
+measures what the paper measures: job completion time, per-link wire
+bytes, and drain time, with or without in-network aggregation.
+
+Topology: ``fanins`` leaf->root (e.g. ``(4, 2)`` = 8 mappers, two level-0
+switches of fan-in 4, one root of fan-in 2).  Every tree edge is its own
+FIFO :class:`~repro.net.links.Link`; every edge runs a reliable go-back-N
+flow (``net.transport``) whose receiver dedupes on PSN before the records
+touch aggregation state.  Each switch owns one ``dataplane.LevelState``
+node (its slice of the job's ``CascadePlan``), charges line-rate
+processing per packet, re-packs its eviction stream into MTU frames
+(``net.wire``) as it goes, and flushes downstream once every child has
+sent end-of-task.  The root's stream crosses the reducer in-link — the
+paper testbed's 10 GbE bottleneck — and JCT is the arrival of the final
+end-of-task byte at the reducer.
+
+Because links are FIFO and flows are per-edge, the engine runs level by
+level: a node's full arrival schedule is known once its children finished,
+so no global event heap is needed — arrivals are merged in time order and
+ingested sequentially, which keeps the hash-table dynamics honest.
+
+``aggregate=False`` is the host-only baseline: switches forward records
+unaggregated and the reducer in-link carries the entire map output — the
+configuration the paper's Fig. 10 JCT comparison is measured against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggops, dataplane, kvagg
+from . import links as links_lib
+from . import transport, wire
+
+_EMPTY = int(kvagg.EMPTY_KEY)
+
+#: paper-testbed defaults, in the planner's 1e9-bytes/s unit
+TEN_GBE = 1.25  # 10 GbE link
+LINE_RATE = 5.0  # 40 Gb/s processing engine
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    """Knobs of the emulated network (defaults: the paper's testbed)."""
+
+    link_gbps: tuple[float, ...] | None = None  # per tree level, leaf->root
+    reducer_gbps: float | None = None  # reducer in-link; default root level
+    processing_gbps: float = LINE_RATE  # switch line-rate processing charge
+    propagation_s: float = 1e-6
+    loss_rate: float = 0.0
+    seed: int = 0
+    window: int = 16  # go-back-N window
+    timeout_s: float | None = None  # None: per-link conservative RTO
+    records_per_packet: int = wire.RECORDS_PER_PACKET
+
+
+class _Node:
+    """One switch: PSN-dedupe gate + one cascade level + output packetizer."""
+
+    def __init__(self, *, level: int, n_children: int,
+                 spec: dataplane.LevelSpec | None, op: str, aggregate: bool,
+                 cfg: NetConfig, job_id: int, flow_id: int):
+        self.level = level
+        self.n_children = n_children
+        self.aggregate = aggregate
+        self.state = (dataplane.LevelState(
+            spec, op, batch_pad=cfg.records_per_packet)
+            if aggregate else None)
+        self.receiver = transport.Receiver()
+        self.proc_free = 0.0
+        self.proc_rate = cfg.processing_gbps * 1e9
+        self.rpp = cfg.records_per_packet
+        self.job_id = job_id
+        self.flow_id = flow_id  # of the uplink flow this node sends
+        self.out: list[tuple[float, wire.Packet]] = []  # (t_ready, pkt)
+        self._psn = 0
+        self._pend_k: np.ndarray | None = None
+        self._pend_v: np.ndarray | None = None
+        self._eot_seen = 0
+        self.records_in = 0
+        self.records_out = 0
+        self.finished = False
+
+    def _append(self, keys: np.ndarray, values: np.ndarray) -> None:
+        if self._pend_k is None:
+            self._pend_k, self._pend_v = keys, values
+        else:
+            self._pend_k = np.concatenate([self._pend_k, keys])
+            self._pend_v = np.concatenate([self._pend_v, values])
+
+    def _emit_packet(self, t: float, keys: np.ndarray, values: np.ndarray,
+                     eot: bool) -> None:
+        hdr = wire.PacketHeader(
+            job_id=self.job_id, flow_id=self.flow_id, level=self.level + 1,
+            psn=self._psn, n_records=int(keys.shape[0]), eot=eot)
+        self._psn += 1
+        self.records_out += int(keys.shape[0])
+        self.out.append((t, wire.Packet(header=hdr, keys=keys, values=values)))
+
+    def _emit_full(self, t: float) -> None:
+        while self._pend_k is not None and self._pend_k.shape[0] >= self.rpp:
+            k, self._pend_k = self._pend_k[:self.rpp], self._pend_k[self.rpp:]
+            v, self._pend_v = self._pend_v[:self.rpp], self._pend_v[self.rpp:]
+            self._emit_packet(t, k, v, eot=False)
+
+    def receive(self, pkt: wire.Packet, t_arrive: float) -> None:
+        """Ingest one arrival: dedupe on PSN, charge line-rate processing,
+        cascade the records, and re-frame whatever leaves the node."""
+        if not self.receiver.accept(pkt.header):
+            return  # gap or duplicate: discarded before aggregation state
+        t = t_arrive
+        if pkt.header.n_records:
+            start = max(t_arrive, self.proc_free)
+            self.proc_free = start + pkt.wire_bytes / self.proc_rate
+            t = self.proc_free
+            self.records_in += pkt.header.n_records
+            if self.aggregate:
+                ek, ev = self.state.ingest(pkt.keys, pkt.values)
+            else:  # host-only baseline: forward unaggregated
+                ek = np.asarray(pkt.keys, np.int32)
+                ev = np.asarray(pkt.values)
+            if ek.shape[0]:
+                self._append(ek, ev)
+                self._emit_full(t)
+        if pkt.header.eot:
+            self._eot_seen += 1
+            if self._eot_seen == self.n_children:
+                self._finish(max(t, self.proc_free))
+
+    def _finish(self, t: float) -> None:
+        if self.aggregate:
+            fk, fv = self.state.flush()
+            if fk.shape[0]:
+                # EoT flush streams out at the processing line rate too
+                self.proc_free = max(t, self.proc_free) + (
+                    fk.shape[0] * wire.PAIR_BYTES / self.proc_rate)
+                t = self.proc_free
+                self._append(fk, fv)
+        self._emit_full(t)
+        if self._pend_k is not None and self._pend_k.shape[0]:
+            self._emit_packet(t, self._pend_k, self._pend_v, eot=True)
+            self._pend_k = self._pend_v = None
+        else:  # the flush trigger must cross the wire even when empty
+            self._emit_packet(
+                t, np.zeros((0,), np.int32),
+                np.zeros((0,), np.float32), eot=True)
+        self.finished = True
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Everything one simulated job run measured."""
+
+    jct_s: float
+    aggregate: bool
+    op: str
+    fanins: tuple[int, ...]
+    axes: tuple[str, ...]
+    delivered_keys: np.ndarray  # reducer's final table, packed + finalized
+    delivered_values: np.ndarray
+    delivered_records: int  # records the reducer hands the application
+    delivered_bytes: int  # wire bytes of the delivered stream
+    arrived_records: int  # records arriving at the reducer pre-merge
+    link_stats: dict[str, dict]  # per axis (+ "reducer"), links.stats_by_axis
+    per_level: list[dict]
+    retransmissions: int
+    timeouts: int
+    packets_dropped: int
+    gap_discards: int
+    duplicate_discards: int
+    mapper_finish_s: list[float]
+
+    def delivered_table(self) -> dict[int, float]:
+        return {int(k): np.asarray(v).tolist() if np.ndim(v) else float(v)
+                for k, v in zip(self.delivered_keys, self.delivered_values)}
+
+    def report(self) -> dict:
+        """JSON-able record (the bench/dry-run shape)."""
+        return {
+            "aggregate": self.aggregate,
+            "op": self.op,
+            "fanins": list(self.fanins),
+            "jct_s": self.jct_s,
+            "delivered_records": self.delivered_records,
+            "delivered_bytes": self.delivered_bytes,
+            "arrived_records": self.arrived_records,
+            "retransmissions": self.retransmissions,
+            "timeouts": self.timeouts,
+            "packets_dropped": self.packets_dropped,
+            "link_bytes": {ax: s["bytes"] for ax, s in self.link_stats.items()},
+            "link_drain_s": {ax: s["drain_s"]
+                             for ax, s in self.link_stats.items()},
+            "per_level": self.per_level,
+        }
+
+
+def _default_axes(n: int) -> tuple[str, ...]:
+    return tuple(f"lvl{i}" for i in range(n))
+
+
+def simulate_job(
+    keys,
+    values,
+    *,
+    fanins: Sequence[int],
+    plan: dataplane.CascadePlan | None = None,
+    op: str = "sum",
+    aggregate: bool = True,
+    cfg: NetConfig | None = None,
+    axes: Sequence[str] | None = None,
+    mapper_delay: Callable[[int], float] | None = None,
+    job_id: int = 0,
+) -> SimResult:
+    """Run one job end to end over the emulated network.
+
+    ``keys``/``values`` are the global mapper output (split contiguously
+    among ``prod(fanins)`` mappers); ``plan`` gives each tree level its
+    node geometry (default: exact capacity-0 nodes).  ``mapper_delay(m)``
+    adds per-mapper start delay — the straggler-injection hook shared with
+    ``runtime.fault_tolerance``.
+    """
+    cfg = cfg or NetConfig()
+    fanins = tuple(int(f) for f in fanins)
+    if not fanins or any(f < 1 for f in fanins):
+        raise ValueError(f"bad fanins {fanins}")
+    n_levels = len(fanins)
+    axes = tuple(axes) if axes is not None else _default_axes(n_levels)
+    if len(axes) != n_levels:
+        raise ValueError("axes must match fanins")
+    if plan is not None:
+        op = plan.op  # the plan owns the op even for the host-only baseline
+    if aggregate:
+        if plan is None:
+            plan = dataplane.CascadePlan(op=op, levels=tuple(
+                dataplane.LevelSpec(capacity=0) for _ in fanins))
+        if len(plan.levels) != n_levels:
+            raise ValueError(
+                f"plan has {len(plan.levels)} levels, tree has {n_levels}")
+    aggop = aggops.get(op)
+    link_gbps = (tuple(cfg.link_gbps) if cfg.link_gbps is not None
+                 else (TEN_GBE,) * n_levels)
+    if len(link_gbps) != n_levels:
+        raise ValueError("link_gbps must match fanins")
+    reducer_gbps = (cfg.reducer_gbps if cfg.reducer_gbps is not None
+                    else link_gbps[-1])
+
+    n_mappers = math.prod(fanins)
+    keys = np.asarray(keys, np.int32)
+    carried = np.asarray(aggop.prepare_values(jnp.asarray(np.asarray(values))))
+    key_chunks = np.array_split(keys, n_mappers)
+    val_chunks = np.array_split(carried, n_mappers)
+
+    loss = transport.LossModel(cfg.loss_rate, cfg.seed)
+    all_links: list[links_lib.Link] = []
+    flows = transport.FlowStats()
+    mapper_finish = [0.0] * n_mappers
+
+    # mapper output flows (flow ids 0..n_mappers-1)
+    current: list[list[tuple[float, wire.Packet]]] = []
+    for m in range(n_mappers):
+        t0 = float(mapper_delay(m)) if mapper_delay is not None else 0.0
+        pkts = wire.pack_records(
+            key_chunks[m], val_chunks[m], job_id=job_id, flow_id=m, level=0,
+            eot=True, records_per_packet=cfg.records_per_packet)
+        current.append([(t0, p) for p in pkts])
+
+    def _run_flow(stream, link, sink) -> float:
+        arrivals: list[tuple[float, wire.Packet]] = []
+        fid = stream[0][1].header.flow_id
+        t_done, st = transport.send_stream(
+            stream, link, loss, flow_id=fid, window=cfg.window,
+            timeout_s=cfg.timeout_s,
+            deliver=lambda p, t: arrivals.append((t, p)))
+        flows.packets_sent += st.packets_sent
+        flows.packets_dropped += st.packets_dropped
+        flows.retransmissions += st.retransmissions
+        flows.timeouts += st.timeouts
+        flows.wire_bytes += st.wire_bytes
+        sink.extend(arrivals)
+        return t_done
+
+    next_flow_id = n_mappers
+    per_level_nodes: list[list[_Node]] = []
+    for l in range(n_levels):
+        n_switches = math.prod(fanins[l + 1:])
+        nodes: list[_Node] = []
+        nxt: list[list[tuple[float, wire.Packet]]] = []
+        for s in range(n_switches):
+            node = _Node(level=l, n_children=fanins[l],
+                         spec=plan.levels[l] if aggregate else None,
+                         op=op, aggregate=aggregate, cfg=cfg, job_id=job_id,
+                         flow_id=next_flow_id)
+            next_flow_id += 1
+            arrivals: list[tuple[float, wire.Packet]] = []
+            for c in range(fanins[l]):
+                ci = s * fanins[l] + c
+                link = links_lib.Link(
+                    name=f"{axes[l]}.s{s}.c{c}", axis=axes[l],
+                    gbps=link_gbps[l], propagation_s=cfg.propagation_s)
+                all_links.append(link)
+                t_done = _run_flow(current[ci], link, arrivals)
+                if l == 0:
+                    mapper_finish[ci] = t_done
+            arrivals.sort(key=lambda a: (a[0], a[1].header.flow_id,
+                                         a[1].header.psn))
+            for t, p in arrivals:
+                node.receive(p, t)
+            assert node.finished, "reliable transport must complete the node"
+            nodes.append(node)
+            nxt.append(node.out)
+        per_level_nodes.append(nodes)
+        current = nxt
+
+    # root -> reducer over the reducer in-link
+    red_link = links_lib.Link(name="reducer", axis="reducer",
+                              gbps=reducer_gbps,
+                              propagation_s=cfg.propagation_s)
+    all_links.append(red_link)
+    arrivals = []
+    _run_flow(current[0], red_link, arrivals)
+    arrivals.sort(key=lambda a: (a[0], a[1].header.psn))
+    recv = transport.Receiver()
+    jct = 0.0
+    rec_k: list[np.ndarray] = []
+    rec_v: list[np.ndarray] = []
+    for t, p in arrivals:
+        if recv.accept(p.header):
+            jct = max(jct, t)
+            if p.header.n_records:
+                rec_k.append(np.asarray(p.keys, np.int32))
+                rec_v.append(np.asarray(p.values))
+
+    arrived_k = np.concatenate(rec_k) if rec_k else np.zeros((0,), np.int32)
+    arrived_v = (np.concatenate(rec_v) if rec_v
+                 else np.zeros((0,) + carried.shape[1:], carried.dtype))
+    if arrived_k.size:  # the reducer host's final exact merge
+        c = kvagg.sorted_combine(jnp.asarray(arrived_k),
+                                 jnp.asarray(arrived_v), op=op)
+        n_unique = int(c.n_unique)
+        dk = np.asarray(c.unique_keys)[:n_unique]
+        dv = np.asarray(aggop.finalize_values(c.combined_values))[:n_unique]
+    else:
+        n_unique, dk = 0, np.zeros((0,), np.int32)
+        dv = np.zeros((0,), np.float32)
+
+    gap = sum(n.receiver.gap_discards
+              for lvl in per_level_nodes for n in lvl) + recv.gap_discards
+    dup = sum(n.receiver.duplicate_discards
+              for lvl in per_level_nodes for n in lvl) + recv.duplicate_discards
+    per_level = []
+    for l, nodes in enumerate(per_level_nodes):
+        per_level.append({
+            "level": l,
+            "axis": axes[l],
+            "switches": len(nodes),
+            "records_in": sum(n.records_in for n in nodes),
+            "records_out": sum(n.records_out for n in nodes),
+            "evictions": sum(n.state.n_evict for n in nodes)
+            if aggregate else 0,
+        })
+    return SimResult(
+        jct_s=jct,
+        aggregate=aggregate,
+        op=op,
+        fanins=fanins,
+        axes=axes,
+        delivered_keys=dk,
+        delivered_values=dv,
+        delivered_records=n_unique,
+        delivered_bytes=wire.stream_wire_bytes(
+            n_unique, cfg.records_per_packet),
+        arrived_records=int(arrived_k.shape[0]),
+        link_stats=links_lib.stats_by_axis(all_links),
+        per_level=per_level,
+        retransmissions=flows.retransmissions,
+        timeouts=flows.timeouts,
+        packets_dropped=flows.packets_dropped,
+        gap_discards=gap,
+        duplicate_discards=dup,
+        mapper_finish_s=mapper_finish,
+    )
+
+
+def simulate_job_plan(
+    job_plan,
+    keys,
+    values,
+    *,
+    cfg: NetConfig | None = None,
+    aggregate: bool = True,
+    mapper_delay: Callable[[int], float] | None = None,
+) -> SimResult:
+    """Run a controller-admitted job (``planner.JobPlan``) end to end.
+
+    The cascade geometry comes from the plan's ``ConfigureMsg`` (the §4.2.2
+    per-tree memory partition split across levels), the link rates from its
+    ``AggregationTree`` levels — the simulator consuming exactly what the
+    ``JobScheduler`` emitted, so measured drain can be fed back via
+    :func:`drain_calibration` + ``JobScheduler.calibrate``.
+    """
+    cfg = cfg or NetConfig()
+    cascade = dataplane.plan_from_configure(job_plan.configure)
+    tree = job_plan.tree
+    cfg = dataclasses.replace(
+        cfg, link_gbps=tuple(l.link_gbps for l in tree.levels))
+    return simulate_job(
+        keys, values, fanins=job_plan.configure.fanins, plan=cascade,
+        op=job_plan.configure.op, aggregate=aggregate, cfg=cfg,
+        axes=tree.axes, mapper_delay=mapper_delay,
+        job_id=job_plan.configure.tree_id)
+
+
+def drain_calibration(result: SimResult) -> dict[str, float]:
+    """Measured-vs-modeled drain factors for ``JobScheduler.calibrate``.
+
+    The planner's drain model charges payload bytes at line rate; the wire
+    also carries headers and retransmissions.  The factor per axis is
+    ``wire_bytes / payload_bytes`` (>= 1), i.e. how much longer the level
+    really takes to drain than the payload-only model claims.
+    """
+    out = {}
+    for axis, s in result.link_stats.items():
+        if axis == "reducer":
+            continue
+        payload = s["payload_bytes"]
+        out[axis] = (s["bytes"] / payload) if payload > 0 else 1.0
+    return out
+
+
+def jct_comparison(
+    keys,
+    values,
+    *,
+    fanins: Sequence[int],
+    plan: dataplane.CascadePlan | None = None,
+    op: str = "sum",
+    cfg: NetConfig | None = None,
+    axes: Sequence[str] | None = None,
+) -> dict:
+    """The Fig. 10 measurement: JCT with in-network aggregation vs the
+    host-only baseline on the same network, same loss pattern.
+
+    The returned dict is JSON-able except for ``_results``, the raw
+    ``(switchagg, host_only)`` SimResult pair for callers (the JCT bench)
+    that need more than the report scalars — drop the key before dumping.
+    """
+    sw = simulate_job(keys, values, fanins=fanins, plan=plan, op=op,
+                      aggregate=True, cfg=cfg, axes=axes)
+    host = simulate_job(keys, values, fanins=fanins, plan=plan, op=op,
+                        aggregate=False, cfg=cfg, axes=axes)
+    return {
+        "switchagg": sw.report(),
+        "host_only": host.report(),
+        "jct_switchagg_s": sw.jct_s,
+        "jct_host_only_s": host.jct_s,
+        "jct_saved": 1.0 - sw.jct_s / host.jct_s if host.jct_s > 0 else 0.0,
+        "reduction": 1.0 - (sw.arrived_records
+                            / max(1, host.arrived_records)),
+        "_results": (sw, host),
+    }

@@ -1,0 +1,154 @@
+"""Lossy transport: seeded loss injection + go-back-N retransmit
+(DESIGN.md §7; P4COM-style end-host loss recovery).
+
+The paper's switches aggregate — they consume records — so loss recovery
+cannot be end-to-end: each tree edge runs its own reliable flow between
+the sending end host (a mapper, or an upstream switch re-emitting its
+eviction stream) and the receiving node.  The sender is go-back-N: it
+streams a window of packets back-to-back; on a loss it times out and
+rewinds to the lost PSN, resending everything from there.  The receiver
+(``net.sim``'s switch ingest) delivers records to the cascade only for the
+packet whose PSN it expects next — a gap (an earlier loss in flight) or a
+duplicate (a retransmission of something already combined) is discarded
+*before* touching the aggregation state, which is what makes every record
+combine exactly once under any loss pattern (the transport property test).
+
+Loss is a pure function of (seed, flow, psn, attempt): reproducible, and
+independent retransmissions re-roll the dice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from . import links as links_lib
+from . import wire
+
+
+class LossModel:
+    """Deterministic seeded packet-loss oracle."""
+
+    def __init__(self, rate: float = 0.0, seed: int = 0):
+        if not 0.0 <= rate < 1.0:
+            raise ValueError("loss rate must be in [0, 1)")
+        self.rate = rate
+        self.seed = seed
+
+    def drop(self, flow_id: int, psn: int, attempt: int) -> bool:
+        if self.rate <= 0.0:
+            return False
+        r = np.random.default_rng(
+            (self.seed, flow_id, psn, attempt)).random()
+        return bool(r < self.rate)
+
+
+@dataclasses.dataclass
+class FlowStats:
+    """One flow's transport accounting."""
+
+    packets_sent: int = 0  # transmissions, including retransmissions
+    packets_dropped: int = 0
+    retransmissions: int = 0
+    timeouts: int = 0
+    wire_bytes: int = 0
+
+
+#: deliver(packet, t_arrive) — called for every packet that physically
+#: arrives (i.e. was not dropped), including out-of-order ones the
+#: receiver will discard on its PSN check.
+DeliverFn = Callable[[wire.Packet, float], None]
+
+MAX_ATTEMPTS = 10_000
+
+
+def send_stream(
+    packets: Sequence[tuple[float, wire.Packet]],
+    link: links_lib.Link,
+    loss: LossModel,
+    *,
+    flow_id: int,
+    window: int = 16,
+    timeout_s: float | None = None,
+    deliver: DeliverFn,
+) -> tuple[float, FlowStats]:
+    """Reliably deliver ``packets`` — a PSN-ordered list of
+    ``(t_ready, Packet)`` — over one link with go-back-N.
+
+    ``t_ready`` is when the sender *has* the packet (a switch cannot resend
+    an eviction before producing it).  Returns (time the sender finished,
+    i.e. the whole stream is known-delivered, stats).  Dropped packets still
+    occupy the link — the wire carried them before they died.
+    """
+    if timeout_s is None:
+        # conservative RTO: a full window's serialization plus one RTT
+        timeout_s = 2.0 * (window * link.serialize_s(wire.MTU_BYTES)
+                           + 2.0 * link.propagation_s)
+    stats = FlowStats()
+    attempts = [0] * len(packets)
+    base = 0
+    t = 0.0
+    while base < len(packets):
+        upto = min(base + window, len(packets))
+        first_lost: int | None = None
+        for psn in range(base, upto):
+            t_ready, pkt = packets[psn]
+            assert pkt.header.psn == psn, "packets must be PSN-ordered"
+            attempts[psn] += 1
+            if attempts[psn] > MAX_ATTEMPTS:
+                raise RuntimeError(
+                    f"flow {flow_id}: psn {psn} exceeded {MAX_ATTEMPTS} "
+                    f"attempts (loss rate too close to 1?)")
+            if attempts[psn] > 1:
+                stats.retransmissions += 1
+            # payload is credited once per PSN; retransmissions add wire
+            # bytes only, so wire/payload drain calibration sees the loss
+            depart, arrive = link.transmit(
+                max(t, t_ready), pkt.wire_bytes,
+                pkt.payload_bytes if attempts[psn] == 1 else 0)
+            t = depart  # sender streams back-to-back
+            stats.packets_sent += 1
+            stats.wire_bytes += pkt.wire_bytes
+            if loss.drop(flow_id, psn, attempts[psn]):
+                stats.packets_dropped += 1
+                if first_lost is None:
+                    first_lost = psn
+            else:
+                deliver(pkt, arrive)
+        if first_lost is None:
+            base = upto
+        else:
+            # sender discovers the loss one RTO after it stopped sending,
+            # rewinds to the lost PSN (go-back-N), and resends from there
+            stats.timeouts += 1
+            t += timeout_s
+            base = first_lost
+    return t, stats
+
+
+class Receiver:
+    """PSN-dedupe gate in front of an aggregation node.
+
+    Tracks the next expected PSN per flow; :meth:`accept` returns True
+    exactly once per (flow, psn) and only in order — the switch-side
+    incomplete-aggregation handling: records of a lost packet re-enter the
+    cascade via retransmission without ever double-combining.
+    """
+
+    def __init__(self):
+        self.expected: dict[int, int] = {}
+        self.gap_discards = 0
+        self.duplicate_discards = 0
+
+    def accept(self, header: wire.PacketHeader) -> bool:
+        exp = self.expected.get(header.flow_id, 0)
+        if header.psn == exp:
+            self.expected[header.flow_id] = exp + 1
+            return True
+        if header.psn < exp:
+            self.duplicate_discards += 1
+        else:
+            self.gap_discards += 1
+        return False

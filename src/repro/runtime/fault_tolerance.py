@@ -51,6 +51,24 @@ class TrainLoopConfig:
     log_every: int = 10
 
 
+@dataclasses.dataclass(frozen=True)
+class StragglerInjector:
+    """Deterministic fault-injection delays, keyed by an integer index.
+
+    One injector serves both clocks: as a ``TrainLoop`` ``delay_hook`` the
+    index is the step; as ``net.sim.simulate_job``'s ``mapper_delay`` the
+    index is the mapper rank — so the same injected slowdown that trips the
+    :class:`StragglerMonitor` in the training loop shows up as JCT tail
+    inflation in the packet-level simulator (DESIGN.md §7).
+    """
+
+    delays: dict[int, float]
+    default_s: float = 0.0
+
+    def __call__(self, idx: int) -> float:
+        return float(self.delays.get(int(idx), self.default_s))
+
+
 class StragglerMonitor:
     """Online per-step latency EWMA with outlier detection."""
 

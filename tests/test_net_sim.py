@@ -1,0 +1,208 @@
+"""Packet-level JCT simulator: acceptance + integration (DESIGN.md §7).
+
+Pins the PR's acceptance criteria: on the paper's 8-mapper Zipf word-count
+the simulator reports >= 40% JCT reduction vs the host-only baseline, and
+at loss = 0 the delivered record/byte counts match ``run_cascade`` exactly
+for every registered AggOp.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import dict_aggregate
+from repro.core import aggops, dataplane, kvagg, planner
+from repro.core import reduction_model as rm
+from repro.net import sim as netsim
+from repro.net import wire
+from repro.runtime.fault_tolerance import StragglerInjector, StragglerMonitor
+
+EMPTY = int(kvagg.EMPTY_KEY)
+
+
+def _plan(caps, op="sum"):
+    return dataplane.CascadePlan(op=op, levels=tuple(
+        dataplane.LevelSpec(capacity=c) for c in caps))
+
+
+def test_wordcount_jct_reduction_at_least_40pct():
+    """The paper's 8-mapper Zipf word-count (Fig. 10): in-network
+    aggregation cuts the measured JCT by >= 40%."""
+    n_workers, per_worker, variety = 8, 1024, 1024
+    keys = rm.zipf_keys(n_workers * per_worker, variety, skew=0.99, seed=0)
+    vals = np.ones_like(keys, dtype=np.float32)
+    cfg = netsim.NetConfig(link_gbps=(netsim.TEN_GBE, netsim.TEN_GBE),
+                           reducer_gbps=netsim.TEN_GBE)
+    jct = netsim.jct_comparison(keys, vals, fanins=(4, 2),
+                                plan=_plan([512, 512]), cfg=cfg)
+    assert jct["jct_host_only_s"] > 0
+    assert jct["jct_saved"] >= 0.40, jct
+    # and the aggregated result is still the exact word count
+    sw = jct["switchagg"]
+    assert sw["delivered_records"] == len(set(keys.tolist()))
+    # host-only pushes every mapper record over the reducer in-link
+    assert jct["host_only"]["arrived_records"] == n_workers * per_worker
+
+
+@pytest.mark.parametrize("op", sorted(aggops.names()))
+def test_lossless_delivery_matches_run_cascade(op):
+    """loss=0: delivered record/byte counts match run_cascade exactly, and
+    delivered values match the exact cascade result, for every AggOp."""
+    n, variety = 600, 64
+    keys = rm.zipf_keys(n, variety, seed=2).astype(np.int32)
+    vals = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+    plan = _plan([32, 16], op=op)
+    cfg = netsim.NetConfig(records_per_packet=32)
+    res = netsim.simulate_job(keys, vals, fanins=(2, 2), plan=plan, cfg=cfg)
+    ref = dataplane.run_cascade(jnp.asarray(keys), jnp.asarray(vals), plan)
+    ref_keys = np.asarray(ref.keys)
+    ref_vals = np.asarray(ref.values)
+    n_unique = int(np.sum(ref_keys != EMPTY))
+    # exact record/byte count match
+    assert res.delivered_records == n_unique
+    assert res.delivered_bytes == wire.stream_wire_bytes(
+        n_unique, cfg.records_per_packet)
+    # exact key set, matching finalized values
+    want = {int(k): v for k, v in zip(ref_keys, ref_vals) if k != EMPTY}
+    got = dict(zip(res.delivered_keys.tolist(), res.delivered_values))
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-5,
+                                   err_msg=f"op={op} key={k}")
+    assert res.retransmissions == 0 and res.packets_dropped == 0
+
+
+def test_host_only_baseline_forwards_everything():
+    keys = rm.uniform_keys(512, 32, seed=1).astype(np.int32)
+    vals = np.ones_like(keys, dtype=np.float32)
+    res = netsim.simulate_job(keys, vals, fanins=(4, 2), op="sum",
+                              aggregate=False,
+                              cfg=netsim.NetConfig(records_per_packet=32))
+    assert res.arrived_records == 512
+    assert res.per_level[0]["records_in"] == 512
+    assert res.per_level[-1]["records_out"] == 512
+    # the reducer's host merge still produces the exact table
+    assert res.delivered_table() == dict_aggregate(keys, vals, "sum")
+
+
+def test_host_only_baseline_honors_plan_op():
+    """The plan's op governs the host-only run too: a mean comparison must
+    not fall back to sum on the baseline side."""
+    keys = rm.uniform_keys(256, 16, seed=8).astype(np.int32)
+    vals = np.random.default_rng(2).standard_normal(256).astype(np.float32)
+    jct = netsim.jct_comparison(
+        keys, vals, fanins=(2, 2), plan=_plan([16, 16], op="mean"),
+        cfg=netsim.NetConfig(records_per_packet=32))
+    host = netsim.simulate_job(
+        keys, vals, fanins=(2, 2), plan=_plan([16, 16], op="mean"),
+        aggregate=False, cfg=netsim.NetConfig(records_per_packet=32))
+    want = dict_aggregate(keys, vals, "mean")
+    assert host.op == "mean"
+    got = host.delivered_table()
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-5)
+    assert jct["host_only"]["op"] == "mean"
+
+
+def test_run_cascade_stream_empty_stream_lane_ops():
+    """An empty (or all-padding) stream still finalizes lane-carrying ops."""
+    for op in ("mean", "logsumexp", "sum"):
+        res = dataplane.run_cascade_stream([], _plan([8, 8], op=op))
+        assert int(res.n_in) == 0 and int(res.n_out) == 0
+        assert np.asarray(res.keys).shape == (0,)
+        assert np.asarray(res.values).shape == (0,)
+        pad = (np.full((5,), EMPTY, np.int32), np.zeros((5,), np.float32))
+        res = dataplane.run_cascade_stream([pad], _plan([8], op=op),
+                                           batch_pad=5)
+        assert int(res.n_in) == 0
+        assert np.asarray(res.values).shape == (0,)
+
+
+def test_more_loss_never_cheaper_and_still_exact():
+    keys = rm.zipf_keys(1024, 128, seed=3).astype(np.int32)
+    vals = np.ones_like(keys, dtype=np.float32)
+    cfg0 = netsim.NetConfig(records_per_packet=32)
+    base = netsim.simulate_job(keys, vals, fanins=(4,), plan=_plan([64]),
+                               cfg=cfg0)
+    lossy = netsim.simulate_job(
+        keys, vals, fanins=(4,), plan=_plan([64]),
+        cfg=dataclasses.replace(cfg0, loss_rate=0.05, seed=9))
+    assert lossy.retransmissions > 0
+    assert lossy.jct_s > base.jct_s
+    assert lossy.delivered_table() == base.delivered_table()
+    # retransmitted wire bytes must show up in the drain calibration:
+    # payload is credited once per PSN, so the lossy factor is strictly
+    # larger than the lossless one on every axis that saw a retransmit
+    base_f = netsim.drain_calibration(base)
+    lossy_f = netsim.drain_calibration(lossy)
+    assert all(lossy_f[ax] >= base_f[ax] for ax in base_f)
+    assert any(lossy_f[ax] > base_f[ax] for ax in base_f)
+
+
+def test_straggler_delay_inflates_jct_tail():
+    """runtime.fault_tolerance's injector drives the simulator clock: one
+    slow mapper shows up as JCT tail inflation and trips the monitor."""
+    keys = rm.zipf_keys(2048, 256, seed=4).astype(np.int32)
+    vals = np.ones_like(keys, dtype=np.float32)
+    cfg = netsim.NetConfig(records_per_packet=32)
+    common = dict(fanins=(4, 2), plan=_plan([128, 128]), cfg=cfg)
+    base = netsim.simulate_job(keys, vals, **common)
+    delay = 50 * base.jct_s  # a mapper 50x slower than the whole lossless job
+    inject = StragglerInjector({3: delay})
+    slow = netsim.simulate_job(keys, vals, mapper_delay=inject, **common)
+    assert slow.jct_s >= base.jct_s + 0.9 * delay  # the tail IS the straggler
+    assert slow.mapper_finish_s[3] == max(slow.mapper_finish_s)
+    # the per-mapper finish times trip the online straggler monitor
+    monitor = StragglerMonitor(factor=3.0, warmup=2)
+    for m, t in enumerate(slow.mapper_finish_s):
+        monitor.observe(m, t)
+    assert [step for step, _, _ in monitor.events] == [3]
+
+
+def test_scheduler_plan_roundtrip_and_drain_calibration():
+    """The simulator consumes a JobScheduler plan and its measured drain
+    factors feed back into the scheduler's congestion scoring."""
+    topo = planner.Topology(links=(
+        planner.LinkBudget(axis="data", fanin=4, gbps=netsim.TEN_GBE),
+        planner.LinkBudget(axis="pod", fanin=2, gbps=netsim.TEN_GBE / 4),
+    ))
+    sched = planner.JobScheduler(topo, combiner_budget_pairs=256)
+    jp = sched.admit(planner.LaunchRequest(
+        job_id=1, n_workers=8, expected_pairs=256, key_variety=64,
+        grad_bytes=1 << 20))
+    keys = rm.zipf_keys(8 * 256, 64, seed=5).astype(np.int32)
+    vals = np.ones_like(keys, dtype=np.float32)
+    res = netsim.simulate_job_plan(jp, keys, vals)
+    # the sim ran the scheduler's tree: axes + link stats line up
+    assert set(res.axes) == {"data", "pod"}
+    assert set(res.link_stats) == {"data", "pod", "reducer"}
+    factors = netsim.drain_calibration(res)
+    assert set(factors) == {"data", "pod"}
+    # headers (and any retransmits) make the wire strictly slower than the
+    # payload-only model
+    assert all(f > 1.0 for f in factors.values())
+    before = sched.report().max_drain_s
+    sched.calibrate(factors)
+    after = sched.report().max_drain_s
+    assert after > before
+    with pytest.raises(ValueError):
+        sched.calibrate({"data": 0.0})
+
+
+def test_run_cascade_stream_counts_and_jit_padding():
+    """The dataplane's packet-batched ingest: telemetry counts real records
+    only, and padded batches do not perturb the result."""
+    keys = rm.uniform_keys(300, 40, seed=6).astype(np.int32)
+    vals = np.ones_like(keys, dtype=np.float32)
+    plan = _plan([32, 0])  # bounded leaf, exact root
+    batches = [(keys[i:i + 48], vals[i:i + 48]) for i in range(0, 300, 48)]
+    res = dataplane.run_cascade_stream(batches, plan, batch_pad=48)
+    assert int(res.n_in) == 300
+    got = {int(k): float(v) for k, v in
+           zip(np.asarray(res.keys), np.asarray(res.values)) if k != EMPTY}
+    assert got == dict_aggregate(keys, vals, "sum")
+    # exact root holds everything until flush: its n_out is the key variety
+    assert int(res.level_out[-1]) == len(got)

@@ -1,0 +1,60 @@
+"""Transport invariants under arbitrary loss (hypothesis; DESIGN.md §7).
+
+THE exactly-once property: whatever the loss pattern, go-back-N retransmit
+plus switch-side PSN dedupe delivers every record and combines it exactly
+once — the simulated totals equal the lossless ``run_cascade`` result for
+every registered AggOp.  Kept separate from the deterministic simulator
+tests so only this module skips when hypothesis is absent.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dep: pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggops, dataplane, kvagg
+from repro.net import sim as netsim
+
+EMPTY = int(kvagg.EMPTY_KEY)
+
+# small, fixed geometry: hypothesis explores the LOSS space, not the plan
+# space (tests/test_dataplane_properties.py owns that), so the jit cache
+# stays warm across examples
+_CFG = netsim.NetConfig(records_per_packet=16, window=4)
+_CAPS = (16, 8)
+_FANINS = (2, 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 160),
+    variety=st.integers(1, 32),
+    loss_rate=st.floats(0.0, 0.6),
+    seed=st.integers(0, 2**31 - 1),
+    op=st.sampled_from(sorted(aggops.names())),
+)
+def test_property_exactly_once_under_any_loss(n, variety, loss_rate, seed, op):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, variety, size=n).astype(np.int32)
+    vals = rng.standard_normal(n).astype(np.float32)
+    plan = dataplane.CascadePlan(op=op, levels=tuple(
+        dataplane.LevelSpec(capacity=c) for c in _CAPS))
+    cfg = dataclasses.replace(_CFG, loss_rate=loss_rate, seed=seed)
+    res = netsim.simulate_job(keys, vals, fanins=_FANINS, plan=plan, cfg=cfg)
+    ref = dataplane.run_cascade(jnp.asarray(keys), jnp.asarray(vals), plan)
+    want = {int(k): np.asarray(v) for k, v in
+            zip(np.asarray(ref.keys), np.asarray(ref.values)) if k != EMPTY}
+    got = dict(zip(res.delivered_keys.tolist(), res.delivered_values))
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-3, atol=1e-4,
+                                   err_msg=f"op={op} key={k} loss={loss_rate}")
+    if loss_rate == 0.0:
+        assert res.packets_dropped == 0 and res.retransmissions == 0
+    # every dropped transmission of a PSN forces a later retransmission of
+    # that PSN; none may vanish silently
+    assert res.retransmissions >= res.packets_dropped

@@ -1,0 +1,162 @@
+"""Wire format, link model, and transport primitives (DESIGN.md §7)."""
+
+import numpy as np
+import pytest
+
+from repro.core import reduction_model as rm
+from repro.net import links as links_lib
+from repro.net import transport, wire
+
+
+# --- wire constants: the single source ---------------------------------------
+
+
+def test_constants_compose():
+    assert wire.HEADER_BYTES == wire.ETH_HEADER_BYTES + wire.AGG_HEADER_BYTES
+    assert wire.MAX_PAYLOAD_BYTES == wire.MTU_BYTES - wire.HEADER_BYTES
+    assert (wire.RECORDS_PER_PACKET
+            == wire.MAX_PAYLOAD_BYTES // wire.PAIR_BYTES)
+    assert wire.RECORDS_PER_PACKET >= 1
+
+
+def test_reduction_model_imports_wire_constants():
+    # Eq. 2 defaults come from net.wire, not a duplicated literal
+    assert rm.header_overhead_ratio(229) == wire.ETH_HEADER_BYTES / 229.0
+    assert rm.header_overhead_bytes(1000, 229) == 1000 + (
+        1000 // 229) * wire.ETH_HEADER_BYTES
+    # Eq. 1 metadata default is the shared per-pair tag
+    assert rm.switchagg_extra_traffic([10, 10]) == pytest.approx(
+        (20 + 2 * wire.PAIR_META_BYTES) / 20)
+
+
+# --- packing -----------------------------------------------------------------
+
+
+def test_pack_records_framing():
+    keys = np.arange(10, dtype=np.int32)
+    vals = np.arange(10, dtype=np.float32)
+    pkts = wire.pack_records(keys, vals, flow_id=3, records_per_packet=4,
+                             eot=True)
+    assert [p.header.n_records for p in pkts] == [4, 4, 2]
+    assert [p.header.psn for p in pkts] == [0, 1, 2]
+    assert [p.header.eot for p in pkts] == [False, False, True]
+    assert all(p.header.flow_id == 3 for p in pkts)
+    np.testing.assert_array_equal(
+        np.concatenate([p.keys for p in pkts]), keys)
+    np.testing.assert_array_equal(
+        np.concatenate([p.values for p in pkts]), vals)
+    assert pkts[0].wire_bytes == wire.HEADER_BYTES + 4 * wire.PAIR_BYTES
+
+
+def test_pack_empty_stream_still_carries_eot():
+    pkts = wire.pack_records(np.zeros((0,), np.int32),
+                             np.zeros((0,), np.float32), eot=True)
+    assert len(pkts) == 1
+    assert pkts[0].header.eot and pkts[0].header.n_records == 0
+    assert wire.pack_records(np.zeros((0,), np.int32),
+                             np.zeros((0,), np.float32)) == []
+
+
+def test_stream_wire_bytes_matches_framing():
+    for n in (0, 1, 4, 5, 9, 123):
+        pkts = wire.pack_records(np.zeros((n,), np.int32),
+                                 np.zeros((n,), np.float32),
+                                 records_per_packet=4)
+        assert wire.stream_wire_bytes(n, 4) == sum(p.wire_bytes for p in pkts)
+
+
+def test_pack_records_lane_values():
+    vals = np.ones((5, 2), np.float32)  # mean's carried (sum, count) lanes
+    pkts = wire.pack_records(np.arange(5, dtype=np.int32), vals,
+                             records_per_packet=3)
+    assert pkts[0].values.shape == (3, 2)
+    assert pkts[0].payload_bytes == 3 * wire.PAIR_BYTES  # lanes: not a wire cost
+
+
+# --- link model --------------------------------------------------------------
+
+
+def test_link_fifo_serialization_and_queueing():
+    link = links_lib.Link(name="l", axis="data", gbps=1.0, propagation_s=1e-6)
+    dep1, arr1 = link.transmit(0.0, 1000)  # 1 us at 1 GB/s
+    assert dep1 == pytest.approx(1e-6)
+    assert arr1 == pytest.approx(2e-6)
+    # second packet ready at t=0 queues behind the first
+    dep2, _ = link.transmit(0.0, 1000)
+    assert dep2 == pytest.approx(2e-6)
+    assert link.queue_delay_s == pytest.approx(1e-6)
+    assert link.bytes_sent == 2000 and link.packets_sent == 2
+    assert link.busy_s == pytest.approx(2e-6)
+
+
+def test_stats_by_axis_drain_is_busiest_link():
+    a = links_lib.Link(name="a", axis="data", gbps=1.0)
+    b = links_lib.Link(name="b", axis="data", gbps=1.0)
+    a.transmit(0.0, 3000)
+    b.transmit(0.0, 1000)
+    s = links_lib.stats_by_axis([a, b])["data"]
+    assert s["bytes"] == 4000 and s["links"] == 2
+    assert s["drain_s"] == pytest.approx(3e-6)
+
+
+# --- transport ---------------------------------------------------------------
+
+
+def test_loss_model_deterministic_and_bounds():
+    loss = transport.LossModel(rate=0.3, seed=5)
+    rolls = [loss.drop(1, p, 1) for p in range(200)]
+    assert rolls == [loss.drop(1, p, 1) for p in range(200)]
+    assert 0 < sum(rolls) < 200  # neither all-drop nor no-drop
+    assert not transport.LossModel(rate=0.0).drop(0, 0, 1)
+    with pytest.raises(ValueError):
+        transport.LossModel(rate=1.0)
+
+
+def test_receiver_psn_dedupe():
+    r = transport.Receiver()
+    h = lambda psn: wire.PacketHeader(job_id=0, flow_id=1, level=0,  # noqa: E731
+                                      psn=psn, n_records=1)
+    assert r.accept(h(0)) and r.accept(h(1))
+    assert not r.accept(h(1))  # duplicate (retransmission of combined data)
+    assert not r.accept(h(3))  # gap (an earlier packet was lost)
+    assert r.accept(h(2)) and r.accept(h(3))
+    assert r.duplicate_discards == 1 and r.gap_discards == 1
+
+
+def test_go_back_n_delivers_in_order_exactly_once():
+    keys = np.arange(40, dtype=np.int32)
+    pkts = wire.pack_records(keys, np.ones(40, np.float32),
+                             flow_id=2, records_per_packet=4, eot=True)
+    link = links_lib.Link(name="l", axis="data", gbps=1.0)
+    loss = transport.LossModel(rate=0.3, seed=11)
+    recv = transport.Receiver()
+    got = []
+
+    def deliver(p, t):
+        if recv.accept(p.header):
+            got.append((t, p))
+
+    t_done, st = transport.send_stream([(0.0, p) for p in pkts], link, loss,
+                                       flow_id=2, window=4, deliver=deliver)
+    assert [p.header.psn for _, p in got] == list(range(len(pkts)))
+    assert sorted(t for t, _ in got) == [t for t, _ in got]
+    np.testing.assert_array_equal(
+        np.concatenate([p.keys for _, p in got]), keys)
+    assert st.packets_dropped > 0 and st.retransmissions > 0
+    assert st.packets_sent == len(pkts) + st.retransmissions
+    assert t_done >= got[-1][0] - link.propagation_s
+
+
+def test_go_back_n_lossless_is_pure_pipeline():
+    pkts = wire.pack_records(np.arange(8, dtype=np.int32),
+                             np.ones(8, np.float32), records_per_packet=4,
+                             eot=True)
+    link = links_lib.Link(name="l", axis="data", gbps=1.0, propagation_s=0.0)
+    seen = []
+    t_done, st = transport.send_stream(
+        [(0.0, p) for p in pkts], link, transport.LossModel(0.0), flow_id=0,
+        deliver=lambda p, t: seen.append(t))
+    assert st.retransmissions == 0 and st.timeouts == 0
+    total = sum(p.wire_bytes for p in pkts)
+    assert t_done == pytest.approx(total / 1e9)
+    assert seen[-1] == pytest.approx(total / 1e9)

@@ -3,7 +3,9 @@
 
 Docstrings cite design sections as ``DESIGN.md §3``; this checker fails
 (exit 1) if a cited section has no matching ``## §N`` heading in
-DESIGN.md — the doc contract CI enforces.
+DESIGN.md — the doc contract CI enforces.  Coverage spans ``src/``,
+``tests/``, ``benchmarks/``, and ``examples/`` (tests and benches cite
+sections too, e.g. the §7 network-sim suite).
 
     python tools/check_design_refs.py [--root .]
 """
@@ -17,15 +19,22 @@ import sys
 
 REF_RE = re.compile(r"DESIGN\.md\s*§\s*(\d+)")
 HEADING_RE = re.compile(r"^#+\s*§(\d+)\b", re.MULTILINE)
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
 
 
 def collect_refs(root: pathlib.Path) -> list[tuple[pathlib.Path, int, int]]:
-    """(file, line, section) for every DESIGN.md §N reference under src/."""
+    """(file, line, section) for every DESIGN.md §N reference under the
+    scanned trees (``SCAN_DIRS``)."""
     refs = []
-    for py in sorted((root / "src").rglob("*.py")):
-        for lineno, line in enumerate(py.read_text().splitlines(), 1):
-            for m in REF_RE.finditer(line):
-                refs.append((py.relative_to(root), lineno, int(m.group(1))))
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            for lineno, line in enumerate(py.read_text().splitlines(), 1):
+                for m in REF_RE.finditer(line):
+                    refs.append(
+                        (py.relative_to(root), lineno, int(m.group(1))))
     return refs
 
 
