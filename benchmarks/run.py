@@ -118,6 +118,19 @@ def main() -> None:
           f"{best['op']}xL{best['levels']}xC{best['capacity_per_node']}"
           f"=R{best['end_to_end_reduction']:.3f}")
 
+    # --- FPE throughput: scan oracle vs batched fast path (DESIGN.md §8) --
+    from benchmarks import bench_fpe
+
+    fpe_rows = bench_fpe.sweep(
+        ops=("sum", "mean"), lengths=(8192,), ways_list=(4,),
+        backends=("jnp",), variety=1024, capacity=256, dist="zipf", reps=2)
+    fpe_rows.append(bench_fpe.headline_row(reps=2, check=False))
+    results["fpe"] = fpe_rows
+    bench_fpe.write_out(fpe_rows, os.path.join(out_dir, "BENCH_fpe.json"))
+    hl = fpe_rows[-1]
+    print(f"fpe_fast_path,{hl['fast_us']:.0f},"
+          f"{hl['speedup']}x_vs_scan@100k_zipf")
+
     # --- packet-level JCT: switchagg vs host-only (DESIGN.md §7) ----------
     from benchmarks import bench_jct
 

@@ -43,6 +43,26 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+# ---------------------------------------------------------------------------
+# Shared key hash.
+# ---------------------------------------------------------------------------
+
+#: Knuth/Fibonacci multiplicative hash constant — THE one copy shared by the
+#: jnp FPE (``core.kvagg``) and the Pallas kernel (``kernels.kv_aggregate``),
+#: so the two bucket functions cannot drift apart.
+HASH_MULT = 0x9E3779B1
+
+
+def hash_key(key: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """Multiplicative hash of int32 keys into [0, n_buckets).
+
+    Pure jnp, traceable both in regular jax programs and inside Pallas
+    kernel bodies (``n_buckets`` is a trace-time python int in both).
+    """
+    h = key.astype(jnp.uint32) * jnp.uint32(HASH_MULT)
+    h = h ^ (h >> jnp.uint32(15))
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
 
 def _bound_identity(dtype, kind: str) -> jnp.ndarray:
     """Dtype-aware max/min identity: finfo/iinfo bounds, never ±inf.

@@ -138,13 +138,16 @@ def run_level(
     backend: str = "jnp",
     block_n: int = 512,
     interpret: bool | None = None,
+    exact_stream: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray, LevelStats]:
     """One cascade hop on carried values; traceable inside jit/shard_map.
 
     Returns (out_keys, out_values, stats).  With ``capacity > 0`` the
-    output is [capacity + n] (table flush + eviction stream, BPE-combined
-    when ``spec.bpe``); with ``capacity == 0`` it is the exact packed
-    combine of shape [n].
+    output is [capacity + n(+capacity)] (table flush + eviction stream,
+    BPE-combined when ``spec.bpe``); with ``capacity == 0`` it is the
+    exact packed combine of shape [n].  ``exact_stream=False`` runs the
+    node's FPE on the batched-block fast path (DESIGN.md §8): identical
+    grouped totals, non-paper-faithful eviction pattern.
     """
     if spec.capacity == 0:
         n_in = jnp.sum(keys != EMPTY_KEY).astype(jnp.int32)
@@ -156,10 +159,11 @@ def run_level(
 
         tk, tv, ek, ev = fpe_aggregate_pallas(
             keys, values, capacity=spec.capacity, ways=spec.ways, op=op,
-            block_n=block_n, interpret=interpret)
+            block_n=block_n, interpret=interpret, exact_stream=exact_stream)
     elif backend == "jnp":
         tk, tv, ek, ev = kvagg.fpe_aggregate(
-            keys, values, capacity=spec.capacity, ways=spec.ways, op=op)
+            keys, values, capacity=spec.capacity, ways=spec.ways, op=op,
+            exact_stream=exact_stream)
     else:
         raise ValueError(f"unknown dataplane backend: {backend!r}")
     # one node-assembly policy for all paths (kvagg.assemble_node)
@@ -190,7 +194,7 @@ class CascadeResult(NamedTuple):
 @functools.partial(
     jax.jit,
     static_argnames=("plan", "backend", "block_n", "interpret",
-                     "final_combine", "prepare", "finalize"),
+                     "final_combine", "prepare", "finalize", "exact_stream"),
 )
 def run_cascade(
     keys: jnp.ndarray,
@@ -203,6 +207,7 @@ def run_cascade(
     final_combine: bool = True,
     prepare: bool = True,
     finalize: bool = True,
+    exact_stream: bool = True,
 ) -> CascadeResult:
     """Execute a full multi-level cascade plan over one KV stream.
 
@@ -211,7 +216,10 @@ def run_cascade(
     ``prepare``/``finalize`` apply the op's carried-representation
     conversions at the edges; ``final_combine`` packs the root stream into
     unique keys (exact grouped result) without affecting ``n_out``, which
-    always measures the traffic leaving the last level.
+    always measures the traffic leaving the last level.  ``exact_stream=
+    False`` runs every FPE on the batched-block fast path (DESIGN.md §8):
+    grouped totals are identical, per-level eviction *traffic* may differ
+    from the paper-faithful scan — keep the default for Fig. 9 curves.
     """
     op = aggops.get(plan.op)
     k = keys
@@ -219,7 +227,8 @@ def run_cascade(
     li, lo, le = [], [], []
     for spec in plan.levels:
         k, v, stats = run_level(k, v, spec, plan.op, backend=backend,
-                                block_n=block_n, interpret=interpret)
+                                block_n=block_n, interpret=interpret,
+                                exact_stream=exact_stream)
         li.append(stats.n_in)
         lo.append(stats.n_out)
         le.append(stats.n_evict)
@@ -254,12 +263,20 @@ class LevelState:
 
     ``batch_pad`` pads every ingest to a fixed length (the packet record
     capacity) so the underlying jitted FPE compiles once; batches longer
-    than ``batch_pad`` are chunked.  A ``capacity == 0`` spec is the exact
-    unbounded node: it absorbs every record (no evictions) and emits its
-    whole table at ``flush`` — ingests just buffer rows, compacted to the
+    than ``batch_pad`` are chunked.  Without ``batch_pad``, ingests are
+    padded to the next power of two (min ``MIN_PAD``) — the shape-stable
+    size buckets that keep the trace count O(log max_batch) across
+    arbitrary packet lengths instead of one retrace per distinct length
+    (DESIGN.md §8).  A ``capacity == 0`` spec is the exact unbounded
+    node: it absorbs every record (no evictions) and emits its whole
+    table at ``flush`` — ingests just buffer rows, compacted to the
     unique-key combine by a bulk ``sorted_combine`` (pow2-padded so the
     jit compiles once per size bucket) whenever the buffer tops
     ``COMPACT_THRESHOLD`` and at flush.
+
+    ``exact_stream=False`` runs each ingest's FPE on the batched-block
+    fast path (DESIGN.md §8) — same grouped totals and resident table
+    geometry, eviction pattern not paper-faithful.
 
     Telemetry mirrors :class:`LevelStats`: ``n_in`` real pairs ingested,
     ``n_evict`` FPE evictions, ``n_out`` pairs forwarded downstream
@@ -270,12 +287,17 @@ class LevelState:
     #: buffer with one bulk sorted_combine (keeps memory ~O(variety))
     COMPACT_THRESHOLD = 8192
 
+    #: smallest shape-stable ingest pad (no batch_pad): packets shorter
+    #: than this share one trace instead of one per tiny length
+    MIN_PAD = 8
+
     def __init__(self, spec: LevelSpec, op: str, *,
-                 batch_pad: int | None = None):
+                 batch_pad: int | None = None, exact_stream: bool = True):
         self.spec = spec
         self.op = op
         self._aggop = aggops.get(op)
         self.batch_pad = batch_pad
+        self.exact_stream = exact_stream
         self._tk: jnp.ndarray | None = None
         self._tv: jnp.ndarray | None = None
         # capacity == 0: buffered rows, bulk-combined lazily — per-record
@@ -317,7 +339,13 @@ class LevelState:
             if self._exact_rows > self.COMPACT_THRESHOLD:
                 self._compact_exact()
             return self._empty_out()
-        pad = self.batch_pad or keys.shape[0]
+        if self.batch_pad:
+            pad = self.batch_pad
+        else:
+            # shape-stable size bucket: next pow2 >= len (min MIN_PAD), so
+            # varying packet lengths reuse O(log n) compiled traces
+            pad = max(self.MIN_PAD,
+                      1 << (int(keys.shape[0]) - 1).bit_length())
         out_k, out_v = [], []
         for lo in range(0, keys.shape[0], pad):
             ek, ev = self._ingest_chunk(keys[lo:lo + pad],
@@ -342,6 +370,7 @@ class LevelState:
         res = kvagg.fpe_aggregate(
             jnp.asarray(keys), jnp.asarray(values),
             capacity=self.spec.capacity, ways=self.spec.ways, op=self.op,
+            exact_stream=self.exact_stream,
             table_keys=self._tk, table_values=self._tv)
         self._tk, self._tv = res.table_keys, res.table_values
         self.n_evict += int(np.sum(np.asarray(res.evict_keys) != _EMPTY))
@@ -397,6 +426,7 @@ def run_cascade_stream(
     final_combine: bool = True,
     prepare: bool = True,
     finalize: bool = True,
+    exact_stream: bool = True,
 ) -> CascadeResult:
     """Packet-batched counterpart of :func:`run_cascade` (DESIGN.md §7).
 
@@ -408,9 +438,16 @@ def run_cascade_stream(
     the root stream by key equals :func:`run_cascade`'s exact result for
     every registered op — packetization changes *traffic* (what ``n_out``
     measures), never totals.
+
+    Ingest is shape-stable: without ``batch_pad`` every packet is padded
+    to a pow2 size bucket (``LevelState.MIN_PAD`` floor), so streaming
+    arbitrary packet lengths compiles O(log max_len) FPE traces, not one
+    per distinct length (DESIGN.md §8).  ``exact_stream=False`` runs all
+    node FPEs on the batched-block fast path.
     """
     op = aggops.get(plan.op)
-    states = [LevelState(spec, plan.op, batch_pad=batch_pad)
+    states = [LevelState(spec, plan.op, batch_pad=batch_pad,
+                         exact_stream=exact_stream)
               for spec in plan.levels]
     root_k: list[np.ndarray] = []
     root_v: list[np.ndarray] = []

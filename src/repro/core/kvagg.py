@@ -25,6 +25,12 @@ eviction decisions are key-driven, so lanes ride along untouched.
 
 This module is the pure-jnp implementation; ``repro.kernels.kv_aggregate``
 is the Pallas/TPU version of the FPE loop with identical semantics.
+
+Every FPE entry point takes ``exact_stream`` (DESIGN.md §8): True is the
+paper-faithful sequential scan with a bit-reproducible eviction trace;
+False is the batched-block fast path — within-block pre-combine plus a
+closed-form vectorized bucket update — with identical grouped-combine
+totals but a different eviction pattern, ~5-8x the scan's pairs/sec.
 """
 
 from __future__ import annotations
@@ -39,14 +45,9 @@ from . import aggops
 
 EMPTY_KEY = jnp.int32(-1)
 
-_HASH_MULT = jnp.uint32(0x9E3779B1)  # Knuth/Fibonacci multiplicative hash
-
-
-def hash_key(key: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
-    """Multiplicative hash of int32 keys into [0, n_buckets)."""
-    h = key.astype(jnp.uint32) * _HASH_MULT
-    h = h ^ (h >> jnp.uint32(15))
-    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+# THE key hash lives in core.aggops (one copy for the jnp engine and the
+# Pallas kernel); re-exported here for existing callers.
+hash_key = aggops.hash_key
 
 
 class FPEResult(NamedTuple):
@@ -56,7 +57,16 @@ class FPEResult(NamedTuple):
     evict_values: jnp.ndarray  # [n, *lanes]
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "ways", "op"))
+def _fpe_geometry(capacity: int, ways: int) -> tuple[int, int, int]:
+    """(ways, n_buckets, cap) — THE table-geometry clamp, shared by the
+    scan path, the batched fast path, and the Pallas wrapper."""
+    ways = max(1, min(ways, capacity))
+    n_buckets = max(1, capacity // ways)
+    return ways, n_buckets, n_buckets * ways
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "ways", "op", "exact_stream"))
 def fpe_aggregate(
     keys: jnp.ndarray,
     values: jnp.ndarray,
@@ -64,15 +74,26 @@ def fpe_aggregate(
     capacity: int,
     ways: int = 4,
     op: str = "sum",
+    exact_stream: bool = True,
     table_keys: jnp.ndarray | None = None,
     table_values: jnp.ndarray | None = None,
 ) -> FPEResult:
-    """Paper-faithful FPE: sequential hash-probe-aggregate-or-evict.
+    """The FPE hash engine: hash-probe-aggregate-or-evict (DESIGN.md §8).
 
     keys: [n] int32 (EMPTY_KEY entries are skipped — allows padded streams)
     values: [n] or [n, lanes] (carried lane dims, e.g. mean's (sum, count))
-    Returns the resident table plus an eviction stream aligned with the
-    input (evict_keys[i] is the pair evicted while processing input i).
+    Returns the resident table plus an eviction stream of n slots,
+    EMPTY_KEY where nothing was evicted.
+
+    ``exact_stream=True`` is the paper-faithful sequential scan: pairs are
+    processed one at a time in stream order, so the eviction stream is
+    bit-reproducible against the switch model (the Fig. 9 traffic curves).
+    ``exact_stream=False`` is the batched-block fast path: duplicate keys
+    in the block are pre-combined (sort + segment reduce), then the
+    surviving distinct keys update the table via vectorized bucket rounds.
+    The grouped-by-key combine of (flush + evictions) is IDENTICAL in both
+    modes — only the eviction *order/pattern* (which pair left when) may
+    differ; see DESIGN.md §8 for the contract.
 
     ``table_keys``/``table_values`` (the flat ``[capacity]`` layout a prior
     call returned) resume from an existing resident table — the streaming
@@ -80,11 +101,30 @@ def fpe_aggregate(
     (``net.sim``), where a switch's table persists across packets and is
     flushed only at end-of-task.
     """
+    if exact_stream:
+        return _fpe_scan(keys, values, capacity=capacity, ways=ways, op=op,
+                         table_keys=table_keys, table_values=table_values)
+    return _fpe_batched(keys, values, capacity=capacity, ways=ways, op=op,
+                        table_keys=table_keys, table_values=table_values)
+
+
+def _fpe_scan(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    capacity: int,
+    ways: int,
+    op: str,
+    table_keys: jnp.ndarray | None,
+    table_values: jnp.ndarray | None,
+) -> FPEResult:
+    """Paper-faithful FPE: sequential hash-probe-aggregate-or-evict.
+
+    evict_keys[i] is the pair evicted while processing input i.
+    """
     aggop = aggops.get(op)
     n = keys.shape[0]
-    ways = max(1, min(ways, capacity))
-    n_buckets = max(1, capacity // ways)
-    cap = n_buckets * ways
+    ways, n_buckets, cap = _fpe_geometry(capacity, ways)
     lane_shape = values.shape[1:]  # () for scalar values
     lane_nd = len(lane_shape)
 
@@ -142,6 +182,188 @@ def fpe_aggregate(
     return FPEResult(tk.reshape(cap), tv.reshape((cap,) + lane_shape), ek, ev)
 
 
+def _group_reduce(keys, values, *, op):
+    """THE bulk group-by-key reduction (DESIGN.md §8): one radix key sort +
+    a binary-search segment-id map + one unsorted segment reduce.
+
+    Returns (k_s, real_start, comb):
+      k_s        [n] keys sorted ascending (EMPTY_KEY is just another value
+                 in the sort; any key except EMPTY_KEY itself is legal),
+      real_start [n] True at the first sorted occurrence of each real key,
+      comb       [n, *lanes] combined value of each key's group, indexed by
+                 the key's FIRST SORTED POSITION (entries that are not a
+                 real first occurrence hold garbage — never read).
+
+    Why this shape: on XLA:CPU the single-operand int sort takes the fast
+    radix path while the variadic comparator sort that would co-sort
+    values with keys is ~10x slower, and scatters cost ~30x a gather.  So
+    values never ride a sort: each ORIGINAL element finds its group with
+    one searchsorted pass and the reduce runs over unsorted segment ids.
+    """
+    aggop = aggops.get(op)
+    n = keys.shape[0]
+    k_s = jnp.sort(keys)
+    change = jnp.concatenate([jnp.ones((1,), bool), k_s[1:] != k_s[:-1]])
+    real_start = change & (k_s != EMPTY_KEY)
+    seg = jnp.searchsorted(k_s, keys, method="scan")
+    comb = aggop.segment_reduce(values, seg, num_segments=n)
+    return k_s, real_start, comb
+
+
+def _fpe_batched(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    capacity: int,
+    ways: int,
+    op: str,
+    table_keys: jnp.ndarray | None,
+    table_values: jnp.ndarray | None,
+) -> FPEResult:
+    """Batched-block FPE fast path (DESIGN.md §8): within-block pre-combine
+    + one closed-form vectorized bucket update instead of one sequential
+    step per pair.
+
+    1. Duplicate keys in the block collapse to one carried value each
+       (``_group_reduce``: sort + ``aggops.segment_reduce``).  Eviction
+       decisions are key-driven, so combining same-key pairs *before*
+       table insertion preserves the grouped-combine conservation
+       invariant.
+    2. One more radix sort orders the distinct keys bucket-major, and the
+       whole block's table update collapses to closed form: each bucket
+       row is a FIFO queue — [residents, new distinct keys] — of which the
+       last ``ways`` survive and the prefix is evicted.  Hits combine into
+       their resident way; every survivor's (slot, key) write rides one
+       int32 composite sort (``slot * n + index``), so the scatter that
+       applies the block touches at most ``capacity`` slots.  No
+       per-element loop, no per-conflict rounds: intra-block bucket
+       conflicts are resolved analytically by the queue arithmetic.
+
+    The eviction stream is [n + capacity] (block evictions in distinct-key
+    order, then residents displaced by the block) instead of the scan
+    path's input-aligned [n]; slots hold EMPTY_KEY where nothing was
+    evicted.  Callers treat both as masked streams, but the *pattern* is
+    not the paper's per-arrival trace — use ``exact_stream=True`` for
+    that.  Requires ``n * max(n_buckets, capacity) < 2**31`` (int32
+    composites); larger calls fall back to the exact scan.
+    """
+    aggop = aggops.get(op)
+    combine = aggop.combine  # resolved once, outside all vector math
+    n = keys.shape[0]
+    ways, n_buckets, cap = _fpe_geometry(capacity, ways)
+    imax = jnp.iinfo(jnp.int32).max
+    if n == 0 or n * max(n_buckets, cap) >= imax:
+        res = _fpe_scan(keys, values, capacity=capacity, ways=ways, op=op,
+                        table_keys=table_keys, table_values=table_values)
+        pad_ev = jnp.full((cap,), EMPTY_KEY, jnp.int32)
+        pad_vv = jnp.zeros((cap,) + values.shape[1:], values.dtype)
+        return FPEResult(  # keep the fast path's [n + cap] stream shape
+            res.table_keys, res.table_values,
+            jnp.concatenate([res.evict_keys, pad_ev]),
+            jnp.concatenate([res.evict_values, pad_vv]))
+    lane_shape = values.shape[1:]
+    lane_nd = len(lane_shape)
+
+    def lanes(m):  # broadcast a mask over trailing lane dims
+        return m.reshape(m.shape + (1,) * lane_nd)
+
+    if table_keys is None:
+        tk = jnp.full((n_buckets, ways), EMPTY_KEY, jnp.int32)
+        tv = jnp.zeros((n_buckets, ways) + lane_shape, values.dtype)
+    else:
+        tk = table_keys.reshape(n_buckets, ways)
+        tv = table_values.reshape((n_buckets, ways) + lane_shape)
+
+    # --- stage 1: within-block pre-combine -------------------------------
+    k_s, real_start, comb = _group_reduce(keys, values, op=op)
+    pos = jnp.arange(n, dtype=jnp.int32)
+
+    # --- stage 2: bucket-major distinct stream (one radix sort) ----------
+    bucket_s = hash_key(k_s, n_buckets)
+    c1 = jnp.sort(jnp.where(real_start, bucket_s * n + pos, imax))
+    valid_d = c1 != imax
+    fp = jnp.where(valid_d, c1 % n, 0)  # first sorted position of key d
+    b_d = jnp.where(valid_d, c1 // n, n_buckets)  # ascending buckets
+    uk = jnp.where(valid_d, k_s[fp], EMPTY_KEY)
+    cv = jnp.where(lanes(valid_d), comb[fp],
+                   jnp.zeros((), values.dtype))
+
+    # --- stage 3: hit detection + FIFO queue arithmetic ------------------
+    b_c = jnp.clip(b_d, 0, n_buckets - 1)
+    rows_k = tk[b_c]  # [n, ways]
+    rows_v = tv[b_c]  # [n, ways, *lanes]
+    hit = (rows_k == uk[:, None]) & valid_d[:, None]
+    is_hit = jnp.any(hit, axis=1)
+    hit_way = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    # resident rows are front-contiguous (both engines insert at the first
+    # empty way and shift full rows left), so the count locates the queue
+    r_d = jnp.sum(rows_k != EMPTY_KEY, axis=1).astype(jnp.int32)
+    nh = valid_d & ~is_hit  # distinct new keys joining the queue
+
+    # per-bucket totals / per-key queue rank from prefix sums over the
+    # bucket-major layout (run starts found by a tiny n_buckets-query
+    # binary search — b_d is sorted)
+    sx = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                          jnp.cumsum(nh.astype(jnp.int32))])
+    rs = jnp.searchsorted(b_d, jnp.arange(n_buckets + 1, dtype=jnp.int32),
+                          method="scan").astype(jnp.int32)
+    q_arr = sx[rs[1:]] - sx[rs[:-1]]  # [n_buckets] new keys per bucket
+    j_d = sx[pos] - sx[rs[b_c]]  # rank of d among its bucket's new keys
+    q_d = q_arr[b_c]
+    # queue [r residents, q new keys]: evict the first E, keep the last W
+    e_d = r_d + q_d - ways  # evictions this bucket must make
+    er_d = jnp.clip(jnp.minimum(r_d, e_d), 0, ways)  # evicted residents
+
+    hit_surv = is_hit & (hit_way >= er_d)
+    hit_evic = is_hit & (hit_way < er_d)  # resident dies before the merge
+    new_surv = nh & (j_d >= jnp.maximum(e_d - r_d, 0))
+    # a key whose resident was shift-evicted re-enters the stream as its
+    # own pair (the resident pair leaves separately): same grouped total
+    self_evict = (nh & ~new_surv) | hit_evic
+
+    way_tgt = jnp.where(
+        hit_surv, hit_way - er_d,
+        r_d + j_d - jnp.maximum(e_d, 0))  # post-shift way of each writer
+    writer = hit_surv | new_surv
+    rows_v_hit = jnp.take_along_axis(
+        rows_v, lanes(hit_way[:, None]), axis=1)[:, 0]
+    wval = jnp.where(lanes(is_hit), combine(rows_v_hit, cv), cv)
+
+    # --- stage 4: apply — shift rows, then scatter the <= cap writers ----
+    r_b = jnp.sum(tk != EMPTY_KEY, axis=1).astype(jnp.int32)
+    e_b = jnp.clip(jnp.minimum(r_b, r_b + q_arr - ways), 0, ways)
+    wi = jnp.arange(ways, dtype=jnp.int32)[None, :]
+    src = jnp.clip(wi + e_b[:, None], 0, ways - 1)
+    keep = (wi + e_b[:, None]) < ways
+    sh_tk = jnp.where(keep, jnp.take_along_axis(tk, src, axis=1), EMPTY_KEY)
+    sh_tv = jnp.where(lanes(keep),
+                      jnp.take_along_axis(tv, lanes(src), axis=1),
+                      jnp.zeros((), values.dtype))
+
+    # every write target (bucket, way) is unique, so there are at most
+    # cap writers: one composite sort packs them for a cap-sized scatter
+    c2 = jnp.sort(jnp.where(writer, (b_d * ways + way_tgt) * n + pos,
+                            imax))[:cap]
+    w2 = c2 != imax
+    slot2 = jnp.where(w2, c2 // n, cap)  # cap = out of bounds -> dropped
+    d2 = jnp.where(w2, c2 % n, 0)
+    flat_k = sh_tk.reshape(cap).at[slot2].set(uk[d2], mode="drop")
+    flat_v = sh_tv.reshape((cap,) + lane_shape).at[slot2].set(
+        wval[d2], mode="drop")
+
+    # --- eviction stream: block self-evictions + displaced residents -----
+    ev_k = jnp.where(self_evict, uk, EMPTY_KEY)
+    ev_v = jnp.where(lanes(self_evict), cv, jnp.zeros((), values.dtype))
+    res_ev = wi < e_b[:, None]  # [n_buckets, ways]
+    rv_k = jnp.where(res_ev, tk, EMPTY_KEY).reshape(cap)
+    rv_v = jnp.where(lanes(res_ev), tv,
+                     jnp.zeros((), values.dtype)).reshape(
+        (cap,) + lane_shape)
+    return FPEResult(flat_k, flat_v,
+                     jnp.concatenate([ev_k, rv_k]),
+                     jnp.concatenate([ev_v, rv_v]))
+
+
 class CombineResult(NamedTuple):
     unique_keys: jnp.ndarray  # [n] int32, EMPTY_KEY past n_unique
     combined_values: jnp.ndarray  # [n, *lanes]
@@ -160,32 +382,23 @@ def sorted_combine(keys: jnp.ndarray, values: jnp.ndarray, *, op: str = "sum") -
     aggop = aggops.get(op)
     n = keys.shape[0]
     lane_nd = values.ndim - 1
-    pad = keys == EMPTY_KEY
-    # Sort padding to the end lexicographically by (is_pad, key) — no
+    if n == 0:
+        return CombineResult(keys.astype(jnp.int32), values,
+                             jnp.zeros((), jnp.int32))
+    # One radix sort + searchsorted + unsorted segment reduce
+    # (_group_reduce) — values never ride a comparator sort, and no
     # sentinel remap, so INT32_MAX stays a legal, distinct key.
-    order = jnp.lexsort((keys, pad))
-    sk = keys[order]
-    sv = values[order]
-
-    # Segment ids: increment where the key changes.
-    change = jnp.concatenate([jnp.ones((1,), jnp.int32), (sk[1:] != sk[:-1]).astype(jnp.int32)])
-    seg = jnp.cumsum(change) - 1  # [n] in [0, n)
-
-    ident = aggop.identity(values.dtype)
-    comb = aggop.segment_reduce(sv, seg, n)
-
-    # First occurrence of each segment gives its key.
-    first_idx = jax.ops.segment_min(jnp.arange(n), seg, num_segments=n)
-    n_pad = jnp.sum(pad)
-    n_seg = seg[-1] + 1  # segments including a possible padding segment
-    n_unique = jnp.where(n_pad > 0, n_seg - 1, n_seg).astype(jnp.int32)
-    n_unique = jnp.where(n == n_pad, 0, n_unique)
-
-    slot = jnp.arange(n)
-    valid = slot < n_unique
+    k_s, real_start, comb = _group_reduce(keys, values, op=op)
+    pos = jnp.arange(n, dtype=jnp.int32)
+    # k_s is ascending, so first positions sort to ascending-key order
+    fp = jnp.sort(jnp.where(real_start, pos, jnp.iinfo(jnp.int32).max))
+    n_unique = jnp.sum(real_start).astype(jnp.int32)
+    valid = pos < n_unique
     valid_l = valid.reshape(valid.shape + (1,) * lane_nd)
-    uk = jnp.where(valid, sk[jnp.clip(first_idx, 0, n - 1)], EMPTY_KEY)
-    cv = jnp.where(valid_l, comb, ident)
+    fp_c = jnp.clip(fp, 0, n - 1)
+    ident = aggop.identity(values.dtype)
+    uk = jnp.where(valid, k_s[fp_c], EMPTY_KEY)
+    cv = jnp.where(valid_l, comb[fp_c], ident)
     return CombineResult(uk.astype(jnp.int32), cv, n_unique)
 
 
@@ -211,7 +424,8 @@ class TwoLevelResult(NamedTuple):
     n_evict: jnp.ndarray  # [] int32 — FPE evictions (pre-BPE traffic)
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "ways", "op", "bpe"))
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "ways", "op", "bpe", "exact_stream"))
 def two_level_aggregate(
     keys: jnp.ndarray,
     values: jnp.ndarray,
@@ -220,6 +434,7 @@ def two_level_aggregate(
     ways: int = 4,
     op: str = "sum",
     bpe: bool = True,
+    exact_stream: bool = True,
 ) -> TwoLevelResult:
     """One SwitchAgg aggregation node: FPE hash stage + optional BPE stage.
 
@@ -229,8 +444,12 @@ def two_level_aggregate(
     ("M-*" curves).  See :class:`TwoLevelResult` for the ``n_out``
     duplicate-key invariant.  Ops operate on *carried* values (see
     ``aggops.AggOp.prepare_values``); multi-lane ops pass [n, lanes] values.
+    ``exact_stream=False`` runs the batched-block FPE fast path (DESIGN.md
+    §8): same grouped-combine result, different eviction pattern — keep the
+    default for paper-faithful Fig. 9 traffic curves.
     """
-    fpe = fpe_aggregate(keys, values, capacity=capacity, ways=ways, op=op)
+    fpe = fpe_aggregate(keys, values, capacity=capacity, ways=ways, op=op,
+                        exact_stream=exact_stream)
     return assemble_node(keys, fpe.table_keys, fpe.table_values,
                          fpe.evict_keys, fpe.evict_values, op=op, bpe=bpe)
 

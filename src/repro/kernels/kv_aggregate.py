@@ -3,14 +3,14 @@
 TPU adaptation of the paper's front-end processing engine (§4.2.4):
 
   * The hash table lives in **VMEM** (the switch's SRAM analogue): keys
-    ``[n_buckets, ways]`` int32 + values ``[n_buckets, ways]``, allocated as
-    Pallas scratch so it persists across grid steps while the input stream
-    is tiled through HBM->VMEM block by block (BlockSpec pipeline = the
-    paper's line-rate packet flow).
-  * ``ways`` is the **lane dimension**: one bucket probe is a single VPU
-    compare over the (1, ways) row — the hardware's parallel slot compare.
-    Use ways=128 on real TPUs for full-lane utilization; tests sweep small
-    widths in interpret mode.
+    ``[n_buckets, ways]`` int32 + values ``[n_buckets, ways, lanes]``,
+    allocated as Pallas scratch so it persists across grid steps while the
+    input stream is tiled through HBM->VMEM block by block (BlockSpec
+    pipeline = the paper's line-rate packet flow).
+  * ``ways`` is the **lane dimension** of the bucket probe: one probe is a
+    single VPU compare over the (1, ways) row — the hardware's parallel
+    slot compare.  Use ways=128 on real TPUs for full-lane utilization;
+    tests sweep small widths in interpret mode.
   * On collision the resident way-0 pair is **evicted to the output stream**
     (never a stall/retry — the paper's no-penalty miss), the row shifts
     left, and the new pair occupies the last way (LRU-ish, as in the paper
@@ -25,12 +25,19 @@ Semantics are bit-identical to ``repro.core.kvagg.fpe_aggregate`` (the
 pure-jnp oracle re-exported via ``ref.py``).
 
 Op semantics come from the ``core.aggops`` registry (DESIGN.md §6): the
-``op`` string is resolved to its ``combine`` at trace time, so each
-compiled kernel stays specialized to one op — exactly like the string
-dispatch it replaces, but with one source of truth.  Multi-lane ops
-(``mean``'s paired (sum, count) lanes) are handled in the wrapper: eviction
-decisions are key-driven, so running the single-lane kernel once per lane
-with the same key stream yields bit-aligned tables and eviction streams.
+``op`` string is resolved to its ``combine`` ONCE at trace time, before the
+kernel body is built, so each compiled kernel stays specialized to one op.
+Multi-lane carried ops (``mean``'s paired (sum, count) lanes) run in the
+SAME single ``pallas_call``: the value stream is ``[block_n, lanes]`` and
+the VMEM table carries a trailing lane dimension — eviction decisions are
+key-driven, so all lanes ride one probe/update per element instead of the
+one-kernel-launch-per-lane wrapper this replaced (DESIGN.md §8).
+
+``exact_stream=False`` runs the batched-block fast path (DESIGN.md §8):
+the block is pre-combined to distinct keys by the jnp ``sorted_combine``
+(vectorized VPU work) and only the surviving distinct keys stream through
+the sequential VMEM engine — same grouped-combine result, shorter
+effective stream, non-paper-faithful eviction pattern.
 """
 
 from __future__ import annotations
@@ -43,30 +50,29 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import aggops
+from repro.core import kvagg as _kvagg
 
 EMPTY_KEY = -1  # plain int so kernels inline it as a literal
-_HASH_MULT = 0x9E3779B1
 
-
-def _hash(k: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
-    h = k.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)
-    h = h ^ (h >> jnp.uint32(15))
-    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+# THE key hash (core.aggops.hash_key): one copy shared with the jnp engine
+# so the kernel's bucket function can never drift from the oracle's.
+_hash = aggops.hash_key
 
 
 def _fpe_kernel(
     keys_ref,  # [block_n] int32 (VMEM, streamed)
-    vals_ref,  # [block_n] float (VMEM, streamed)
+    vals_ref,  # [block_n, lanes] (VMEM, streamed)
     evk_ref,  # [block_n] int32 out — eviction stream block
-    evv_ref,  # [block_n] float out
+    evv_ref,  # [block_n, lanes] out
     otk_ref,  # [n_buckets, ways] int32 out — final table (written at flush)
-    otv_ref,  # [n_buckets, ways] float out
+    otv_ref,  # [n_buckets, ways, lanes] out
     tk_ref,  # scratch: resident keys
-    tv_ref,  # scratch: resident values
+    tv_ref,  # scratch: resident values (lane dim trailing)
     *,
     n_buckets: int,
     ways: int,
-    op: str,
+    lanes: int,
+    combine,  # aggops combine fn, resolved ONCE before the body is traced
     n_blocks: int,
 ):
     pid = pl.program_id(0)
@@ -74,19 +80,20 @@ def _fpe_kernel(
     @pl.when(pid == 0)
     def _init():
         tk_ref[...] = jnp.full((n_buckets, ways), EMPTY_KEY, dtype=jnp.int32)
-        tv_ref[...] = jnp.zeros((n_buckets, ways), dtype=tv_ref.dtype)
+        tv_ref[...] = jnp.zeros((n_buckets, ways, lanes), dtype=tv_ref.dtype)
 
     block_n = keys_ref.shape[0]
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, ways), 1)
 
     def body(i, _):
         k = keys_ref[i]
-        v = vals_ref[i]
+        v = vals_ref[i, :]  # [lanes] — every value lane of this element
         is_pad = k == EMPTY_KEY
         b = _hash(k, n_buckets)
 
         row_k = pl.load(tk_ref, (pl.ds(b, 1), slice(None)))  # (1, ways)
-        row_v = pl.load(tv_ref, (pl.ds(b, 1), slice(None)))
+        row_v = pl.load(
+            tv_ref, (pl.ds(b, 1), slice(None), slice(None)))  # (1, ways, L)
 
         hit = row_k == k  # (1, ways) — one VPU compare = the bucket probe
         any_hit = jnp.any(hit) & ~is_pad
@@ -94,19 +101,23 @@ def _fpe_kernel(
         any_empty = jnp.any(empty) & ~is_pad
         empty_idx = jnp.argmax(empty.astype(jnp.int32))  # first empty way
 
-        # hit: aggregate into the matching way (op resolved at trace time)
-        agg_v = jnp.where(hit, aggops.get(op).combine(row_v, v), row_v)
+        v_row = v[None, None, :]  # (1, 1, lanes) — broadcasts over ways
+
+        # hit: aggregate every lane into the matching way
+        agg_v = jnp.where(hit[..., None], combine(row_v, v_row), row_v)
 
         # miss+empty: insert at first empty way
         at_empty = lane == empty_idx
         ins_k = jnp.where(at_empty, k, row_k)
-        ins_v = jnp.where(at_empty, v, row_v)
+        ins_v = jnp.where(at_empty[..., None], v_row, row_v)
 
         # miss+full: evict way 0, shift left, insert at last way
         ev_k = row_k[0, 0]
-        ev_v = row_v[0, 0]
-        sh_k = jnp.where(lane == ways - 1, k, jnp.roll(row_k, -1, axis=1))
-        sh_v = jnp.where(lane == ways - 1, v, jnp.roll(row_v, -1, axis=1))
+        ev_v = row_v[0, 0, :]  # [lanes]
+        at_last = lane == ways - 1
+        sh_k = jnp.where(at_last, k, jnp.roll(row_k, -1, axis=1))
+        sh_v = jnp.where(at_last[..., None], v_row,
+                         jnp.roll(row_v, -1, axis=1))
 
         new_k = jnp.where(any_hit, row_k, jnp.where(any_empty, ins_k, sh_k))
         new_v = jnp.where(any_hit, agg_v, jnp.where(any_empty, ins_v, sh_v))
@@ -115,12 +126,12 @@ def _fpe_kernel(
 
         evicted = (~any_hit) & (~any_empty) & (~is_pad)
         out_k = jnp.where(evicted, ev_k, EMPTY_KEY)
-        out_v = jnp.where(evicted, ev_v, jnp.zeros((), tv_ref.dtype))
+        out_v = jnp.where(evicted, ev_v, jnp.zeros((lanes,), tv_ref.dtype))
 
         pl.store(tk_ref, (pl.ds(b, 1), slice(None)), new_k)
-        pl.store(tv_ref, (pl.ds(b, 1), slice(None)), new_v)
+        pl.store(tv_ref, (pl.ds(b, 1), slice(None), slice(None)), new_v)
         pl.store(evk_ref, (pl.ds(i, 1),), out_k[None])
-        pl.store(evv_ref, (pl.ds(i, 1),), out_v[None])
+        pl.store(evv_ref, (pl.ds(i, 1), slice(None)), out_v[None])
         return 0
 
     jax.lax.fori_loop(0, block_n, body, 0)
@@ -133,7 +144,9 @@ def _fpe_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("capacity", "ways", "op", "block_n", "interpret")
+    jax.jit,
+    static_argnames=("capacity", "ways", "op", "block_n", "exact_stream",
+                     "interpret"),
 )
 def fpe_aggregate_pallas(
     keys: jnp.ndarray,
@@ -143,6 +156,7 @@ def fpe_aggregate_pallas(
     ways: int = 4,
     op: str = "sum",
     block_n: int = 512,
+    exact_stream: bool = True,
     interpret: bool | None = None,
 ):
     """Run the FPE kernel over a KV stream.
@@ -150,40 +164,49 @@ def fpe_aggregate_pallas(
     Returns (table_keys [capacity], table_values [capacity, *lanes],
              evict_keys [n], evict_values [n, *lanes]) — same contract as
     ``core.kvagg.fpe_aggregate``.  Values with a trailing lane dim (multi-
-    lane carried ops, e.g. ``mean``) run the kernel once per lane over the
-    shared key stream; key outputs are lane-invariant by construction.
+    lane carried ops, e.g. ``mean``) run in the SAME kernel launch: the
+    VMEM table carries a lane dimension and each element's probe updates
+    every lane at once.
+
+    ``exact_stream=False`` pre-combines the block to distinct keys
+    (``kvagg.sorted_combine`` — vectorized) before streaming it through
+    the kernel, so the sequential engine touches each distinct key once;
+    the eviction *pattern* then differs from the paper-faithful trace
+    (DESIGN.md §8) while the grouped-combine result is identical.  NOTE:
+    in that mode the eviction stream stays [n] (slot d = the d-th sorted
+    distinct key) whereas the jnp fast path emits [n + capacity]
+    (displaced residents appended) — compare the two fast modes by
+    resident table and grouped totals, not elementwise stream shape.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    if values.ndim == 2:
-        lanes = values.shape[1]
-        tks, tvs, eks, evs = zip(*(
-            fpe_aggregate_pallas(
-                keys, values[:, l], capacity=capacity, ways=ways, op=op,
-                block_n=block_n, interpret=interpret)
-            for l in range(lanes)))
-        return (tks[0], jnp.stack(tvs, axis=-1), eks[0],
-                jnp.stack(evs, axis=-1))
     n = keys.shape[0]
-    ways = max(1, min(ways, capacity))
-    n_buckets = max(1, capacity // ways)
-    cap = n_buckets * ways
+    squeeze = values.ndim == 1
+    if exact_stream is False:
+        c = _kvagg.sorted_combine(keys, values, op=op)
+        keys, values = c.unique_keys, c.combined_values
+    if values.ndim == 1:
+        values = values[:, None]
+    lanes = values.shape[1]
+    ways, n_buckets, cap = _kvagg._fpe_geometry(capacity, ways)
 
     pad = (-n) % block_n
     if pad:
         keys = jnp.concatenate([keys, jnp.full((pad,), EMPTY_KEY, jnp.int32)])
-        values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad, lanes), values.dtype)])
     total = keys.shape[0]
     n_blocks = total // block_n
 
     kernel = functools.partial(
-        _fpe_kernel, n_buckets=n_buckets, ways=ways, op=op, n_blocks=n_blocks
+        _fpe_kernel, n_buckets=n_buckets, ways=ways, lanes=lanes,
+        combine=aggops.get(op).combine, n_blocks=n_blocks,
     )
     out_shapes = (
         jax.ShapeDtypeStruct((total,), jnp.int32),  # evict keys
-        jax.ShapeDtypeStruct((total,), values.dtype),  # evict values
+        jax.ShapeDtypeStruct((total, lanes), values.dtype),  # evict values
         jax.ShapeDtypeStruct((n_buckets, ways), jnp.int32),  # table keys
-        jax.ShapeDtypeStruct((n_buckets, ways), values.dtype),  # table values
+        jax.ShapeDtypeStruct((n_buckets, ways, lanes), values.dtype),
     )
     grid = (n_blocks,)
     evk, evv, otk, otv = pl.pallas_call(
@@ -191,19 +214,23 @@ def fpe_aggregate_pallas(
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, lanes), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, lanes), lambda i: (i, 0)),
             pl.BlockSpec((n_buckets, ways), lambda i: (0, 0)),
-            pl.BlockSpec((n_buckets, ways), lambda i: (0, 0)),
+            pl.BlockSpec((n_buckets, ways, lanes), lambda i: (0, 0, 0)),
         ],
         out_shape=out_shapes,
         scratch_shapes=[
             pltpu.VMEM((n_buckets, ways), jnp.int32),
-            pltpu.VMEM((n_buckets, ways), values.dtype),
+            pltpu.VMEM((n_buckets, ways, lanes), values.dtype),
         ],
         interpret=interpret,
     )(keys, values)
-    return otk.reshape(cap), otv.reshape(cap), evk[:n], evv[:n]
+    tv = otv.reshape(cap, lanes)
+    ek, ev = evk[:n], evv[:n]
+    if squeeze:
+        return otk.reshape(cap), tv[:, 0], ek, ev[:, 0]
+    return otk.reshape(cap), tv, ek, ev

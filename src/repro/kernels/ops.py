@@ -36,7 +36,9 @@ class TwoLevelOut(NamedTuple):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("capacity", "ways", "op", "block_n", "bpe", "interpret")
+    jax.jit,
+    static_argnames=("capacity", "ways", "op", "block_n", "bpe",
+                     "exact_stream", "interpret"),
 )
 def two_level_aggregate(
     keys: jnp.ndarray,
@@ -47,16 +49,20 @@ def two_level_aggregate(
     op: str = "sum",
     block_n: int = 512,
     bpe: bool = True,
+    exact_stream: bool = True,
     interpret: bool | None = None,
 ) -> TwoLevelOut:
     """SwitchAgg node with the Pallas FPE (kernel) + BPE (bulk combine).
 
     Node assembly/accounting delegates to ``kvagg.assemble_node`` — the one
     copy of the policy shared with the jnp node and the cascade executor.
+    ``exact_stream=False`` pre-combines each block before the kernel
+    (DESIGN.md §8 fast path): identical grouped output, different
+    eviction pattern.
     """
     tk, tv, ek, ev = fpe_aggregate_pallas(
         keys, values, capacity=capacity, ways=ways, op=op, block_n=block_n,
-        interpret=interpret,
+        exact_stream=exact_stream, interpret=interpret,
     )
     return TwoLevelOut(*_kvagg.assemble_node(keys, tk, tv, ek, ev,
                                              op=op, bpe=bpe))

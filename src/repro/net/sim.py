@@ -62,6 +62,10 @@ class NetConfig:
     window: int = 16  # go-back-N window
     timeout_s: float | None = None  # None: per-link conservative RTO
     records_per_packet: int = wire.RECORDS_PER_PACKET
+    #: False runs every switch FPE on the batched-block fast path
+    #: (DESIGN.md §8): same delivered totals, eviction traffic not
+    #: paper-faithful — keep True for Fig. 9/10 reproductions
+    exact_stream: bool = True
 
 
 class _Node:
@@ -74,7 +78,8 @@ class _Node:
         self.n_children = n_children
         self.aggregate = aggregate
         self.state = (dataplane.LevelState(
-            spec, op, batch_pad=cfg.records_per_packet)
+            spec, op, batch_pad=cfg.records_per_packet,
+            exact_stream=cfg.exact_stream)
             if aggregate else None)
         self.receiver = transport.Receiver()
         self.proc_free = 0.0

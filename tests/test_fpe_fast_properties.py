@@ -1,0 +1,102 @@
+"""Batched-block FPE fast path hypothesis properties (DESIGN.md §8).
+
+Kept separate from tests/test_fpe_fast.py so the deterministic coverage
+runs on every environment; only THIS module skips without hypothesis.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="dev-only dep: pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggops, kvagg
+from test_fpe_fast import _assert_same_grouped, _fast_stream_grouped, _grouped
+
+EMPTY = int(kvagg.EMPTY_KEY)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    variety=st.integers(1, 64),
+    capacity=st.sampled_from([1, 4, 16, 64]),
+    ways=st.sampled_from([1, 2, 4]),
+    n_blocks=st.integers(1, 4),
+    op=st.sampled_from(sorted(aggops.names())),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_fast_path_equals_scan_grouped_combine(
+        n, variety, capacity, ways, n_blocks, op, seed):
+    """For ANY stream, capacity/ways geometry, block split, and EVERY
+    registered AggOp (incl. multi-lane carried ops), the fast path's
+    (flush + evictions) grouped by key equals the scan oracle's."""
+    r = np.random.default_rng(seed)
+    keys = r.integers(0, variety, size=n).astype(np.int32)
+    raw = r.integers(-8, 8, size=n).astype(np.float32)
+    carried = np.asarray(aggops.get(op).prepare_values(jnp.asarray(raw)))
+
+    scan = kvagg.fpe_aggregate(
+        jnp.asarray(keys), jnp.asarray(carried), capacity=capacity,
+        ways=ways, op=op, exact_stream=True)
+    want = _grouped(np.concatenate([scan.table_keys, scan.evict_keys]),
+                    np.concatenate([scan.table_values, scan.evict_values]),
+                    op)
+    got = _fast_stream_grouped(keys, carried, capacity=capacity, ways=ways,
+                               op=op, n_blocks=n_blocks)
+    _assert_same_grouped(got, want, op)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    variety=st.integers(1, 128),
+    capacity=st.sampled_from([1, 8, 64]),
+    ways=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_fast_path_table_invariants(n, variety, capacity, ways, seed):
+    """The fast path's resident table obeys the engine invariants the
+    closed form (and any resumed call) relies on: every key sits in its
+    hash bucket, rows are front-contiguous, and no key is resident twice."""
+    from test_fpe_fast import assert_table_invariants
+
+    r = np.random.default_rng(seed)
+    keys = jnp.asarray(r.integers(0, variety, size=n).astype(np.int32))
+    vals = jnp.asarray(r.standard_normal(n).astype(np.float32))
+    res = kvagg.fpe_aggregate(keys, vals, capacity=capacity, ways=ways,
+                              op="sum", exact_stream=False)
+    assert_table_invariants(res.table_keys, capacity=capacity, ways=ways)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 150),
+    variety=st.integers(1, 40),
+    op=st.sampled_from(sorted(aggops.names())),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_sorted_combine_matches_oracle(n, variety, op, seed):
+    """sorted_combine (rebuilt on the radix-sort + searchsorted group
+    reduce) still matches the brute-force oracle for every op."""
+    from conftest import dict_aggregate
+
+    r = np.random.default_rng(seed)
+    keys = r.integers(0, variety, size=n).astype(np.int32)
+    mask = r.random(n) < 0.2
+    keys = np.where(mask, EMPTY, keys).astype(np.int32)
+    raw = r.integers(-8, 8, size=n).astype(np.float32)
+    aggop = aggops.get(op)
+    carried = aggop.prepare_values(jnp.asarray(raw))
+    c = kvagg.sorted_combine(jnp.asarray(keys), carried, op=op)
+    nu = int(c.n_unique)
+    uk = np.asarray(c.unique_keys)
+    fin = np.asarray(aggop.finalize_values(c.combined_values))
+    got = {int(k): float(fin[i]) for i, k in enumerate(uk[:nu])}
+    want = dict_aggregate(keys, np.where(mask, 0, raw), op=op)
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-4, atol=1e-5)
+    # packed ascending, EMPTY padding after n_unique
+    assert np.all(np.diff(uk[:nu]) > 0)
+    assert np.all(uk[nu:] == EMPTY)

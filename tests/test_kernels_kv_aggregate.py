@@ -152,6 +152,51 @@ def test_property_kernel_equals_scan_ref(n, variety, seed):
     np.testing.assert_allclose(ev, ro.evict_values)
 
 
+@pytest.mark.parametrize("op,lanes", [("mean", 2)])
+def test_kernel_multilane_single_pass(op, lanes, rng):
+    """Multi-lane carried ops run in ONE pallas_call (values [n, lanes],
+    lane-carrying VMEM table) and stay bit-identical to the jnp scan."""
+    from repro.core import aggops, kvagg
+
+    keys = jnp.asarray(rng.integers(0, 24, size=200).astype(np.int32))
+    raw = jnp.asarray(rng.standard_normal(200).astype(np.float32))
+    vals = aggops.get(op).prepare_values(raw)
+    assert vals.shape == (200, lanes)
+    tk, tv, ek, ev = fpe_aggregate_pallas(
+        keys, vals, capacity=16, ways=4, op=op, block_n=64, interpret=True)
+    r = kvagg.fpe_aggregate(keys, vals, capacity=16, ways=4, op=op)
+    np.testing.assert_array_equal(tk, r.table_keys)
+    np.testing.assert_allclose(tv, r.table_values, rtol=0, atol=0)
+    np.testing.assert_array_equal(ek, r.evict_keys)
+    np.testing.assert_allclose(ev, r.evict_values, rtol=0, atol=0)
+    assert tv.shape == (16, lanes) and ev.shape == (200, lanes)
+
+
+def test_kernel_fast_mode_matches_jnp_fast_tables(rng):
+    """exact_stream=False: the kernel consumes the same pre-combined
+    distinct stream as the jnp closed form, so the resident tables agree
+    and conservation holds through the pallas fast path."""
+    from conftest import dict_aggregate
+    from repro.core import kvagg
+
+    keys = jnp.asarray(rng.integers(0, 40, size=300).astype(np.int32))
+    vals = jnp.asarray(rng.standard_normal(300).astype(np.float32))
+    tkp, tvp, ekp, evp = fpe_aggregate_pallas(
+        keys, vals, capacity=16, ways=4, block_n=64, interpret=True,
+        exact_stream=False)
+    fj = kvagg.fpe_aggregate(keys, vals, capacity=16, ways=4,
+                             exact_stream=False)
+    np.testing.assert_array_equal(tkp, fj.table_keys)
+    np.testing.assert_allclose(np.asarray(tvp), np.asarray(fj.table_values),
+                               rtol=1e-6, atol=1e-6)
+    got = dict_aggregate(np.concatenate([np.asarray(tkp), np.asarray(ekp)]),
+                         np.concatenate([np.asarray(tvp), np.asarray(evp)]))
+    want = dict_aggregate(keys, vals)
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-5, atol=1e-5)
+
+
 def test_eviction_rate_drops_with_capacity(rng):
     """Paper Fig. 2a mechanism: more capacity -> fewer evictions."""
     keys, vals = _stream(rng, 512, key_variety=256)
