@@ -1,0 +1,19 @@
+"""Shared helpers for the bench suites.
+
+One place owns the ``BENCH_*.json`` schema (``{"bench": name, "rows":
+[...]}``) that the CI artifact upload and ``tools/check_bench_regression``
+parse — each suite's ``write_out`` delegates here, so a schema change
+cannot drift per suite.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def write_bench_json(rows: list[dict], out_path: str, *, bench: str) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"bench": bench, "rows": rows}, f, indent=1)
+    print(f"wrote {out_path} ({len(rows)} rows)")

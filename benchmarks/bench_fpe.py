@@ -26,7 +26,6 @@ the fast path over the scan oracle.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -34,6 +33,11 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:  # package import (benchmarks.run) or standalone CLI
+    from benchmarks._util import write_bench_json
+except ImportError:  # `python benchmarks/bench_*.py`: sys.path[0] is here
+    from _util import write_bench_json
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
                            "BENCH_fpe.json")
@@ -193,10 +197,7 @@ def headline_row(*, reps: int = 3, check: bool = True) -> dict:
 
 
 def write_out(rows: list[dict], out_path: str) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump({"bench": "fpe", "rows": rows}, f, indent=1)
-    print(f"wrote {out_path} ({len(rows)} rows)")
+    write_bench_json(rows, out_path, bench="fpe")
 
 
 def print_rows(rows: list[dict]) -> None:

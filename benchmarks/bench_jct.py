@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import sys
 import time
@@ -29,6 +28,11 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:  # package import (benchmarks.run) or standalone CLI
+    from benchmarks._util import write_bench_json
+except ImportError:  # `python benchmarks/bench_*.py`: sys.path[0] is here
+    from _util import write_bench_json
 
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
                            "BENCH_jct.json")
@@ -111,10 +115,7 @@ def smoke_rows() -> list[dict]:
 
 
 def write_out(rows: list[dict], out_path: str) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump({"bench": "jct", "rows": rows}, f, indent=1)
-    print(f"wrote {out_path} ({len(rows)} rows)")
+    write_bench_json(rows, out_path, bench="jct")
 
 
 def print_rows(rows: list[dict]) -> None:

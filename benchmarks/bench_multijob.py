@@ -27,6 +27,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # package import (benchmarks.run) or standalone CLI
+    from benchmarks._util import write_bench_json
+except ImportError:  # `python benchmarks/bench_*.py`: sys.path[0] is here
+    from _util import write_bench_json
+
 from repro.core import planner as pl
 from repro.core.collectives import GradAggMode
 
@@ -87,6 +92,24 @@ def run_once(n_jobs: int, *, budget_mb: float, partition: str,
         "max_drain_ms": report.max_drain_s * 1e3,
         "link_totals_mb": {a: b / MiB for a, b in report.link_totals.items()},
     }
+
+
+def smoke_rows() -> list[dict]:
+    """The CI cell: 4 tenants, weighted partition, 128 MiB scarce budget —
+    asserts the congestion-aware plans beat independent flat all-reduces."""
+    res = run_once(4, budget_mb=128.0, partition="weighted", base_mb=256.0)
+    assert res["total_scarce_mb"] < res["flat_total_scarce_mb"], (
+        "congestion-aware plans must beat independent flat all-reduces")
+    return [res]
+
+
+def write_out(rows: list[dict], out_path: str) -> None:
+    write_bench_json(rows, out_path, bench="multijob")
+
+
+def print_rows(rows: list[dict]) -> None:
+    for res in rows:
+        print_report(res)
 
 
 def print_report(res: dict) -> None:

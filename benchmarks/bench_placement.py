@@ -1,0 +1,228 @@
+"""Rack-scale placement benchmark: pods x oversubscription x policy
+(DESIGN.md §9).
+
+For each fat-tree configuration the aggregation-tree placement search
+(``core.planner.place_aggregation_tree``) is run under every policy and we
+record the modeled scarce-uplink bytes, total network bytes, reducer-link
+bytes, and switch count — the SOAR-style question of *where* bounded
+aggregation capability buys the most on an oversubscribed fabric.  One
+configuration (the 4-pod, 128-mapper Zipf job) also runs end to end
+through the packet-level simulator so the JCT story is measured, not
+modeled.
+
+    PYTHONPATH=src python benchmarks/bench_placement.py
+    PYTHONPATH=src python benchmarks/bench_placement.py --smoke \
+        --out benchmarks/out/BENCH_placement.json
+
+``--smoke`` is the CI job: a reduced sweep plus the acceptance
+assertions — full-tree placement must cut measured scarce-uplink bytes by
+>= 30% vs ToR-only on the 4-pod 128-mapper Zipf job, and simulated JCT
+must order full-tree <= ToR-only <= host-only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:  # package import (benchmarks.run) or standalone CLI
+    from benchmarks._util import write_bench_json
+except ImportError:  # `python benchmarks/bench_*.py`: sys.path[0] is here
+    from _util import write_bench_json
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
+                           "BENCH_placement.json")
+
+MiB = float(1 << 20)
+
+#: the acceptance fabric: 4 pods x 4 ToRs x 8 hosts = 128 mappers, 4:1
+ACCEPTANCE = dict(pods=4, tors_per_pod=4, hosts_per_tor=8,
+                  oversubscription=4.0, table_pairs=2048)
+
+POLICIES = ("host_only", "tor_only", "full", "greedy", "exhaustive")
+
+
+def placement_row(*, pods: int, oversub: float, policy: str,
+                  tors_per_pod: int = 4, hosts_per_tor: int = 8,
+                  per_host_pairs: int = 512, key_variety: int = 2048,
+                  table_pairs: int = 2048) -> dict:
+    """One analytic cell: run the placement search, record the byte model."""
+    from repro.core import planner as pl
+
+    ft = pl.FatTreeTopology(pods=pods, tors_per_pod=tors_per_pod,
+                            hosts_per_tor=hosts_per_tor,
+                            oversubscription=oversub,
+                            table_pairs=table_pairs)
+    t0 = time.perf_counter()
+    p = pl.place_aggregation_tree(ft, per_host_pairs=per_host_pairs,
+                                  key_variety=key_variety, policy=policy)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    return {
+        "pods": pods,
+        "tors_per_pod": tors_per_pod,
+        "hosts_per_tor": hosts_per_tor,
+        "n_mappers": ft.n_hosts,
+        "oversubscription": oversub,
+        "policy": policy,
+        "placed_tiers": list(p.tiers),
+        "n_agg_switches": p.n_agg_switches,
+        "scarce_axis": p.scarce_axis,
+        "scarce_uplink_mb": p.scarce_uplink_bytes / MiB,
+        "total_mb": p.total_bytes / MiB,
+        "reducer_mb": p.reducer_bytes / MiB,
+        "max_drain_ms": p.max_drain_s * 1e3,
+        "wall_us": round(wall_us, 1),
+    }
+
+
+def sweep(*, pods_list, oversubs, policies=POLICIES, **kw) -> list[dict]:
+    rows = []
+    for pods in pods_list:
+        for o in oversubs:
+            for pol in policies:
+                rows.append(placement_row(pods=pods, oversub=o, policy=pol,
+                                          **kw))
+    rows.sort(key=lambda r: (r["pods"], r["oversubscription"], r["policy"]))
+    return rows
+
+
+def jct_rows(*, per_host_pairs: int = 256, key_variety: int = 2048,
+             seed: int = 0, exact_stream: bool = False,
+             check: bool = False) -> list[dict]:
+    """The measured leg: the acceptance fabric end to end through the
+    packet simulator, one row per placement policy.  ``exact_stream=False``
+    runs switch FPEs on the batched fast path (identical delivered totals,
+    DESIGN.md §8) so the 128-mapper sim stays CI-sized."""
+    from repro.core import planner as pl
+    from repro.core import reduction_model as rm
+    from repro.net import sim as netsim
+
+    ft = pl.FatTreeTopology(**ACCEPTANCE)
+    n = ft.n_hosts * per_host_pairs
+    keys = rm.zipf_keys(n, key_variety, skew=0.99, seed=seed).astype(np.int32)
+    vals = np.ones((n,), np.float32)
+    t0 = time.perf_counter()
+    cmp = netsim.fat_tree_jct_comparison(
+        ft, keys, vals, per_host_pairs=per_host_pairs,
+        key_variety=key_variety,
+        cfg=netsim.NetConfig(exact_stream=exact_stream))
+    wall_us = (time.perf_counter() - t0) * 1e6
+    if check:  # every placement must deliver the exact grouped counts
+        want = np.bincount(keys, minlength=key_variety)
+        for pol, res in cmp["_results"].items():
+            got = res.delivered_table()
+            assert all(abs(got.get(k, 0.0) - c) < 1e-3
+                       for k, c in enumerate(want) if c), \
+                f"{pol}: delivered table is not exact"
+    scarce = cmp["scarce_axis"]
+    rows = []
+    for pol in cmp["policies"]:
+        r = cmp[pol]
+        rows.append({
+            "pods": ft.pods,
+            "n_mappers": ft.n_hosts,
+            "oversubscription": ft.oversubscription,
+            "policy": pol,
+            "placed_tiers": r["placement"]["tiers"],
+            "n_agg_switches": r["placement"]["n_agg_switches"],
+            "scarce_axis": scarce,
+            "jct_s": cmp["jct_s"][pol],
+            "arrived_records": r["arrived_records"],
+            "scarce_wire_bytes": r["link_bytes"][scarce],
+            "reducer_wire_bytes": r["link_bytes"]["reducer"],
+            "wall_us": round(wall_us / len(cmp["policies"]), 1),
+        })
+    return rows
+
+
+def assert_acceptance(sim_rows: list[dict]) -> None:
+    """The §9 acceptance bar, on MEASURED wire bytes and JCT."""
+    by = {r["policy"]: r for r in sim_rows}
+    full, tor, host = by["full"], by["tor_only"], by["host_only"]
+    cut = 1.0 - full["scarce_wire_bytes"] / tor["scarce_wire_bytes"]
+    assert cut >= 0.30, (
+        f"full-tree placement must cut scarce-uplink bytes >= 30% vs "
+        f"ToR-only (got {cut:.1%})")
+    assert full["jct_s"] <= tor["jct_s"] <= host["jct_s"], (
+        f"JCT must order full-tree <= ToR-only <= host-only, got "
+        f"{full['jct_s']:.6f} / {tor['jct_s']:.6f} / {host['jct_s']:.6f}")
+    print(f"acceptance ok: scarce-uplink cut {cut:.1%} (>= 30%), "
+          f"JCT {full['jct_s']*1e3:.3f} <= {tor['jct_s']*1e3:.3f} <= "
+          f"{host['jct_s']*1e3:.3f} ms")
+
+
+def smoke_rows() -> list[dict]:
+    """The CI job: reduced analytic sweep + the measured acceptance leg."""
+    rows = sweep(pods_list=[1, 4], oversubs=[1.0, 4.0],
+                 policies=("host_only", "tor_only", "full", "greedy"))
+    sim = jct_rows(check=True)
+    assert_acceptance(sim)
+    for r in sim:
+        r["measured"] = True
+    return rows + sim
+
+
+def write_out(rows: list[dict], out_path: str) -> None:
+    write_bench_json(rows, out_path, bench="placement")
+
+
+def print_rows(rows: list[dict]) -> None:
+    hdr = (f"{'pods':>4} {'ovsb':>5} {'policy':<10} {'tiers':<14} "
+           f"{'n_sw':>4} {'scarce MiB':>10} {'total MiB':>9} "
+           f"{'reducer MiB':>11} {'jct_ms':>8}")
+    print(hdr)
+    for r in rows:
+        tiers = "+".join(r["placed_tiers"]) or "-"
+        jct = f"{r['jct_s']*1e3:8.3f}" if "jct_s" in r else f"{'-':>8}"
+        scarce = r.get("scarce_uplink_mb",
+                       r.get("scarce_wire_bytes", 0) / MiB)
+        red = r.get("reducer_mb", r.get("reducer_wire_bytes", 0) / MiB)
+        print(f"{r['pods']:>4} {r['oversubscription']:>5.1f} "
+              f"{r['policy']:<10} {tiers:<14} {r['n_agg_switches']:>4} "
+              f"{scarce:>10.3f} {r.get('total_mb', 0):>9.2f} "
+              f"{red:>11.3f} {jct}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pods", default="1,2,4,8")
+    ap.add_argument("--oversubs", default="1,2,4,8")
+    ap.add_argument("--policies", default=",".join(POLICIES))
+    ap.add_argument("--per-host-pairs", type=int, default=256)
+    ap.add_argument("--variety", type=int, default=2048)
+    ap.add_argument("--table-pairs", type=int, default=2048)
+    ap.add_argument("--jct", action="store_true",
+                    help="also run the measured JCT leg (packet simulator)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep + measured acceptance leg (CI job)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows = smoke_rows()
+    else:
+        rows = sweep(
+            pods_list=[int(p) for p in args.pods.split(",")],
+            oversubs=[float(o) for o in args.oversubs.split(",")],
+            policies=tuple(args.policies.split(",")),
+            per_host_pairs=args.per_host_pairs, key_variety=args.variety,
+            table_pairs=args.table_pairs)
+        if args.jct:
+            sim = jct_rows(per_host_pairs=args.per_host_pairs,
+                           key_variety=args.variety, check=True)
+            assert_acceptance(sim)
+            for r in sim:
+                r["measured"] = True
+            rows += sim
+    print_rows(rows)
+    write_out(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

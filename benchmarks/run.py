@@ -6,15 +6,55 @@ JSON to benchmarks/out/results.json (EXPERIMENTS.md §Paper-validation reads
 from it).
 
     PYTHONPATH=src python -m benchmarks.run
+
+``--smoke`` is THE consolidated CI entry: every bench suite's smoke
+configuration (multijob, dataplane, FPE, JCT, placement) runs in one
+process and every ``BENCH_*.json`` lands in one output directory for a
+single artifact upload — replacing the per-bench copy-pasted CI steps.
+Each suite keeps its own cross-checks (conservation, exactly-once,
+placement acceptance), so a semantics regression still fails the step.
+``--ci`` additionally keeps stdout terse (one line per suite).
+
+    PYTHONPATH=src python benchmarks/run.py --smoke --ci
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 import time
 
 import numpy as np
+
+# runnable both as `python -m benchmarks.run` and `python benchmarks/run.py`
+_REPO = os.path.join(os.path.dirname(__file__), "..")
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if os.path.abspath(_p) not in (os.path.abspath(q) for q in sys.path):
+        sys.path.insert(0, _p)
+
+#: every smoke suite the consolidated CI step runs: (name, module, out file)
+SMOKE_SUITES = ("multijob", "dataplane", "fpe", "jct", "placement")
+
+
+def run_smoke(out_dir: str, *, ci: bool = False) -> dict:
+    """Run every bench suite's smoke config; write all BENCH_*.json."""
+    import importlib
+
+    os.makedirs(out_dir, exist_ok=True)
+    results = {}
+    for name in SMOKE_SUITES:
+        mod = importlib.import_module(f"benchmarks.bench_{name}")
+        t0 = time.perf_counter()
+        rows = mod.smoke_rows()
+        dt = time.perf_counter() - t0
+        if not ci:
+            mod.print_rows(rows)
+        mod.write_out(rows, os.path.join(out_dir, f"BENCH_{name}.json"))
+        print(f"smoke_{name},{dt*1e6:.0f},{len(rows)}rows")
+        results[name] = rows
+    return results
 
 
 def _timeit(fn, *args, reps=3, **kw):
@@ -27,9 +67,22 @@ def _timeit(fn, *args, reps=3, **kw):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="consolidated CI smoke: every bench suite's smoke "
+                         "config, all BENCH_*.json into --out-dir")
+    ap.add_argument("--ci", action="store_true",
+                    help="terse per-suite output (implies --smoke)")
+    ap.add_argument("--out-dir",
+                    default=os.path.join(os.path.dirname(__file__), "out"))
+    args = ap.parse_args()
+    if args.smoke or args.ci:
+        run_smoke(args.out_dir, ci=args.ci)
+        return
+
     from benchmarks import bench_collectives, paper_figs
 
-    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    out_dir = args.out_dir
     os.makedirs(out_dir, exist_ok=True)
     results: dict = {}
     print("name,us_per_call,derived")

@@ -1,0 +1,93 @@
+"""The paper's MapReduce word-count, scaled to a multi-rack fat-tree.
+
+Where ``wordcount_switchagg.py`` runs eight mappers under one switch, this
+variant spreads 128 mappers across a 4-pod, 4:1-oversubscribed fat-tree
+(DESIGN.md §9) and asks the question that decides whether in-network
+aggregation deploys on real datacenter infrastructure: *where* should the
+bounded-capability aggregation nodes go?  The placement search scores each
+deployment by modeled scarce-uplink bytes; the packet-level simulator then
+measures wire bytes and job-completion time for host-only, ToR-only, and
+full-tree placements of the SAME Zipf word stream — every placement stays
+exact, they differ only in where traffic dies.
+
+    PYTHONPATH=src python examples/wordcount_rackscale.py
+
+Env knobs (the examples test uses the defaults): RACK_PODS, RACK_TORS,
+RACK_HOSTS, RACK_PAIRS, RACK_VARIETY.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import planner
+from repro.core import reduction_model as rm
+from repro.net import sim as netsim
+
+MiB = float(1 << 20)
+
+
+def main():
+    pods = int(os.environ.get("RACK_PODS", "4"))
+    tors = int(os.environ.get("RACK_TORS", "4"))
+    hosts = int(os.environ.get("RACK_HOSTS", "8"))
+    per_host = int(os.environ.get("RACK_PAIRS", "256"))
+    variety = int(os.environ.get("RACK_VARIETY", "2048"))
+
+    ft = planner.FatTreeTopology(pods=pods, tors_per_pod=tors,
+                                 hosts_per_tor=hosts,
+                                 oversubscription=4.0, table_pairs=2048)
+    print(f"fat-tree: {ft.describe()}")
+    print(f"{ft.n_hosts} mappers, {per_host} pairs each, "
+          f"key variety {variety}, scarce uplink tier "
+          f"'{ft.scarce_uplink_axis()}'\n")
+
+    # --- the controller's placement search (modeled bytes) ----------------
+    print("placement search (modeled scarce-uplink bytes):")
+    for pol in ("host_only", "tor_only", "full", "auto"):
+        p = planner.place_aggregation_tree(
+            ft, per_host_pairs=per_host, key_variety=variety, policy=pol)
+        tiers = "+".join(p.tiers) if p.tiers else "none"
+        print(f"  {pol:>9}: tiers={tiers:<14} switches={p.n_agg_switches:>2} "
+              f"scarce={p.scarce_uplink_bytes/MiB:6.3f} MiB "
+              f"reducer={p.reducer_bytes/MiB:6.3f} MiB")
+    chosen = planner.place_aggregation_tree(
+        ft, per_host_pairs=per_host, key_variety=variety, policy="auto")
+    print(f"search picks: {chosen.describe()}\n")
+
+    # --- mappers emit Zipf word streams; simulate each placement ----------
+    n = ft.n_hosts * per_host
+    keys = rm.zipf_keys(n, variety, skew=0.99, seed=0).astype(np.int32)
+    vals = np.ones_like(keys, dtype=np.float32)
+    cmp = netsim.fat_tree_jct_comparison(
+        ft, keys, vals, per_host_pairs=per_host, key_variety=variety,
+        cfg=netsim.NetConfig(exact_stream=False))
+    scarce = cmp["scarce_axis"]
+
+    print(f"measured (packet-level, {ft.edge_gbps*8:g} Gb/s host links):")
+    want = np.bincount(keys, minlength=variety)
+    for pol in cmp["policies"]:
+        r = cmp[pol]
+        got = cmp["_results"][pol].delivered_table()
+        exact = all(abs(got.get(k, 0.0) - c) < 1e-3
+                    for k, c in enumerate(want) if c)
+        print(f"  {pol:>9}: JCT {cmp['jct_s'][pol]*1e3:8.3f} ms  "
+              f"scarce({scarce}) {r['link_bytes'][scarce]/MiB:6.3f} MiB  "
+              f"reducer {r['link_bytes']['reducer']/MiB:6.3f} MiB  "
+              f"counts exact: {exact}")
+
+    j = cmp["jct_s"]
+    cut = 1.0 - (cmp["full"]["link_bytes"][scarce]
+                 / cmp["tor_only"]["link_bytes"][scarce])
+    saved = 1.0 - j["full"] / j["host_only"]
+    print(f"\nfull-tree cuts scarce-uplink bytes {cut:.0%} vs ToR-only")
+    print(f"rack-scale JCT saved vs host-only: {saved:.0%}")
+    ordered = j["full"] <= j["tor_only"] <= j["host_only"]
+    print(f"JCT ordering full-tree <= ToR-only <= host-only: {ordered}")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,11 +46,17 @@ class LevelSpec:
     """One cascade hop: an FPE/BPE node's geometry.
 
     capacity == 0 means the exact unbounded combine (no FPE, no evictions).
+    ``enabled == False`` is a forward-only hop (DESIGN.md §9): the level's
+    switches have no aggregation capability (or the placement search left
+    them out) and relay every record unaggregated — the per-level knob the
+    fat-tree placement uses to express host-only / ToR-only / full-tree
+    deployments inside one cascade.
     """
 
     capacity: int
     ways: int = 4
     bpe: bool = True
+    enabled: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,15 +101,50 @@ def uniform_levels(capacity: int, n_levels: int, *, ways: int = 4,
                  for _ in range(max(1, n_levels)))
 
 
+def placement_levels(capacities: Sequence[int], enabled: Sequence[bool],
+                     *, ways: int = 4, bpe: bool = True
+                     ) -> tuple[LevelSpec, ...]:
+    """Per-level specs from a fat-tree placement (DESIGN.md §9): each level
+    gets its own per-switch capacity, and unplaced levels are forward-only
+    hops — the per-switch knob replacing the uniform-budget split."""
+    capacities = tuple(int(c) for c in capacities)
+    enabled = tuple(bool(e) for e in enabled)
+    if len(capacities) != len(enabled):
+        raise ValueError("level_capacities and level_enabled differ in length")
+    if not capacities:
+        raise ValueError("a placement needs at least one level")
+    return tuple(LevelSpec(capacity=c, ways=ways, bpe=bpe, enabled=e)
+                 for c, e in zip(capacities, enabled))
+
+
+def plan_from_placement(placement, *, op: str = "sum", ways: int = 4,
+                        bpe: bool = True) -> CascadePlan:
+    """Cascade for a ``planner.TreePlacement`` (duck-typed on
+    ``level_capacities``/``level_enabled``): one node per tree level, each
+    sized by the placed switch's own table budget."""
+    return CascadePlan(op=op, levels=placement_levels(
+        placement.level_capacities, placement.level_enabled,
+        ways=ways, bpe=bpe))
+
+
 def plan_from_configure(cfg, *, ways: int = 4, bpe: bool = True) -> CascadePlan:
     """Per-level memory partition of a controller ``ConfigureMsg``.
 
     ``cfg.fpe_capacity`` is the whole tree's combiner budget (the §4.2.2
     per-job partition); each of the tree's levels gets an even slice — the
-    per-LEVEL partition the cascade executes.  ``cfg`` is duck-typed
-    (``level_axes``, ``fpe_capacity``, ``op``) to avoid importing planner.
+    per-LEVEL partition the cascade executes.  A fat-tree placement
+    (DESIGN.md §9) overrides that: when ``cfg.level_capacities`` is
+    non-empty, every level runs at its placed switch's own capacity and
+    unplaced levels forward.  ``cfg`` is duck-typed (``level_axes``,
+    ``fpe_capacity``, ``op``) to avoid importing planner.
     """
     cfg = getattr(cfg, "configure", cfg)  # accept a JobPlan directly
+    caps = tuple(getattr(cfg, "level_capacities", ()) or ())
+    if caps:
+        enabled = tuple(getattr(cfg, "level_enabled", ()) or
+                        (True,) * len(caps))
+        return CascadePlan(op=cfg.op, levels=placement_levels(
+            caps, enabled, ways=ways, bpe=bpe))
     return CascadePlan(
         op=cfg.op,
         levels=even_split_levels(cfg.fpe_capacity, len(cfg.level_axes),
@@ -115,9 +156,19 @@ def cascade_from_exchange_plan(xplan, *, ways: int = 4,
                                bpe: bool = True, op: str | None = None
                                ) -> CascadePlan:
     """Cascade for a gradient ``ExchangePlan``: one node per upper (scarce)
-    axis hop, splitting the plan's combiner budget evenly among them."""
+    axis hop.  A placement-carrying plan (``level_capacities`` set,
+    DESIGN.md §9) sizes each hop from its placed switch's table; otherwise
+    the plan's combiner budget is split evenly among the hops."""
+    op = op if op is not None else getattr(xplan, "op", "sum")
+    n = max(1, len(xplan.upper_axes))
+    caps = tuple(getattr(xplan, "level_capacities", ()) or ())
+    if len(caps) >= n:  # trailing entries = the upper (scarce) hops
+        enabled = tuple(getattr(xplan, "level_enabled", ()) or
+                        (True,) * len(caps))
+        return CascadePlan(op=op, levels=placement_levels(
+            caps[-n:], enabled[-n:], ways=ways, bpe=bpe))
     return CascadePlan(
-        op=op if op is not None else getattr(xplan, "op", "sum"),
+        op=op,
         levels=even_split_levels(xplan.fpe_capacity, len(xplan.upper_axes),
                                  ways=ways, bpe=bpe),
     )
@@ -145,10 +196,17 @@ def run_level(
     Returns (out_keys, out_values, stats).  With ``capacity > 0`` the
     output is [capacity + n(+capacity)] (table flush + eviction stream,
     BPE-combined when ``spec.bpe``); with ``capacity == 0`` it is the
-    exact packed combine of shape [n].  ``exact_stream=False`` runs the
-    node's FPE on the batched-block fast path (DESIGN.md §8): identical
-    grouped totals, non-paper-faithful eviction pattern.
+    exact packed combine of shape [n].  A disabled spec (``enabled ==
+    False``, DESIGN.md §9) forwards the stream untouched: out == in,
+    no evictions — the placement search's "this tier has no aggregation
+    capability" hop.  ``exact_stream=False`` runs the node's FPE on the
+    batched-block fast path (DESIGN.md §8): identical grouped totals,
+    non-paper-faithful eviction pattern.
     """
+    if not spec.enabled:
+        n_real = jnp.sum(keys != EMPTY_KEY).astype(jnp.int32)
+        return keys, values, LevelStats(
+            n_in=n_real, n_out=n_real, n_evict=jnp.zeros((), jnp.int32))
     if spec.capacity == 0:
         n_in = jnp.sum(keys != EMPTY_KEY).astype(jnp.int32)
         c = kvagg.sorted_combine(keys, values, op=op)
@@ -276,7 +334,10 @@ class LevelState:
 
     ``exact_stream=False`` runs each ingest's FPE on the batched-block
     fast path (DESIGN.md §8) — same grouped totals and resident table
-    geometry, eviction pattern not paper-faithful.
+    geometry, eviction pattern not paper-faithful.  A disabled spec
+    (``enabled == False``, DESIGN.md §9) makes the node a pure relay:
+    every ingest forwards its real records verbatim and the flush is
+    empty — how an unplaced fat-tree switch behaves.
 
     Telemetry mirrors :class:`LevelStats`: ``n_in`` real pairs ingested,
     ``n_evict`` FPE evictions, ``n_out`` pairs forwarded downstream
@@ -303,7 +364,7 @@ class LevelState:
         # capacity == 0: buffered rows, bulk-combined lazily — per-record
         # combine() calls would pay a jax dispatch per record for jnp ops
         self._exact: list[tuple[np.ndarray, np.ndarray]] | None = (
-            [] if spec.capacity == 0 else None)
+            [] if spec.capacity == 0 and spec.enabled else None)
         self._exact_rows = 0
         self._value_sample: np.ndarray | None = None  # dtype/lane template
         self.n_in = 0
@@ -333,6 +394,10 @@ class LevelState:
         self.n_in += int(real.sum())
         if not real.any():
             return self._empty_out()
+        if not self.spec.enabled:  # forward-only hop (DESIGN.md §9)
+            fk, fv = keys[real].astype(np.int32), values[real]
+            self.n_out += int(fk.shape[0])
+            return fk, fv
         if self._exact is not None:  # capacity == 0: exact unbounded node
             self._exact.append((keys[real], values[real]))
             self._exact_rows += int(real.sum())

@@ -31,6 +31,8 @@ import itertools
 import math
 from typing import Sequence
 
+from repro.net import wire
+
 from . import reduction_model as rm
 from . import tree as tree_lib
 from .collectives import GradAggMode
@@ -56,13 +58,24 @@ class LaunchRequest:
 
 @dataclasses.dataclass(frozen=True)
 class ConfigureMsg:
-    """<n_trees, [tree_id, n_children]> per aggregation node."""
+    """<n_trees, [tree_id, n_children]> per aggregation node.
+
+    ``level_capacities``/``level_enabled`` are the fat-tree placement
+    override (DESIGN.md §9): when non-empty, level *i*'s switches run an
+    FPE of exactly ``level_capacities[i]`` pairs, and a level with
+    ``level_enabled[i] == False`` is a forward-only hop (its switches
+    relay records unaggregated).  Empty tuples keep the legacy behavior:
+    ``fpe_capacity`` is the whole tree's budget, split evenly per level
+    by ``dataplane.plan_from_configure``.
+    """
 
     tree_id: int
     level_axes: tuple[str, ...]
     fanins: tuple[int, ...]
     fpe_capacity: int  # pairs resident per node for THIS tree
     op: str
+    level_capacities: tuple[int, ...] = ()  # per-level per-switch pairs
+    level_enabled: tuple[bool, ...] = ()  # False = forward-only level
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +103,10 @@ class ExchangePlan:
     fanins: tuple[int, ...] = ()  # leaf -> root, matches (leaf_axis, *upper_axes)
     level_bytes: tuple[float, ...] = ()  # modeled bytes per level, same order
     scarce_link_bytes: float = 0.0  # this job's bytes on the scarcest level
+    # fat-tree placement terms (DESIGN.md §9); empty = uniform legacy knob
+    level_capacities: tuple[int, ...] = ()  # per-switch pairs from placement
+    level_enabled: tuple[bool, ...] = ()  # False = forward-only level
+    placement_policy: str = ""  # search policy that chose the placement
 
     def describe(self) -> str:
         axes = (self.leaf_axis, *self.upper_axes)
@@ -590,6 +607,440 @@ class JobScheduler:
             baseline_flat_scarce_bytes=sum(jp.flat_scarce_bytes for jp in jobs),
             max_drain_s=self._drain_s(loads),
         )
+
+
+# ---------------------------------------------------------------------------
+# Rack-scale fat-tree topology + aggregation-tree placement (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+#: switch tiers, leaf -> root, and the link tier each one terminates:
+#: a ToR terminates host "edge" links, a pod-aggregation switch terminates
+#: ToR "aggr" uplinks, the core switch terminates per-pod "core" uplinks.
+FAT_TREE_TIERS = ("tor", "agg", "core")
+FAT_TREE_AXES = ("edge", "aggr", "core")
+_AXIS_TIER = dict(zip(FAT_TREE_AXES, FAT_TREE_TIERS))
+_TIER_AXIS = dict(zip(FAT_TREE_TIERS, FAT_TREE_AXES))
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchSpec:
+    """One physical switch: where it sits and how much table it has."""
+
+    name: str  # e.g. "pod0.tor1", "pod2.agg", "core"
+    tier: str  # "tor" | "agg" | "core"
+    pod: int  # -1 for the core switch
+    table_pairs: int  # FPE pairs this switch can dedicate to one job
+
+
+@dataclasses.dataclass(frozen=True)
+class FatTreeTopology:
+    """A k-ary-pod datacenter fat-tree the incast job must cross.
+
+    ``pods`` pods, each with ``tors_per_pod`` racks of ``hosts_per_tor``
+    mapper hosts; three link tiers, leaf -> root:
+
+      * ``edge``  — host -> ToR,        ``hosts_per_tor`` links per ToR
+                    at ``edge_gbps`` each (paper testbed: 10 GbE),
+      * ``aggr``  — ToR -> pod switch,  one logical uplink per ToR at
+                    ``hosts_per_tor * edge_gbps / oversubscription``,
+      * ``core``  — pod -> core,        one logical uplink per pod,
+                    oversubscribed again by ``core_oversubscription``.
+
+    ``oversubscription`` is the classic downlink:uplink ratio — 1.0 is a
+    non-blocking fabric, 4.0 the common datacenter 4:1.  Degenerate
+    (fan-in 1) tiers are skipped everywhere, so a single-rack fat-tree
+    collapses to exactly the flat single-level :class:`Topology` the
+    pre-rack-scale planner used.
+
+    ``table_pairs`` is the per-switch capability budget: how many FPE
+    pairs one switch can hold for one job (0 = the switch cannot
+    aggregate at all); ``tier_table_pairs`` overrides it per tier, e.g.
+    ``(("core", 8192),)`` for a big-table core switch.
+    """
+
+    pods: int
+    tors_per_pod: int
+    hosts_per_tor: int
+    edge_gbps: float = 1.25  # 10 GbE host links (net.sim.TEN_GBE)
+    oversubscription: float = 4.0  # ToR downlink:uplink ratio
+    core_oversubscription: float | None = None  # default: same as ToR tier
+    table_pairs: int = 2048  # per-switch FPE pairs; 0 = no capability
+    tier_table_pairs: tuple[tuple[str, int], ...] = ()
+
+    def __post_init__(self):
+        if min(self.pods, self.tors_per_pod, self.hosts_per_tor) < 1:
+            raise ValueError("pods/tors_per_pod/hosts_per_tor must be >= 1")
+        if self.edge_gbps <= 0:
+            raise ValueError("edge_gbps must be > 0")
+        if self.oversubscription < 1.0 or (
+                self.core_oversubscription is not None
+                and self.core_oversubscription < 1.0):
+            raise ValueError("oversubscription is downlink:uplink, >= 1")
+        if self.table_pairs < 0:
+            raise ValueError("table_pairs must be >= 0")
+        bad = [t for t, _ in self.tier_table_pairs if t not in FAT_TREE_TIERS]
+        if bad:
+            raise ValueError(f"unknown switch tier(s) {bad}")
+
+    # -- derived geometry ---------------------------------------------------
+
+    @property
+    def n_hosts(self) -> int:
+        return self.pods * self.tors_per_pod * self.hosts_per_tor
+
+    @property
+    def n_tors(self) -> int:
+        return self.pods * self.tors_per_pod
+
+    @property
+    def uplink_gbps(self) -> float:
+        """ToR -> pod-switch logical uplink rate (after oversubscription)."""
+        return self.hosts_per_tor * self.edge_gbps / self.oversubscription
+
+    @property
+    def core_gbps(self) -> float:
+        """pod -> core logical uplink rate."""
+        o = (self.core_oversubscription if self.core_oversubscription
+             is not None else self.oversubscription)
+        return self.tors_per_pod * self.uplink_gbps / o
+
+    def switch_table(self, tier: str) -> int:
+        return dict(self.tier_table_pairs).get(tier, self.table_pairs)
+
+    def tier_switches(self, tier: str) -> tuple[SwitchSpec, ...]:
+        """Every physical switch of one tier (explicit placement targets)."""
+        cap = self.switch_table(tier)
+        if tier == "tor":
+            return tuple(
+                SwitchSpec(name=f"pod{p}.tor{t}", tier="tor", pod=p,
+                           table_pairs=cap)
+                for p in range(self.pods) for t in range(self.tors_per_pod))
+        if tier == "agg":
+            return tuple(SwitchSpec(name=f"pod{p}.agg", tier="agg", pod=p,
+                                    table_pairs=cap)
+                         for p in range(self.pods))
+        if tier == "core":
+            return (SwitchSpec(name="core", tier="core", pod=-1,
+                               table_pairs=cap),)
+        raise KeyError(tier)
+
+    # -- the LinkBudget view (what the existing planner machinery consumes) -
+
+    def link_tiers(self) -> tuple[LinkBudget, ...]:
+        """Leaf->root link tiers as `LinkBudget`s, degenerate tiers skipped."""
+        cand = (("edge", self.hosts_per_tor, self.edge_gbps),
+                ("aggr", self.tors_per_pod, self.uplink_gbps),
+                ("core", self.pods, self.core_gbps))
+        links = [LinkBudget(axis=a, fanin=f, gbps=g)
+                 for a, f, g in cand if f > 1]
+        if not links:  # one host, one rack: keep APIs total
+            links = [LinkBudget(axis="edge", fanin=1, gbps=self.edge_gbps)]
+        return tuple(links)
+
+    def to_topology(self) -> Topology:
+        """The flat `Topology` view — the single-rack degenerate fat-tree is
+        exactly the pre-§9 flat topology, and the JobScheduler's byte/drain
+        machinery consumes fat-trees through this."""
+        return Topology(links=self.link_tiers())
+
+    def tree(self) -> tree_lib.AggregationTree:
+        """Leaf->root `AggregationTree` in physical (non-permutable) order."""
+        return self.to_topology().tree_for(self.link_tiers())
+
+    @property
+    def axes(self) -> tuple[str, ...]:
+        return tuple(l.axis for l in self.link_tiers())
+
+    @property
+    def fanins(self) -> tuple[int, ...]:
+        return tuple(l.fanin for l in self.link_tiers())
+
+    def present_tiers(self) -> tuple[str, ...]:
+        """Switch tiers that actually fan in (leaf->root)."""
+        return tuple(_AXIS_TIER.get(l.axis, l.axis)
+                     for l in self.link_tiers())
+
+    def scarce_uplink_axis(self) -> str:
+        """The scarcest *uplink* tier: min-gbps fabric level above the host
+        ingress (ties -> the higher tier, where more reduction has had a
+        chance to happen).  Host "edge" links carry raw mapper output that
+        no placement can shrink, so they never count; a single-rack tree
+        has no fabric uplinks and falls back to the reducer in-link."""
+        links = self.link_tiers()
+        ups = [(i, l) for i, l in enumerate(links) if l.axis != "edge"]
+        if not ups:
+            return "reducer"
+        return min(ups, key=lambda t: (t[1].gbps, -t[0]))[1].axis
+
+    def describe(self) -> str:
+        links = " -> ".join(f"{l.axis}(x{l.fanin} @ {l.gbps:g} GB/s)"
+                            for l in self.link_tiers())
+        return (f"{self.pods} pod(s) x {self.tors_per_pod} ToR(s) x "
+                f"{self.hosts_per_tor} host(s) [{links}] "
+                f"oversub {self.oversubscription:g}:1")
+
+
+def _node_out_pairs(m_in: float, key_variety: int, capacity: int) -> float:
+    """Eq. 3 survivor stream of one bounded-memory node (0 = forward)."""
+    if capacity <= 0 or m_in <= 0:
+        return m_in
+    n = float(max(1, min(key_variety, m_in)))
+    r = rm.reduction_ratio(m_in, n, capacity)
+    return m_in * (1.0 - r)
+
+
+def fat_tree_tier_bytes(
+    ft: FatTreeTopology,
+    placed_tiers: Sequence[str],
+    *,
+    per_host_pairs: int,
+    key_variety: int,
+    pair_bytes: float | None = None,
+) -> dict[str, float]:
+    """Modeled wire bytes per link tier (plus the reducer in-link) for one
+    incast job under a placement.
+
+    Every mapper host emits ``per_host_pairs`` pairs; each link tier
+    carries, per link, the survivor stream of the switch below it — Eq. 3
+    applied hop by hop, with a placed tier's switches reducing at their
+    ``table_pairs`` capacity and an unplaced tier forwarding verbatim.
+    Key variety visible at a node is bounded by its inflow.
+    """
+    if pair_bytes is None:
+        pair_bytes = float(wire.PAIR_BYTES)
+    links = ft.link_tiers()
+    fanins = [l.fanin for l in links]
+    placed = set(placed_tiers)
+    m = float(per_host_pairs)  # per-link stream entering tier i
+    out: dict[str, float] = {}
+    for i, l in enumerate(links):
+        n_links = math.prod(fanins[i:])
+        out[l.axis] = n_links * m * pair_bytes
+        tier = _AXIS_TIER.get(l.axis, l.axis)
+        cap = ft.switch_table(tier) if tier in placed else 0
+        m = _node_out_pairs(l.fanin * m, key_variety, cap)
+    out["reducer"] = m * pair_bytes
+    return out
+
+
+def placement_drain_s(
+    ft: FatTreeTopology,
+    tier_bytes: dict[str, float],
+    *,
+    drain_calibration: dict[str, float] | None = None,
+) -> float:
+    """Slowest per-link drain across the tiers (plus the reducer in-link),
+    through the same calibration factors ``JobScheduler.calibrate`` feeds
+    from the packet simulator (``net.sim.drain_calibration``)."""
+    cal = drain_calibration or {}
+    links = ft.link_tiers()
+    fanins = [l.fanin for l in links]
+    worst = 0.0
+    for i, l in enumerate(links):
+        per_link = tier_bytes.get(l.axis, 0.0) / math.prod(fanins[i:])
+        worst = max(worst, per_link / (l.gbps * 1e9) * cal.get(l.axis, 1.0))
+    red = tier_bytes.get("reducer", 0.0)
+    worst = max(worst, red / (ft.edge_gbps * 1e9) * cal.get("reducer", 1.0))
+    return worst
+
+
+@dataclasses.dataclass(frozen=True)
+class TreePlacement:
+    """Which switches run aggregation (`dataplane.LevelState`) nodes, and
+    what the byte model says that placement costs."""
+
+    policy: str  # search policy that produced this placement
+    tiers: tuple[str, ...]  # placed switch tiers, leaf->root
+    switches: tuple[str, ...]  # every switch running an aggregation node
+    axes: tuple[str, ...]  # link tiers, leaf->root (the tree levels)
+    level_capacities: tuple[int, ...]  # per-switch FPE pairs per level
+    level_enabled: tuple[bool, ...]  # False = forward-only level
+    scarce_axis: str
+    scarce_uplink_bytes: float  # modeled bytes on the scarce uplink tier
+    tier_bytes: dict[str, float]  # per link tier + "reducer"
+    total_bytes: float
+    reducer_bytes: float
+    max_drain_s: float
+
+    @property
+    def n_agg_switches(self) -> int:
+        return len(self.switches)
+
+    def describe(self) -> str:
+        placed = "+".join(self.tiers) if self.tiers else "host-only"
+        return (f"{self.policy}: [{placed}] {self.n_agg_switches} switch(es), "
+                f"scarce {self.scarce_axis}="
+                f"{self.scarce_uplink_bytes/2**20:.2f}MiB, "
+                f"reducer {self.reducer_bytes/2**20:.2f}MiB")
+
+
+#: fixed placement policies (the bench/sim comparison axes) + the searches
+PLACEMENT_POLICIES = ("host_only", "tor_only", "full", "greedy",
+                      "exhaustive", "auto")
+
+
+def _score_tiers(ft, tiers, *, per_host_pairs, key_variety):
+    """(scarce_bytes, n_agg_switches, total_bytes) + the byte map."""
+    b = fat_tree_tier_bytes(ft, tiers, per_host_pairs=per_host_pairs,
+                            key_variety=key_variety)
+    scarce = ft.scarce_uplink_axis()
+    n_sw = sum(len(ft.tier_switches(t)) for t in tiers)
+    return (b[scarce], n_sw, sum(b.values())), b
+
+
+def place_aggregation_tree(
+    ft: FatTreeTopology,
+    *,
+    per_host_pairs: int,
+    key_variety: int,
+    policy: str = "auto",
+    drain_calibration: dict[str, float] | None = None,
+) -> TreePlacement:
+    """Choose which switches run aggregation nodes (SOAR-style, DESIGN.md §9).
+
+    The objective is lexicographic: minimize modeled bytes on the scarce
+    uplink tier first (the bounded-capability congestion term), then the
+    number of switches holding table state (deployment cost), then total
+    network bytes.  Only tiers whose switches have a positive
+    ``table_pairs`` budget are placeable — a budget of zero everywhere
+    degrades to host-only aggregation.
+
+    Policies: ``host_only`` / ``tor_only`` / ``full`` are the fixed
+    comparison points; ``exhaustive`` scores every placeable tier subset
+    (exact, small-N); ``greedy`` adds one tier at a time while the scarce
+    bytes strictly improve (SOAR's marginal-benefit rule, scales to deeper
+    hierarchies); ``auto`` picks exhaustive when the subset space is small.
+    """
+    if policy not in PLACEMENT_POLICIES:
+        raise ValueError(f"unknown placement policy {policy!r}; "
+                         f"choose from {PLACEMENT_POLICIES}")
+    present = ft.present_tiers()
+    placeable = [t for t in present if ft.switch_table(t) > 0]
+
+    def score(tiers):
+        return _score_tiers(ft, tiers, per_host_pairs=per_host_pairs,
+                            key_variety=key_variety)
+
+    if policy == "auto":
+        policy_run = "exhaustive" if 2 ** len(placeable) <= 64 else "greedy"
+    else:
+        policy_run = policy
+
+    if policy_run == "host_only":
+        chosen: tuple[str, ...] = ()
+    elif policy_run == "tor_only":
+        chosen = tuple(t for t in placeable if t == "tor")
+    elif policy_run == "full":
+        chosen = tuple(placeable)
+    elif policy_run == "exhaustive":
+        best = None
+        for r in range(len(placeable) + 1):
+            for combo in itertools.combinations(placeable, r):
+                s, _ = score(combo)
+                key = (*s, combo)
+                if best is None or key < best[0]:
+                    best = (key, combo)
+        chosen = best[1]
+    else:  # greedy
+        chosen_l: list[str] = []
+        cur, _ = score(chosen_l)
+        while True:
+            cands = []
+            for t in placeable:
+                if t in chosen_l:
+                    continue
+                trial = sorted(chosen_l + [t], key=present.index)
+                s, _ = score(trial)
+                cands.append((s, tuple(trial)))
+            if not cands:
+                break
+            s, trial = min(cands)
+            if s[0] >= cur[0]:  # no strict scarce-byte improvement
+                break
+            chosen_l, cur = list(trial), s
+        chosen = tuple(chosen_l)
+
+    chosen = tuple(t for t in present if t in chosen)  # leaf->root order
+    (scarce_b, _, total_b), tier_b = score(chosen)
+    links = ft.link_tiers()
+    caps, enabled = [], []
+    for l in links:
+        tier = _AXIS_TIER.get(l.axis, l.axis)
+        on = tier in chosen
+        caps.append(ft.switch_table(tier) if on else 0)
+        enabled.append(on)
+    switches = tuple(sw.name for t in chosen for sw in ft.tier_switches(t))
+    return TreePlacement(
+        policy=policy,
+        tiers=chosen,
+        switches=switches,
+        axes=tuple(l.axis for l in links),
+        level_capacities=tuple(caps),
+        level_enabled=tuple(enabled),
+        scarce_axis=ft.scarce_uplink_axis(),
+        scarce_uplink_bytes=scarce_b,
+        tier_bytes=tier_b,
+        total_bytes=total_b,
+        reducer_bytes=tier_b["reducer"],
+        max_drain_s=placement_drain_s(ft, tier_b,
+                                      drain_calibration=drain_calibration),
+    )
+
+
+def plan_fat_tree_job(
+    ft: FatTreeTopology,
+    req: LaunchRequest,
+    *,
+    policy: str = "auto",
+    drain_calibration: dict[str, float] | None = None,
+) -> JobPlan:
+    """Admit one incast job onto the fat-tree: run the placement search and
+    emit the full controller artifact set (`ConfigureMsg` with per-level
+    placement capacities, `ExchangePlan`, `JobPlan`) so the packet
+    simulator consumes it unchanged via ``net.sim.simulate_job_plan``.
+
+    ``flat_scarce_bytes`` on the returned plan is the host-only baseline's
+    scarce-uplink bytes (everything forwarded unaggregated) — the incast
+    analogue of the gradient path's flat all-reduce baseline.
+    """
+    placement = place_aggregation_tree(
+        ft, per_host_pairs=req.expected_pairs, key_variety=req.key_variety,
+        policy=policy, drain_calibration=drain_calibration)
+    tree = ft.tree()
+    axes = tree.axes
+    fanins = tuple(l.fanin for l in tree.levels)
+    host = fat_tree_tier_bytes(ft, (), per_host_pairs=req.expected_pairs,
+                               key_variety=req.key_variety)
+    flat_scarce = host[placement.scarce_axis]
+    budget = sum(placement.level_capacities)
+    cfg = ConfigureMsg(
+        tree_id=req.job_id, level_axes=axes, fanins=fanins,
+        fpe_capacity=budget, op=req.op,
+        level_capacities=placement.level_capacities,
+        level_enabled=placement.level_enabled,
+    )
+    kv_red = 0.0
+    if req.key_variety and placement.level_capacities[0] > 0:
+        m = max(req.key_variety, fanins[0] * max(1, req.expected_pairs))
+        kv_red = rm.reduction_ratio(m, req.key_variety,
+                                    placement.level_capacities[0])
+    xplan = ExchangePlan(
+        mode=req.mode, leaf_axis=axes[0], upper_axes=axes[1:],
+        k_fraction=req.k_fraction, fpe_capacity=budget,
+        predicted_root_reduction=(
+            1.0 - placement.scarce_uplink_bytes / flat_scarce
+            if flat_scarce > 0 else 0.0),
+        predicted_kv_reduction=kv_red,
+        op=req.op, job_id=req.job_id, fanins=fanins,
+        level_bytes=tuple(placement.tier_bytes[a] for a in axes),
+        scarce_link_bytes=placement.scarce_uplink_bytes,
+        level_capacities=placement.level_capacities,
+        level_enabled=placement.level_enabled,
+        placement_policy=placement.policy,
+    )
+    return JobPlan(request=req, tree=tree, configure=cfg, exchange=xplan,
+                   bytes_by_axis={a: placement.tier_bytes[a] for a in axes},
+                   flat_scarce_bytes=flat_scarce, over_budget=False)
 
 
 def size_fpe_capacity(key_variety: int, target_reduction: float, data_amount: int) -> int:

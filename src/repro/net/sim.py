@@ -76,11 +76,13 @@ class _Node:
                  cfg: NetConfig, job_id: int, flow_id: int):
         self.level = level
         self.n_children = n_children
-        self.aggregate = aggregate
+        # a disabled spec (placement left this tier out, DESIGN.md §9) is a
+        # forward-only switch — same path as the host-only baseline
+        self.aggregate = aggregate and (spec is None or spec.enabled)
         self.state = (dataplane.LevelState(
             spec, op, batch_pad=cfg.records_per_packet,
             exact_stream=cfg.exact_stream)
-            if aggregate else None)
+            if self.aggregate else None)
         self.receiver = transport.Receiver()
         self.proc_free = 0.0
         self.proc_rate = cfg.processing_gbps * 1e9
@@ -370,8 +372,8 @@ def simulate_job(
             "switches": len(nodes),
             "records_in": sum(n.records_in for n in nodes),
             "records_out": sum(n.records_out for n in nodes),
-            "evictions": sum(n.state.n_evict for n in nodes)
-            if aggregate else 0,
+            "evictions": sum(n.state.n_evict if n.state is not None else 0
+                             for n in nodes),
         })
     return SimResult(
         jct_s=jct,
@@ -473,3 +475,98 @@ def jct_comparison(
                             / max(1, host.arrived_records)),
         "_results": (sw, host),
     }
+
+
+def simulate_fat_tree_job(
+    ft,
+    keys,
+    values,
+    *,
+    placement=None,
+    policy: str = "auto",
+    op: str = "sum",
+    cfg: NetConfig | None = None,
+    mapper_delay: Callable[[int], float] | None = None,
+    job_id: int = 0,
+) -> SimResult:
+    """Run one multi-rack incast over a ``planner.FatTreeTopology``.
+
+    The emulated network is the fat-tree's own per-tier links — host
+    "edge" links at ``edge_gbps``, oversubscribed ToR "aggr" uplinks,
+    pod "core" uplinks — with the reducer in-link at the host rate (the
+    reducer is just another host).  Each tier's switches run aggregation
+    only where the ``placement`` (or a fresh ``policy`` search) put nodes;
+    unplaced tiers forward, so host-only / ToR-only / full-tree deployments
+    are all the same simulation with different `LevelSpec.enabled` rows.
+    """
+    from repro.core import planner  # local import: core.planner is upstream
+
+    if placement is None:
+        n_mappers = ft.n_hosts
+        keys_arr = np.asarray(keys)
+        per_host = -(-keys_arr.shape[0] // max(1, n_mappers))
+        placement = planner.place_aggregation_tree(
+            ft, per_host_pairs=per_host,
+            key_variety=int(keys_arr.max(initial=0)) + 1, policy=policy)
+    plan = dataplane.plan_from_placement(placement, op=op)
+    topo_links = ft.link_tiers()
+    cfg = cfg or NetConfig()
+    cfg = dataclasses.replace(
+        cfg, link_gbps=tuple(l.gbps for l in topo_links),
+        reducer_gbps=(cfg.reducer_gbps if cfg.reducer_gbps is not None
+                      else ft.edge_gbps))
+    return simulate_job(
+        keys, values, fanins=tuple(l.fanin for l in topo_links), plan=plan,
+        op=op, aggregate=True, cfg=cfg,
+        axes=tuple(l.axis for l in topo_links),
+        mapper_delay=mapper_delay, job_id=job_id)
+
+
+def fat_tree_jct_comparison(
+    ft,
+    keys,
+    values,
+    *,
+    per_host_pairs: int | None = None,
+    key_variety: int | None = None,
+    op: str = "sum",
+    policies: Sequence[str] = ("host_only", "tor_only", "full"),
+    cfg: NetConfig | None = None,
+) -> dict:
+    """The rack-scale Fig. 10: one mapper stream, one fat-tree network,
+    JCT and per-tier wire bytes for each placement policy side by side.
+
+    The returned dict maps each policy to its report plus a ``placement``
+    record (placed tiers, modeled scarce bytes); ``jct_s`` collects the
+    headline JCTs.  ``_results`` holds the raw SimResults (drop before
+    JSON-dumping).  For any aggregating placement the delivered table is
+    exact, so host-only vs ToR-only vs full-tree differ only in where
+    bytes die — what the placement search optimizes.
+    """
+    from repro.core import planner  # local import: core.planner is upstream
+
+    keys_arr = np.asarray(keys)
+    if per_host_pairs is None:
+        per_host_pairs = -(-keys_arr.shape[0] // max(1, ft.n_hosts))
+    if key_variety is None:
+        key_variety = int(keys_arr.max(initial=0)) + 1
+    out: dict = {"policies": list(policies), "jct_s": {},
+                 "scarce_axis": ft.scarce_uplink_axis(), "_results": {}}
+    for pol in policies:
+        placement = planner.place_aggregation_tree(
+            ft, per_host_pairs=per_host_pairs, key_variety=key_variety,
+            policy=pol)
+        res = simulate_fat_tree_job(ft, keys, values, placement=placement,
+                                    op=op, cfg=cfg)
+        rep = res.report()
+        rep["placement"] = {
+            "policy": pol,
+            "tiers": list(placement.tiers),
+            "n_agg_switches": placement.n_agg_switches,
+            "modeled_scarce_bytes": placement.scarce_uplink_bytes,
+            "modeled_reducer_bytes": placement.reducer_bytes,
+        }
+        out[pol] = rep
+        out["jct_s"][pol] = res.jct_s
+        out["_results"][pol] = res
+    return out

@@ -1,0 +1,147 @@
+"""The CI perf-regression gate (tools/check_bench_regression.py).
+
+The gate compares smoke-run BENCH_fpe/BENCH_dataplane metrics against
+checked-in baselines with a tolerance band.  These tests pin its contract
+on synthetic fixtures: identical runs pass, >30% throughput drops fail,
+improvements pass (with a re-baseline note), semantic (reduction-ratio)
+drift fails tightly, and coverage shrink fails.
+"""
+
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+_TOOL = (pathlib.Path(__file__).resolve().parents[1] / "tools"
+         / "check_bench_regression.py")
+_spec = importlib.util.spec_from_file_location("check_bench_regression",
+                                               _TOOL)
+gate = importlib.util.module_from_spec(_spec)
+sys.modules["check_bench_regression"] = gate
+_spec.loader.exec_module(gate)
+
+
+def _fpe_row(**kw):
+    row = {"op": "sum", "n": 2048, "key_variety": 256, "capacity": 128,
+           "ways": 4, "dist": "zipf", "backend": "jnp",
+           "scan_us": 1000.0, "fast_us": 100.0,
+           "scan_pairs_per_s": 2_048_000.0,
+           "fast_pairs_per_s": 20_480_000.0, "speedup": 10.0}
+    row.update(kw)
+    return row
+
+
+def _dp_row(**kw):
+    row = {"op": "sum", "levels": 2, "capacity_per_node": 16, "ways": 4,
+           "n": 256, "key_variety": 64, "dist": "zipf", "backend": "pallas",
+           "end_to_end_reduction": 0.75, "wall_us": 5000.0}
+    row.update(kw)
+    return row
+
+
+def _write(dirpath, fpe_rows, dp_rows):
+    dirpath.mkdir(parents=True, exist_ok=True)
+    (dirpath / "BENCH_fpe.json").write_text(
+        json.dumps({"bench": "fpe", "rows": fpe_rows}))
+    (dirpath / "BENCH_dataplane.json").write_text(
+        json.dumps({"bench": "dataplane", "rows": dp_rows}))
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    base, out = tmp_path / "baselines", tmp_path / "out"
+    _write(base, [_fpe_row()], [_dp_row()])
+    return base, out
+
+
+def _check(base, out, **kw):
+    kw.setdefault("tolerance", 0.30)
+    kw.setdefault("semantic_tolerance", 0.02)
+    return gate.check(out, base, **kw)
+
+
+def test_identical_run_passes(dirs):
+    base, out = dirs
+    _write(out, [_fpe_row()], [_dp_row()])
+    assert _check(base, out) == 0
+
+
+def test_large_throughput_drop_fails(dirs):
+    # a systemic slowdown (every cell down 50%) trips the geomean gate
+    base, out = dirs
+    _write(out, [_fpe_row(fast_pairs_per_s=20_480_000.0 * 0.5,
+                          scan_pairs_per_s=2_048_000.0 * 0.5)], [_dp_row()])
+    assert _check(base, out) == 1
+
+
+def test_single_noisy_cell_does_not_fail_the_gate(dirs):
+    # one cell -50%, one +100%: geomean == 1.0 — smoke cells are tiny and
+    # single-cell swings are runner noise, not regressions
+    base, out = dirs
+    _write(out, [_fpe_row(fast_pairs_per_s=20_480_000.0 * 0.5,
+                          scan_pairs_per_s=2_048_000.0 * 2.0)], [_dp_row()])
+    assert _check(base, out) == 0
+
+
+def test_drop_within_band_passes(dirs):
+    base, out = dirs
+    _write(out, [_fpe_row(fast_pairs_per_s=20_480_000.0 * 0.8,
+                          scan_pairs_per_s=2_048_000.0 * 0.75)],
+           [_dp_row(wall_us=5000.0 * 1.2)])
+    assert _check(base, out) == 0
+
+
+def test_improvement_passes(dirs):
+    base, out = dirs
+    _write(out, [_fpe_row(fast_pairs_per_s=20_480_000.0 * 3)],
+           [_dp_row(wall_us=100.0)])
+    assert _check(base, out) == 0
+
+
+def test_semantic_drift_fails_even_when_fast(dirs):
+    base, out = dirs
+    _write(out, [_fpe_row()], [_dp_row(end_to_end_reduction=0.60)])
+    assert _check(base, out) == 1
+
+
+def test_missing_config_row_fails(dirs):
+    # the current run silently dropped the pallas dataplane cell
+    base, out = dirs
+    _write(out, [_fpe_row()], [_dp_row(backend="jnp")])
+    assert _check(base, out) == 1
+
+
+def test_missing_current_file_fails(dirs):
+    base, out = dirs
+    out.mkdir()
+    (out / "BENCH_fpe.json").write_text(
+        json.dumps({"bench": "fpe", "rows": [_fpe_row()]}))
+    assert _check(base, out) == 1  # dataplane baseline has no counterpart
+
+
+def test_no_baselines_is_a_warning_not_a_failure(tmp_path):
+    base, out = tmp_path / "empty", tmp_path / "out"
+    base.mkdir()
+    _write(out, [_fpe_row()], [_dp_row()])
+    assert _check(base, out) == 0
+
+
+def test_update_then_check_roundtrip(tmp_path):
+    base, out = tmp_path / "baselines", tmp_path / "out"
+    _write(out, [_fpe_row()], [_dp_row()])
+    assert gate.update(out, base) == 0
+    assert _check(base, out) == 0
+
+
+def test_repo_baselines_match_gated_files():
+    # the checked-in baselines must cover exactly what the gate checks,
+    # so the CI step never silently no-ops
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    for fname in gate.GATED:
+        path = repo / "benchmarks" / "baselines" / fname
+        assert path.exists(), f"missing checked-in baseline {fname}"
+        rows = gate._load_rows(path)
+        assert rows, f"baseline {fname} has no rows"
+        assert gate.EXTRACTORS[fname](rows), f"no metrics from {fname}"

@@ -43,6 +43,21 @@ def test_wordcount_switchagg_example():
     assert pct >= 40, saved
 
 
+def test_wordcount_rackscale_example():
+    # the rack-scale variant (DESIGN.md §9): 128 mappers across a 4-pod
+    # oversubscribed fat-tree, three placements of the same Zipf stream
+    out = run_example("wordcount_rackscale.py")
+    assert out.count("counts exact: True") == 3  # every placement is exact
+    assert "JCT ordering full-tree <= ToR-only <= host-only: True" in out
+    cut = next(l for l in out.splitlines()
+               if l.startswith("full-tree cuts scarce-uplink bytes"))
+    pct = int(cut.split("bytes")[1].split("%")[0].strip())
+    assert pct >= 30, cut
+    saved = next(l for l in out.splitlines()
+                 if l.startswith("rack-scale JCT saved"))
+    assert int(saved.split(":")[1].split("%")[0].strip()) >= 40, saved
+
+
 def test_quickstart_example():
     out = run_example("quickstart.py", env_extra={"QUICKSTART_STEPS": "6"})
     assert "training 6 steps" in out

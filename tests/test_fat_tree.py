@@ -1,0 +1,294 @@
+"""Rack-scale fat-tree topology + aggregation-tree placement (DESIGN.md §9).
+
+Covers the FatTreeTopology factory (tiers, oversubscribed uplink rates,
+degenerate collapse to the flat Topology), the SOAR-style placement search
+(greedy == exhaustive on the small fabrics, the 1:1 ToR-only and
+zero-budget host-only edge cases), the placement threading through
+ConfigureMsg/ExchangePlan into the cascade dataplane, and the packet-level
+multi-rack incast (exact delivery under every placement, the JCT ordering
+full-tree <= ToR-only <= host-only on an oversubscribed fabric).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import dataplane
+from repro.core import planner as pl
+from repro.core import reduction_model as rm
+
+
+def _ft(**kw):
+    base = dict(pods=4, tors_per_pod=4, hosts_per_tor=8,
+                oversubscription=4.0, table_pairs=2048)
+    base.update(kw)
+    return pl.FatTreeTopology(**base)
+
+
+# ---------------------------------------------------------------------------
+# Topology factory.
+# ---------------------------------------------------------------------------
+
+
+def test_fat_tree_tiers_and_rates():
+    ft = _ft()
+    assert ft.n_hosts == 128 and ft.n_tors == 16
+    assert ft.axes == ("edge", "aggr", "core")
+    assert ft.fanins == (8, 4, 4)
+    # 8 hosts x 1.25 GB/s through a 4:1 oversubscribed ToR uplink
+    assert ft.uplink_gbps == pytest.approx(8 * 1.25 / 4)
+    assert ft.core_gbps == pytest.approx(4 * ft.uplink_gbps / 4)
+    assert len(ft.tier_switches("tor")) == 16
+    assert len(ft.tier_switches("agg")) == 4
+    assert len(ft.tier_switches("core")) == 1
+
+
+def test_single_rack_degenerates_to_flat_topology():
+    # one pod, one ToR: the fat-tree IS the pre-§9 flat single-level
+    # Topology — same axes, fanins, rates, scarce-axis machinery
+    ft = pl.FatTreeTopology(pods=1, tors_per_pod=1, hosts_per_tor=8,
+                            edge_gbps=1.25)
+    flat = pl.Topology(links=(pl.LinkBudget(axis="edge", fanin=8,
+                                            gbps=1.25),))
+    assert ft.to_topology() == flat
+    assert ft.tree().axes == ("edge",)
+    assert ft.tree().fanin == 8
+    # no fabric uplinks: the scarce resource is the reducer in-link
+    assert ft.scarce_uplink_axis() == "reducer"
+
+
+def test_oversubscription_must_be_downlink_to_uplink():
+    with pytest.raises(ValueError):
+        _ft(oversubscription=0.5)
+    with pytest.raises(ValueError):
+        _ft(table_pairs=-1)
+    with pytest.raises(ValueError):
+        _ft(tier_table_pairs=(("spine", 64),))
+
+
+def test_tier_table_overrides():
+    ft = _ft(table_pairs=512, tier_table_pairs=(("core", 8192),))
+    assert ft.switch_table("tor") == 512
+    assert ft.switch_table("core") == 8192
+
+
+# ---------------------------------------------------------------------------
+# Placement search.
+# ---------------------------------------------------------------------------
+
+
+def _place(ft, policy, *, pairs=512, variety=2048):
+    return pl.place_aggregation_tree(ft, per_host_pairs=pairs,
+                                     key_variety=variety, policy=policy)
+
+
+def test_one_to_one_oversubscription_picks_tor_only():
+    # non-blocking fabric: only the ToR uplink tier is reducible AND
+    # scarce, so the search stops after the ToR tier — deeper placement
+    # buys no scarce-uplink bytes
+    ft = _ft(oversubscription=1.0)
+    for policy in ("greedy", "exhaustive", "auto"):
+        p = _place(ft, policy)
+        assert p.tiers == ("tor",), (policy, p.tiers)
+        assert p.scarce_axis == "aggr"
+        assert p.n_agg_switches == 16
+
+
+def test_zero_switch_budget_falls_back_to_host_aggregation():
+    ft = _ft(table_pairs=0)
+    for policy in ("greedy", "exhaustive", "auto", "full", "tor_only"):
+        p = _place(ft, policy)
+        assert p.tiers == ()
+        assert p.n_agg_switches == 0
+        assert not any(p.level_enabled)
+    # a zero-budget placement must behave exactly like host_only
+    host = _place(ft, "host_only")
+    assert _place(ft, "auto").tier_bytes == host.tier_bytes
+
+
+def test_search_beats_or_matches_fixed_policies_on_scarce_bytes():
+    for oversub in (1.0, 2.0, 4.0, 8.0):
+        ft = _ft(oversubscription=oversub)
+        ex = _place(ft, "exhaustive")
+        for fixed in ("host_only", "tor_only", "full"):
+            assert ex.scarce_uplink_bytes <= \
+                _place(ft, fixed).scarce_uplink_bytes + 1e-9, (oversub, fixed)
+
+
+def test_greedy_matches_exhaustive_on_small_fabrics():
+    for oversub in (1.0, 4.0):
+        for pods in (1, 2, 4):
+            ft = _ft(pods=pods, oversubscription=oversub)
+            g, e = _place(ft, "greedy"), _place(ft, "exhaustive")
+            assert g.scarce_uplink_bytes == pytest.approx(
+                e.scarce_uplink_bytes), (pods, oversub)
+
+
+def test_placement_respects_per_tier_budgets():
+    # ToRs have no table; the search must place around them
+    ft = _ft(tier_table_pairs=(("tor", 0),))
+    p = _place(ft, "full")
+    assert "tor" not in p.tiers and p.level_enabled[0] is False
+    assert p.level_capacities[0] == 0
+
+
+def test_tor_aggregation_cuts_uplink_bytes_in_model():
+    ft = _ft()
+    host = pl.fat_tree_tier_bytes(ft, (), per_host_pairs=512,
+                                  key_variety=2048)
+    tor = pl.fat_tree_tier_bytes(ft, ("tor",), per_host_pairs=512,
+                                 key_variety=2048)
+    assert tor["edge"] == host["edge"]  # mapper emissions are fixed
+    assert tor["aggr"] < host["aggr"]
+    assert tor["core"] < host["core"]
+    assert tor["reducer"] < host["reducer"]
+
+
+# ---------------------------------------------------------------------------
+# Threading: placement -> ConfigureMsg/ExchangePlan -> cascade plans.
+# ---------------------------------------------------------------------------
+
+
+def test_plan_fat_tree_job_carries_placement():
+    ft = _ft()
+    req = pl.LaunchRequest(job_id=3, n_workers=ft.n_hosts,
+                           expected_pairs=512, key_variety=2048)
+    jp = pl.plan_fat_tree_job(ft, req, policy="full")
+    assert jp.configure.level_axes == ("edge", "aggr", "core")
+    assert jp.configure.level_capacities == (2048, 2048, 2048)
+    assert jp.configure.level_enabled == (True, True, True)
+    assert jp.exchange.level_capacities == jp.configure.level_capacities
+    assert jp.exchange.placement_policy == "full"
+    assert jp.exchange.scarce_link_bytes < jp.flat_scarce_bytes
+    assert 0.0 < jp.exchange.predicted_root_reduction <= 1.0
+
+    cascade = dataplane.plan_from_configure(jp.configure)
+    assert cascade.capacities == (2048, 2048, 2048)
+    assert all(l.enabled for l in cascade.levels)
+
+
+def test_plan_from_configure_placement_overrides_even_split():
+    cfg = pl.ConfigureMsg(tree_id=0, level_axes=("edge", "aggr", "core"),
+                          fanins=(8, 4, 4), fpe_capacity=999, op="max",
+                          level_capacities=(128, 0, 512),
+                          level_enabled=(True, False, True))
+    plan = dataplane.plan_from_configure(cfg)
+    assert plan.op == "max"
+    assert plan.capacities == (128, 0, 512)
+    assert [l.enabled for l in plan.levels] == [True, False, True]
+    # without the placement fields the legacy even split still rules
+    legacy = dataplane.plan_from_configure(dataclasses.replace(
+        cfg, level_capacities=(), level_enabled=()))
+    assert legacy.capacities == (333, 333, 333)
+
+
+def test_cascade_from_exchange_plan_uses_trailing_placement_levels():
+    x = pl.ExchangePlan(
+        mode=pl.GradAggMode.TREE, leaf_axis="edge",
+        upper_axes=("aggr", "core"), k_fraction=0.01, fpe_capacity=4096,
+        predicted_root_reduction=0.0, predicted_kv_reduction=0.0,
+        level_capacities=(2048, 1024, 512),
+        level_enabled=(True, False, True))
+    plan = dataplane.cascade_from_exchange_plan(x)
+    assert plan.capacities == (1024, 512)
+    assert [l.enabled for l in plan.levels] == [False, True]
+
+
+def test_disabled_level_forwards_in_run_cascade():
+    keys = np.asarray(rm.zipf_keys(1024, 128, seed=1), np.int32)
+    vals = np.ones((1024,), np.float32)
+    full = dataplane.CascadePlan(op="sum", levels=(
+        dataplane.LevelSpec(capacity=64),
+        dataplane.LevelSpec(capacity=64)))
+    gated = dataplane.CascadePlan(op="sum", levels=(
+        dataplane.LevelSpec(capacity=64),
+        dataplane.LevelSpec(capacity=64, enabled=False)))
+    r_full = dataplane.run_cascade(keys, vals, full)
+    r_gated = dataplane.run_cascade(keys, vals, gated)
+    # a forward-only hop: out == in at that level, no evictions
+    assert int(r_gated.level_out[1]) == int(r_gated.level_in[1])
+    assert int(r_gated.level_evict[1]) == 0
+    # and it never changes totals: final grouped tables agree
+    def table(r):
+        k, v = np.asarray(r.keys), np.asarray(r.values)
+        return dict(zip(k[k != -1].tolist(), v[: len(k)][k != -1].tolist()))
+    assert table(r_full) == pytest.approx(table(r_gated))
+
+
+def test_levelstate_disabled_is_pure_relay():
+    spec = dataplane.LevelSpec(capacity=64, enabled=False)
+    st = dataplane.LevelState(spec, "sum")
+    k = np.asarray([3, 3, 5, -1], np.int32)
+    v = np.asarray([1.0, 2.0, 3.0, 9.0], np.float32)
+    ok, ov = st.ingest(k, v)
+    assert ok.tolist() == [3, 3, 5]  # unaggregated, padding dropped
+    assert ov.tolist() == [1.0, 2.0, 3.0]
+    fk, _ = st.flush()
+    assert fk.shape[0] == 0  # nothing resident
+    assert st.n_in == 3 and st.n_out == 3 and st.n_evict == 0
+
+
+# ---------------------------------------------------------------------------
+# Packet-level multi-rack incast.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_incast():
+    from repro.net import sim as netsim
+
+    ft = pl.FatTreeTopology(pods=2, tors_per_pod=2, hosts_per_tor=4,
+                            oversubscription=4.0, table_pairs=512)
+    # enough pairs that serialization on the oversubscribed uplinks
+    # dominates the EoT store-and-forward flush latency (the regime the
+    # placement search optimizes for; tiny streams are latency-bound)
+    n = ft.n_hosts * 512
+    keys = np.asarray(rm.zipf_keys(n, 512, seed=0), np.int32)
+    vals = np.ones((n,), np.float32)
+    cmp = netsim.fat_tree_jct_comparison(
+        ft, keys, vals, per_host_pairs=512, key_variety=512,
+        cfg=netsim.NetConfig(exact_stream=False))
+    return ft, keys, cmp
+
+
+def test_incast_exact_delivery_under_every_placement(small_incast):
+    _, keys, cmp = small_incast
+    want = np.bincount(keys, minlength=512)
+    for pol in cmp["policies"]:
+        got = cmp["_results"][pol].delivered_table()
+        assert all(abs(got.get(k, 0.0) - c) < 1e-3
+                   for k, c in enumerate(want) if c), pol
+
+
+def test_incast_placement_orders_uplink_bytes(small_incast):
+    ft, _, cmp = small_incast
+    scarce = cmp["scarce_axis"]
+    host = cmp["host_only"]["link_bytes"][scarce]
+    tor = cmp["tor_only"]["link_bytes"][scarce]
+    full = cmp["full"]["link_bytes"][scarce]
+    assert full < tor < host
+    # host-only forwards everything: scarce bytes == edge ingress bytes
+    assert cmp["host_only"]["link_bytes"]["edge"] <= host * (1 + 1e-6) * 2
+
+
+def test_incast_jct_orders_full_tor_host(small_incast):
+    _, _, cmp = small_incast
+    j = cmp["jct_s"]
+    assert j["full"] <= j["tor_only"] <= j["host_only"]
+
+
+def test_host_only_placement_equals_aggregate_false_baseline(small_incast):
+    from repro.net import sim as netsim
+
+    ft, keys, cmp = small_incast
+    vals = np.ones_like(keys, np.float32)
+    base = netsim.simulate_job(
+        keys, vals, fanins=ft.fanins, aggregate=False,
+        cfg=netsim.NetConfig(
+            link_gbps=tuple(l.gbps for l in ft.link_tiers()),
+            reducer_gbps=ft.edge_gbps, exact_stream=False),
+        axes=ft.axes)
+    host = cmp["_results"]["host_only"]
+    assert host.jct_s == pytest.approx(base.jct_s)
+    assert host.arrived_records == base.arrived_records

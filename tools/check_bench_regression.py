@@ -1,0 +1,184 @@
+#!/usr/bin/env python
+"""Perf-regression gate for the CI bench smoke step.
+
+Compares the smoke-run ``BENCH_fpe.json`` / ``BENCH_dataplane.json`` in
+``--out-dir`` against the checked-in ``benchmarks/baselines/*.json``:
+
+  * throughput (FPE scan/fast pairs-per-second, dataplane pairs-per-
+    second derived from ``n / wall_us``) is gated on the GEOMETRIC MEAN
+    of the per-cell current/baseline ratios, per bench file: a drop of
+    more than ``--tolerance`` (default 0.30, the ">30% regression fails
+    the job" bar) fails.  Gating the aggregate — not each cell — is
+    deliberate: smoke cells are tiny (reps=1, some in Pallas interpret
+    mode), so any single cell can swing 30%+ on a loaded CI runner,
+    while a real regression moves the whole suite.  Per-cell swings
+    beyond the band are still printed as notes;
+  * semantic metrics (dataplane end-to-end reduction ratio) are gated
+    per cell within an absolute ``--semantic-tolerance`` band — these
+    are deterministic, so drift means the aggregation semantics moved,
+    not the machine;
+  * a config row present in the baseline but missing from the current
+    run fails too (silent coverage shrink is a regression).
+
+    python tools/check_bench_regression.py
+    python tools/check_bench_regression.py --tolerance 0.5   # noisy runner
+    python tools/check_bench_regression.py --update          # re-baseline
+
+Baselines are smoke-config numbers from a 2-core CI-class CPU; they gate
+relative movement, not absolute speed, which is why the band is wide.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import shutil
+import sys
+
+#: files the gate covers, with their metric extractors (see below)
+GATED = ("BENCH_fpe.json", "BENCH_dataplane.json")
+
+
+def _load_rows(path: pathlib.Path) -> list[dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return doc["rows"] if isinstance(doc, dict) else doc
+
+
+def fpe_metrics(rows: list[dict]) -> dict[str, tuple[float, str]]:
+    """name -> (value, kind); kind 'throughput' = higher is better."""
+    out = {}
+    for r in rows:
+        key = f"{r['backend']}/{r['op']}/n{r['n']}/w{r['ways']}"
+        out[f"fpe:{key}:scan_pairs_per_s"] = (r["scan_pairs_per_s"],
+                                              "throughput")
+        out[f"fpe:{key}:fast_pairs_per_s"] = (r["fast_pairs_per_s"],
+                                              "throughput")
+    return out
+
+
+def dataplane_metrics(rows: list[dict]) -> dict[str, tuple[float, str]]:
+    out = {}
+    for r in rows:
+        key = f"{r['backend']}/{r['op']}/L{r['levels']}/C{r['capacity_per_node']}"
+        out[f"dataplane:{key}:pairs_per_s"] = (
+            r["n"] / max(r["wall_us"], 1e-9) * 1e6, "throughput")
+        out[f"dataplane:{key}:end_to_end_reduction"] = (
+            r["end_to_end_reduction"], "semantic")
+    return out
+
+
+EXTRACTORS = {
+    "BENCH_fpe.json": fpe_metrics,
+    "BENCH_dataplane.json": dataplane_metrics,
+}
+
+
+def compare(
+    baseline: dict[str, tuple[float, str]],
+    current: dict[str, tuple[float, str]],
+    *,
+    tolerance: float,
+    semantic_tolerance: float,
+) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes)."""
+    fails, notes = [], []
+    ratios: list[float] = []  # current/baseline per throughput cell
+    for name, (base, kind) in sorted(baseline.items()):
+        if name not in current:
+            fails.append(f"{name}: present in baseline but missing from the "
+                         f"current run (coverage shrank)")
+            continue
+        cur, _ = current[name]
+        if kind == "throughput":
+            if base <= 0:
+                continue
+            ratios.append(max(cur / base, 1e-9))
+            rel = (cur - base) / base
+            if abs(rel) > tolerance:  # informational: one cell is noise
+                notes.append(f"{name}: {rel:+.1%} vs baseline (cell-level, "
+                             f"not gated)")
+        else:  # semantic: deterministic, tight absolute band per cell
+            if abs(cur - base) > semantic_tolerance:
+                fails.append(f"{name}: {cur:.4f} vs baseline {base:.4f} "
+                             f"(|delta| > {semantic_tolerance})")
+    if ratios:
+        geo = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+        if geo < 1.0 - tolerance:
+            fails.append(f"throughput geomean {geo:.3f}x of baseline "
+                         f"across {len(ratios)} cell(s) "
+                         f"(< {1.0 - tolerance:.2f}x allowed)")
+        else:
+            notes.append(f"throughput geomean {geo:.3f}x of baseline "
+                         f"across {len(ratios)} cell(s)")
+    return fails, notes
+
+
+def check(out_dir: pathlib.Path, base_dir: pathlib.Path, *,
+          tolerance: float, semantic_tolerance: float) -> int:
+    any_checked = False
+    all_fails: list[str] = []
+    for fname in GATED:
+        base_path, cur_path = base_dir / fname, out_dir / fname
+        if not base_path.exists():
+            print(f"SKIP {fname}: no baseline at {base_path}")
+            continue
+        if not cur_path.exists():
+            all_fails.append(f"{fname}: baseline exists but the smoke run "
+                             f"produced no {cur_path}")
+            continue
+        any_checked = True
+        extract = EXTRACTORS[fname]
+        fails, notes = compare(
+            extract(_load_rows(base_path)), extract(_load_rows(cur_path)),
+            tolerance=tolerance, semantic_tolerance=semantic_tolerance)
+        for n in notes:
+            print(f"NOTE {n}")
+        if fails:
+            all_fails.extend(fails)
+        else:
+            print(f"OK {fname}: within {tolerance:.0%} of baseline")
+    for f in all_fails:
+        print(f"FAIL {f}")
+    if not any_checked and not all_fails:
+        print("WARNING: nothing checked (no baselines found)")
+    return 1 if all_fails else 0
+
+
+def update(out_dir: pathlib.Path, base_dir: pathlib.Path) -> int:
+    base_dir.mkdir(parents=True, exist_ok=True)
+    for fname in GATED:
+        src = out_dir / fname
+        if not src.exists():
+            print(f"SKIP {fname}: no smoke output to baseline from")
+            continue
+        shutil.copyfile(src, base_dir / fname)
+        print(f"baselined {fname} -> {base_dir / fname}")
+    return 0
+
+
+def main() -> None:
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out-dir", type=pathlib.Path,
+                    default=repo / "benchmarks" / "out",
+                    help="where the smoke run wrote BENCH_*.json")
+    ap.add_argument("--baselines", type=pathlib.Path,
+                    default=repo / "benchmarks" / "baselines")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max relative throughput drop (default 0.30)")
+    ap.add_argument("--semantic-tolerance", type=float, default=0.02,
+                    help="max absolute drift of reduction ratios")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the current smoke outputs over the baselines")
+    args = ap.parse_args()
+    if args.update:
+        sys.exit(update(args.out_dir, args.baselines))
+    sys.exit(check(args.out_dir, args.baselines, tolerance=args.tolerance,
+                   semantic_tolerance=args.semantic_tolerance))
+
+
+if __name__ == "__main__":
+    main()
