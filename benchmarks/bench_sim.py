@@ -1,0 +1,206 @@
+"""Simulator-engine throughput: node oracle vs vectorized tier engine
+(DESIGN.md §10).
+
+Each cell runs the SAME job through both engines and reports
+simulated-switch-steps per second (a step = one record entering a switch,
+``sum(per_level records_in)``), with an in-bench cross-check that the two
+engines' reports and delivered tables are exactly equal — a cell only
+counts if parity held.  Three cells ladder up the scale the tier engine
+exists for:
+
+  * ``jct_smoke``       — the ``bench_jct`` smoke geometry (fanins (2,2),
+                          64 pairs/mapper, capacity 32);
+  * ``placement_accept``— the ``bench_placement`` acceptance fabric
+                          (4-pod fat tree, 128 mappers, full placement);
+  * ``fat16_tor``       — the first 16-pod / 2048-mapper run (ToR-tier
+                          aggregation), far past where the per-switch
+                          event loop was usable.  This cell's speedup is
+                          floor-gated at >= 50x in
+                          ``tools/check_bench_regression.py``.
+
+    PYTHONPATH=src python benchmarks/bench_sim.py --smoke \
+        --out benchmarks/out/BENCH_sim.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:  # package import (benchmarks.run) or standalone CLI
+    from benchmarks._util import write_bench_json
+except ImportError:  # `python benchmarks/bench_*.py`: sys.path[0] is here
+    from _util import write_bench_json
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
+                           "BENCH_sim.json")
+
+#: the fat16_tor cell must beat the node engine by this factor (gated)
+SPEEDUP_FLOOR = 50.0
+
+
+def _steps(res) -> int:
+    return sum(lvl["records_in"] for lvl in res.per_level)
+
+
+def _cell(name: str, run, *, vec_reps: int = 2, node_warmup=None,
+          floor: float | None = None, **meta) -> dict:
+    """Time ``run(engine)`` on both engines; cross-check parity.
+
+    Both engines get a jit-warmup before timing so compile time never
+    pollutes a cell (it would inflate the node leg and flatter the gated
+    speedup).  ``node_warmup`` replaces the full node warmup run with a
+    cheap shape-matched one for the multi-second cells.
+    """
+    rv = run("vectorized")  # warm the tier kernel's jit cache
+    if node_warmup is None:
+        run("node")
+    else:
+        node_warmup()
+    t0 = time.perf_counter()
+    rn = run("node")
+    node_us = (time.perf_counter() - t0) * 1e6
+    vec_us = float("inf")
+    for _ in range(vec_reps):
+        t0 = time.perf_counter()
+        rv = run("vectorized")
+        vec_us = min(vec_us, (time.perf_counter() - t0) * 1e6)
+    parity = (rn.report() == rv.report()
+              and rn.delivered_table() == rv.delivered_table())
+    steps = _steps(rv)
+    row = {
+        "cell": name,
+        **meta,
+        "switch_steps": steps,
+        "node_wall_us": round(node_us, 1),
+        "vec_wall_us": round(vec_us, 1),
+        "node_steps_per_s": round(steps / node_us * 1e6, 1),
+        "vec_steps_per_s": round(steps / vec_us * 1e6, 1),
+        "speedup": round(node_us / vec_us, 2),
+        "parity": 1.0 if parity else 0.0,
+    }
+    if floor is not None:
+        row["speedup_floor"] = floor
+    return row
+
+
+def jct_smoke_cell() -> dict:
+    """The bench_jct smoke geometry through both engines."""
+    from repro.core import dataplane
+    from repro.core import reduction_model as rm
+    from repro.net import sim as netsim
+
+    fanins, per_mapper, variety, cap, rpp = (2, 2), 64, 64, 32, 16
+    n = per_mapper * 4
+    keys = rm.zipf_keys(n, variety, skew=0.99, seed=0).astype(np.int32)
+    vals = np.ones((n,), np.float32)
+    plan = dataplane.CascadePlan(op="sum", levels=tuple(
+        dataplane.LevelSpec(capacity=cap) for _ in fanins))
+    cfg = netsim.NetConfig(records_per_packet=rpp, exact_stream=True)
+
+    def run(engine):
+        return netsim.simulate_job(
+            keys, vals, fanins=fanins, plan=plan,
+            cfg=dataclasses.replace(cfg, engine=engine))
+
+    return _cell("jct_smoke", run, fanins=list(fanins), n_mappers=4,
+                 records=n, records_per_packet=rpp, policy="-")
+
+
+def _fat_tree_cell(name: str, *, pods: int, tors_per_pod: int,
+                   hosts_per_tor: int, per_host_pairs: int, variety: int,
+                   rpp: int, policy: str, table_pairs: int,
+                   floor: float | None = None) -> dict:
+    from repro.core import dataplane, planner
+    from repro.core import reduction_model as rm
+    from repro.net import sim as netsim
+
+    ft = planner.FatTreeTopology(pods=pods, tors_per_pod=tors_per_pod,
+                                 hosts_per_tor=hosts_per_tor,
+                                 oversubscription=4.0,
+                                 table_pairs=table_pairs)
+    n = ft.n_hosts * per_host_pairs
+    keys = rm.zipf_keys(n, variety, skew=0.99, seed=0).astype(np.int32)
+    vals = np.ones((n,), np.float32)
+    placement = planner.place_aggregation_tree(
+        ft, per_host_pairs=per_host_pairs, key_variety=variety,
+        policy=policy)
+    cfg = netsim.NetConfig(records_per_packet=rpp, exact_stream=True)
+
+    def run(engine):
+        return netsim.simulate_fat_tree_job(
+            ft, keys, vals, placement=placement,
+            cfg=dataclasses.replace(cfg, engine=engine))
+
+    def node_warmup():
+        # compile the node path's per-packet kernels for THIS cell's
+        # (rpp, capacity) shapes without paying a full node leg
+        netsim.simulate_job(
+            keys[:4 * rpp], vals[:4 * rpp], fanins=(2, 2),
+            plan=dataplane.CascadePlan(op="sum", levels=(
+                dataplane.LevelSpec(capacity=table_pairs),
+                dataplane.LevelSpec(capacity=table_pairs))),
+            cfg=dataclasses.replace(cfg, engine="node"))
+
+    return _cell(name, run, floor=floor, node_warmup=node_warmup,
+                 pods=pods, n_mappers=ft.n_hosts, records=n,
+                 records_per_packet=rpp, policy=policy)
+
+
+def smoke_rows() -> list[dict]:
+    """The CI job: three engine-vs-engine cells, smallest first (the small
+    cells double as jit warmup for the big one's node leg)."""
+    rows = [
+        jct_smoke_cell(),
+        _fat_tree_cell("placement_accept", pods=4, tors_per_pod=4,
+                       hosts_per_tor=8, per_host_pairs=64, variety=2048,
+                       rpp=16, policy="full", table_pairs=2048),
+        _fat_tree_cell("fat16_tor", pods=16, tors_per_pod=8,
+                       hosts_per_tor=16, per_host_pairs=64, variety=2048,
+                       rpp=4, policy="tor_only", table_pairs=2048,
+                       floor=SPEEDUP_FLOOR),
+    ]
+    for r in rows:  # a cell only counts if the engines agreed exactly
+        assert r["parity"] == 1.0, f"engine parity broke on {r['cell']}"
+    flag = next(r for r in rows if r["cell"] == "fat16_tor")
+    assert flag["speedup"] >= SPEEDUP_FLOOR, (
+        f"fat16_tor speedup {flag['speedup']}x < {SPEEDUP_FLOOR}x floor")
+    return rows
+
+
+def write_out(rows: list[dict], out_path: str) -> None:
+    write_bench_json(rows, out_path, bench="sim")
+
+
+def print_rows(rows: list[dict]) -> None:
+    print(f"{'cell':<18} {'mappers':>7} {'records':>8} {'rpp':>3} "
+          f"{'steps':>8} {'node ms':>9} {'vec ms':>8} {'speedup':>8} "
+          f"{'parity':>6}")
+    for r in rows:
+        print(f"{r['cell']:<18} {r['n_mappers']:>7} {r['records']:>8} "
+              f"{r['records_per_packet']:>3} {r['switch_steps']:>8} "
+              f"{r['node_wall_us'] / 1e3:>9.1f} "
+              f"{r['vec_wall_us'] / 1e3:>8.1f} {r['speedup']:>7.1f}x "
+              f"{r['parity']:>6.0f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="the CI cells (also the default full run)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    rows = smoke_rows()
+    print_rows(rows)
+    write_out(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

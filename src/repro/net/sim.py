@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core import aggops, dataplane, kvagg
 from . import links as links_lib
-from . import transport, wire
+from . import transport, vsim, wire
 
 _EMPTY = int(kvagg.EMPTY_KEY)
 
@@ -66,6 +66,11 @@ class NetConfig:
     #: (DESIGN.md §8): same delivered totals, eviction traffic not
     #: paper-faithful — keep True for Fig. 9/10 reproductions
     exact_stream: bool = True
+    #: "node" steps one Python node per switch (the oracle);
+    #: "vectorized" batches each tier's per-packet FPE work into one
+    #: jitted call (DESIGN.md §10) — bit-identical results, orders of
+    #: magnitude more simulated switch-steps per second
+    engine: str = "node"
 
 
 class _Node:
@@ -73,16 +78,19 @@ class _Node:
 
     def __init__(self, *, level: int, n_children: int,
                  spec: dataplane.LevelSpec | None, op: str, aggregate: bool,
-                 cfg: NetConfig, job_id: int, flow_id: int):
+                 cfg: NetConfig, job_id: int, flow_id: int, state=None):
         self.level = level
         self.n_children = n_children
         # a disabled spec (placement left this tier out, DESIGN.md §9) is a
         # forward-only switch — same path as the host-only baseline
         self.aggregate = aggregate and (spec is None or spec.enabled)
-        self.state = (dataplane.LevelState(
-            spec, op, batch_pad=cfg.records_per_packet,
-            exact_stream=cfg.exact_stream)
-            if self.aggregate else None)
+        if state is not None:  # tier-batched precompute (DESIGN.md §10)
+            self.state = state
+        else:
+            self.state = (dataplane.LevelState(
+                spec, op, batch_pad=cfg.records_per_packet,
+                exact_stream=cfg.exact_stream)
+                if self.aggregate else None)
         self.receiver = transport.Receiver()
         self.proc_free = 0.0
         self.proc_rate = cfg.processing_gbps * 1e9
@@ -96,6 +104,9 @@ class _Node:
         self._eot_seen = 0
         self.records_in = 0
         self.records_out = 0
+        self.bytes_out = 0  # wire bytes of every packet this node emits
+        self.agg_proc_s = 0.0  # aggregation-engine busy seconds (0 if relay)
+        self.queue_peak = 0  # deepest the output pending queue ever got
         self.finished = False
 
     def _append(self, keys: np.ndarray, values: np.ndarray) -> None:
@@ -104,6 +115,7 @@ class _Node:
         else:
             self._pend_k = np.concatenate([self._pend_k, keys])
             self._pend_v = np.concatenate([self._pend_v, values])
+        self.queue_peak = max(self.queue_peak, int(self._pend_k.shape[0]))
 
     def _emit_packet(self, t: float, keys: np.ndarray, values: np.ndarray,
                      eot: bool) -> None:
@@ -112,7 +124,9 @@ class _Node:
             psn=self._psn, n_records=int(keys.shape[0]), eot=eot)
         self._psn += 1
         self.records_out += int(keys.shape[0])
-        self.out.append((t, wire.Packet(header=hdr, keys=keys, values=values)))
+        pkt = wire.Packet(header=hdr, keys=keys, values=values)
+        self.bytes_out += pkt.wire_bytes
+        self.out.append((t, pkt))
 
     def _emit_full(self, t: float) -> None:
         while self._pend_k is not None and self._pend_k.shape[0] >= self.rpp:
@@ -128,8 +142,11 @@ class _Node:
         t = t_arrive
         if pkt.header.n_records:
             start = max(t_arrive, self.proc_free)
-            self.proc_free = start + pkt.wire_bytes / self.proc_rate
+            busy = pkt.wire_bytes / self.proc_rate
+            self.proc_free = start + busy
             t = self.proc_free
+            if self.aggregate:  # a relay's charge is store-and-forward,
+                self.agg_proc_s += busy  # not aggregation-engine work
             self.records_in += pkt.header.n_records
             if self.aggregate:
                 ek, ev = self.state.ingest(pkt.keys, pkt.values)
@@ -149,8 +166,9 @@ class _Node:
             fk, fv = self.state.flush()
             if fk.shape[0]:
                 # EoT flush streams out at the processing line rate too
-                self.proc_free = max(t, self.proc_free) + (
-                    fk.shape[0] * wire.PAIR_BYTES / self.proc_rate)
+                busy = fk.shape[0] * wire.PAIR_BYTES / self.proc_rate
+                self.agg_proc_s += busy
+                self.proc_free = max(t, self.proc_free) + busy
                 t = self.proc_free
                 self._append(fk, fv)
         self._emit_full(t)
@@ -237,6 +255,9 @@ def simulate_job(
     ``runtime.fault_tolerance``.
     """
     cfg = cfg or NetConfig()
+    if cfg.engine not in ("node", "vectorized"):
+        raise ValueError(f"unknown sim engine {cfg.engine!r} "
+                         "(expected 'node' or 'vectorized')")
     fanins = tuple(int(f) for f in fanins)
     if not fanins or any(f < 1 for f in fanins):
         raise ValueError(f"bad fanins {fanins}")
@@ -264,22 +285,35 @@ def simulate_job(
     n_mappers = math.prod(fanins)
     keys = np.asarray(keys, np.int32)
     carried = np.asarray(aggop.prepare_values(jnp.asarray(np.asarray(values))))
-    key_chunks = np.array_split(keys, n_mappers)
-    val_chunks = np.array_split(carried, n_mappers)
 
     loss = transport.LossModel(cfg.loss_rate, cfg.seed)
     all_links: list[links_lib.Link] = []
     flows = transport.FlowStats()
     mapper_finish = [0.0] * n_mappers
 
-    # mapper output flows (flow ids 0..n_mappers-1)
-    current: list[list[tuple[float, wire.Packet]]] = []
-    for m in range(n_mappers):
-        t0 = float(mapper_delay(m)) if mapper_delay is not None else 0.0
-        pkts = wire.pack_records(
-            key_chunks[m], val_chunks[m], job_id=job_id, flow_id=m, level=0,
-            eot=True, records_per_packet=cfg.records_per_packet)
-        current.append([(t0, p) for p in pkts])
+    # with no loss the go-back-N machinery never rewinds, so the
+    # vectorized engine can run whole tiers as array passes (DESIGN.md
+    # §10); under loss it falls back to precompute + node replay below
+    fast_engine = cfg.engine == "vectorized" and cfg.loss_rate <= 0.0
+
+    # mapper output flows (flow ids 0..n_mappers-1); streams live as
+    # Packet lists (node path) or array-form PacketStreams (fast path)
+    t0s = [float(mapper_delay(m)) if mapper_delay is not None else 0.0
+           for m in range(n_mappers)]
+    if fast_engine:
+        current: list = vsim.streams_from_mapper_records(
+            keys, carried, t0s, n_mappers=n_mappers, job_id=job_id,
+            level=0, rpp=cfg.records_per_packet)
+    else:
+        key_chunks = np.array_split(keys, n_mappers)
+        val_chunks = np.array_split(carried, n_mappers)
+        current = []
+        for m in range(n_mappers):
+            pkts = wire.pack_records(
+                key_chunks[m], val_chunks[m], job_id=job_id, flow_id=m,
+                level=0, eot=True,
+                records_per_packet=cfg.records_per_packet)
+            current.append([(t0s[m], p) for p in pkts])
 
     def _run_flow(stream, link, sink) -> float:
         arrivals: list[tuple[float, wire.Packet]] = []
@@ -297,17 +331,50 @@ def simulate_job(
         return t_done
 
     next_flow_id = n_mappers
-    per_level_nodes: list[list[_Node]] = []
+    per_level_nodes: list[list] = []
     for l in range(n_levels):
         n_switches = math.prod(fanins[l + 1:])
-        nodes: list[_Node] = []
-        nxt: list[list[tuple[float, wire.Packet]]] = []
+        spec = plan.levels[l] if aggregate else None
+        # forward-only tiers (host-only baseline, placement-disabled hops)
+        # have no aggregation state at all, so the fast path covers them
+        # with pure array re-framing — no kernel call
+        fast_forward = fast_engine and (
+            not aggregate or (spec is not None and not spec.enabled))
+        if fast_forward or (fast_engine and aggregate
+                            and vsim.supports(spec)):
+            # fast path (DESIGN.md §10): the whole tier — transport,
+            # acceptance, processing, re-framing, telemetry — as array
+            # passes plus at most one jitted kernel call, bit-identical
+            streams = [
+                s if isinstance(s, vsim.PacketStream)
+                else vsim.stream_from_packets(s, value_template=carried[:0])
+                for s in current]
+            nodes, out_streams, tier_links, tier_flow, t_done = \
+                vsim.run_tier_fast(
+                    streams, level=l, fanin=fanins[l],
+                    spec=None if fast_forward else spec, op=op,
+                    cfg=cfg, axis=axes[l], gbps=link_gbps[l],
+                    job_id=job_id, first_flow_id=next_flow_id,
+                    value_template=carried[:0])
+            next_flow_id += n_switches
+            all_links.extend(tier_links)
+            flows.packets_sent += tier_flow.packets_sent
+            flows.wire_bytes += tier_flow.wire_bytes
+            if l == 0:
+                mapper_finish = list(t_done)
+            per_level_nodes.append(nodes)
+            current = out_streams
+            continue
+        # node path tiers (host-only, disabled, capacity-0, or lossy)
+        # walk materialized packets
+        current = [
+            vsim.stream_to_packets(s) if isinstance(s, vsim.PacketStream)
+            else s for s in current]
+        # phase A — transport: run every child-edge flow; links are FIFO
+        # and flows per-edge, so each switch's full arrival schedule is
+        # known before its node steps
+        level_arrivals: list[list[tuple[float, wire.Packet]]] = []
         for s in range(n_switches):
-            node = _Node(level=l, n_children=fanins[l],
-                         spec=plan.levels[l] if aggregate else None,
-                         op=op, aggregate=aggregate, cfg=cfg, job_id=job_id,
-                         flow_id=next_flow_id)
-            next_flow_id += 1
             arrivals: list[tuple[float, wire.Packet]] = []
             for c in range(fanins[l]):
                 ci = s * fanins[l] + c
@@ -320,7 +387,30 @@ def simulate_job(
                     mapper_finish[ci] = t_done
             arrivals.sort(key=lambda a: (a[0], a[1].header.flow_id,
                                          a[1].header.psn))
-            for t, p in arrivals:
+            level_arrivals.append(arrivals)
+        # phase B — tier-batched precompute (DESIGN.md §10): PSN acceptance
+        # depends on headers alone, so the per-packet FPE inputs of every
+        # switch at this tier are known now and run as ONE jitted call
+        states: list = [None] * n_switches
+        if cfg.engine == "vectorized" and aggregate and vsim.supports(spec):
+            accepted = []
+            for arrivals in level_arrivals:
+                gate = transport.Receiver()
+                accepted.append([
+                    (p.keys, p.values) for _, p in arrivals
+                    if gate.accept(p.header) and p.header.n_records])
+            states = vsim.tier_states(accepted, spec=spec, op=op, cfg=cfg,
+                                      value_template=carried[:0])
+        # phase C — host replay: timing, packetization, and telemetry run
+        # through the same node code, consuming precomputed results
+        nodes: list[_Node] = []
+        nxt: list[list[tuple[float, wire.Packet]]] = []
+        for s in range(n_switches):
+            node = _Node(level=l, n_children=fanins[l], spec=spec,
+                         op=op, aggregate=aggregate, cfg=cfg, job_id=job_id,
+                         flow_id=next_flow_id, state=states[s])
+            next_flow_id += 1
+            for t, p in level_arrivals[s]:
                 node.receive(p, t)
             assert node.finished, "reliable transport must complete the node"
             nodes.append(node)
@@ -333,23 +423,35 @@ def simulate_job(
                               gbps=reducer_gbps,
                               propagation_s=cfg.propagation_s)
     all_links.append(red_link)
-    arrivals = []
-    _run_flow(current[0], red_link, arrivals)
-    arrivals.sort(key=lambda a: (a[0], a[1].header.psn))
+    root = current[0]
     recv = transport.Receiver()
-    jct = 0.0
-    rec_k: list[np.ndarray] = []
-    rec_v: list[np.ndarray] = []
-    for t, p in arrivals:
-        if recv.accept(p.header):
-            jct = max(jct, t)
-            if p.header.n_records:
-                rec_k.append(np.asarray(p.keys, np.int32))
-                rec_v.append(np.asarray(p.values))
-
-    arrived_k = np.concatenate(rec_k) if rec_k else np.zeros((0,), np.int32)
-    arrived_v = (np.concatenate(rec_v) if rec_v
-                 else np.zeros((0,) + carried.shape[1:], carried.dtype))
+    if isinstance(root, vsim.PacketStream):
+        # loss=0 fast path: every packet is accepted in PSN order, so the
+        # reducer's pre-merge stream is the root stream verbatim and the
+        # JCT is the last packet's arrival off the FIFO chain
+        arrive, _ = vsim.transmit_stream(root, red_link)
+        flows.packets_sent += root.n_packets
+        flows.wire_bytes += (wire.HEADER_BYTES * root.n_packets
+                             + wire.PAIR_BYTES * int(root.sizes.sum()))
+        jct = max(0.0, float(arrive.max()))
+        arrived_k, arrived_v = root.keys, root.values
+    else:
+        arrivals = []
+        _run_flow(root, red_link, arrivals)
+        arrivals.sort(key=lambda a: (a[0], a[1].header.psn))
+        jct = 0.0
+        rec_k: list[np.ndarray] = []
+        rec_v: list[np.ndarray] = []
+        for t, p in arrivals:
+            if recv.accept(p.header):
+                jct = max(jct, t)
+                if p.header.n_records:
+                    rec_k.append(np.asarray(p.keys, np.int32))
+                    rec_v.append(np.asarray(p.values))
+        arrived_k = (np.concatenate(rec_k) if rec_k
+                     else np.zeros((0,), np.int32))
+        arrived_v = (np.concatenate(rec_v) if rec_v
+                     else np.zeros((0,) + carried.shape[1:], carried.dtype))
     if arrived_k.size:  # the reducer host's final exact merge
         c = kvagg.sorted_combine(jnp.asarray(arrived_k),
                                  jnp.asarray(arrived_v), op=op)
@@ -374,6 +476,12 @@ def simulate_job(
             "records_out": sum(n.records_out for n in nodes),
             "evictions": sum(n.state.n_evict if n.state is not None else 0
                              for n in nodes),
+            # disabled (forward-only) hops do no aggregation-engine work
+            # but still move every byte: zero agg_proc_s, nonzero
+            # bytes_out — and the queue depth is tracked for relays too
+            "bytes_out": sum(n.bytes_out for n in nodes),
+            "agg_proc_s": sum(n.agg_proc_s for n in nodes),
+            "queue_peak": max((n.queue_peak for n in nodes), default=0),
         })
     return SimResult(
         jct_s=jct,

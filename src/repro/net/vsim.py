@@ -1,0 +1,790 @@
+"""JAX-vectorized tier engine for the packet simulator (DESIGN.md §10).
+
+The node engine (``net.sim``) pays ~two jitted dispatches per packet per
+switch (``fpe_aggregate`` + the per-packet BPE combine inside
+``dataplane.LevelState``), which caps it at a few pods.  This module
+collapses all of a tier's per-packet device work into ONE jitted call:
+every switch at the tier is stepped through its full accepted-packet
+sequence by ``tier_ingest`` — a ``vmap`` over switches of a ``lax.scan``
+over packets, each step the same resumed-table ``kvagg.fpe_aggregate``
+(+ per-packet ``sorted_combine`` when the level runs BPE) the node engine
+issues eagerly.  Because the per-step computation is literally the same
+jitted graph on the same operands in the same order, the per-packet
+eviction streams and final tables are BIT-identical to the node engine's,
+not merely equal when grouped — the property the differential harness
+(``tests/test_sim_parity.py``) pins.
+
+Host/device boundary: transport, link timing, packetization, and PSN
+acceptance stay on the host (they are cheap arithmetic; the node engine's
+cost is dispatch count, not math).  Two host paths consume the kernel:
+
+* ``run_tier_fast`` — the loss=0 fast path.  Packet streams live as
+  arrays (:class:`PacketStream`), go-back-N reduces to the FIFO chain
+  ``depart_i = max(depart_{i-1}, ready_i) + ser_i`` (no timeouts fire,
+  so the window adds no waiting), and a whole tier — transport, PSN
+  acceptance, processing-time recurrence, MTU re-framing, telemetry —
+  runs as a handful of numpy passes plus one ``tier_ingest`` call.
+  Every float op replicates the node engine's expression and evaluation
+  order, so results stay BIT-identical, including JCT.
+* ``tier_states`` — the lossy path.  Acceptance depends on headers
+  alone, so per-switch accepted payloads are precomputed, run through
+  ``tier_ingest`` once, and replayed through the unmodified ``_Node``
+  event walk via :class:`_PrecomputedState` (a ``LevelState`` stand-in)
+  while transport keeps its packet-by-packet go-back-N machinery.
+
+Shape policy: ``S`` (switches) and ``P`` (packets) pad to the next power
+of two, ``R`` (records) to the config's fixed packet capacity — the same
+pad-to-pow2 bucketing as the streaming ingest (DESIGN.md §8), so pod and
+mapper counts retrace O(log) times, not O(n).  Padding packets are
+all-``EMPTY_KEY`` and provably leave a resumed table untouched on both
+FPE paths.
+
+Scope: a tier qualifies when it aggregates with ``capacity > 0``.
+Capacity-0 (exact unbounded) and placement-disabled (forward-only)
+levels keep their existing host paths — they issue no per-packet FPE
+dispatches, so there is nothing to batch, and reusing ``LevelState``
+keeps them parity-by-construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dataplane, kvagg
+from . import links as links_lib
+from . import transport, wire
+
+_EMPTY = int(kvagg.EMPTY_KEY)
+
+
+def _pow2(n: int, floor: int = 1) -> int:
+    """Next power of two >= max(n, floor) — the batch-shape bucket."""
+    return max(floor, 1 << max(0, int(n) - 1).bit_length())
+
+
+def supports(spec: dataplane.LevelSpec | None) -> bool:
+    """True when a tier's per-packet FPE work can be batched on device.
+
+    ``None`` (host-only baseline), disabled (forward-only relay), and
+    capacity-0 (exact unbounded) levels do no per-packet FPE and keep
+    the node engine's host paths.
+    """
+    return spec is not None and spec.enabled and spec.capacity > 0
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("capacity", "ways", "op", "bpe", "exact_stream"))
+def tier_ingest(keys, values, *, capacity: int, ways: int, op: str,
+                bpe: bool, exact_stream: bool):
+    """Step every switch of one tier through its packet sequence at once.
+
+    ``keys`` is ``[S, P, R]`` int32 (``EMPTY_KEY``-padded), ``values``
+    ``[S, P, R, *lanes]`` in the op's carried representation.  Returns
+    ``(table_keys [S, C], table_values [S, C, *lanes], evict_keys
+    [S, P, R], evict_values [S, P, R, *lanes], n_evict [S, P],
+    n_out [S, P])`` where ``C`` is the effective flat table size.  Step
+    *p* of switch *s* is exactly ``fpe_aggregate(keys[s, p],
+    values[s, p], ..., table_keys=<table after step p-1>)`` followed by
+    the per-packet BPE combine — the node engine's eager sequence,
+    batched.
+
+    A packet of ``R`` records evicts at most ``R`` entries (table
+    occupancy never decreases), so the batched path's ``[R + cap]``
+    eviction stream compacts losslessly to ``[R]`` *before* the BPE
+    combine: ``nonzero(size=R)`` gathers the real entries front-packed in
+    order — a pure permutation, no float op touches the values — and the
+    combine then runs on ``[R]`` instead of ``[R + cap]`` (at capacity
+    2048 that is the difference between sorting 2112 slots per packet and
+    sorting 59).  Bit-parity holds because ``sorted_combine`` reduces each
+    key's occurrences by scatter in ascending index order: dropping EMPTY
+    slots elsewhere in the stream changes neither a key's value sequence
+    nor its order.  ``n_evict`` (the pre-combine real-eviction count) lets
+    the host verify the ``<= R`` invariant actually held.
+    """
+    w, n_buckets, cap = kvagg._fpe_geometry(capacity, ways)
+    lane_shape = values.shape[3:]
+    if exact_stream and values.dtype == jnp.float32:
+        return _tier_ingest_packed(keys, values, capacity=capacity,
+                                   ways=ways, op=op, bpe=bpe)
+
+    def one_switch(ks, vs):
+        def step(carry, pkt):
+            tk, tv = carry
+            pk, pv = pkt
+            res = kvagg.fpe_aggregate(
+                pk, pv, capacity=capacity, ways=ways, op=op,
+                exact_stream=exact_stream, table_keys=tk, table_values=tv)
+            n_ev = jnp.sum(res.evict_keys != kvagg.EMPTY_KEY
+                           ).astype(jnp.int32)
+            ek, ev = res.evict_keys, res.evict_values
+            if ek.shape[0] > pk.shape[0]:  # compact [R + cap] -> [R]
+                real = ek != kvagg.EMPTY_KEY
+                (idx,) = jnp.nonzero(real, size=pk.shape[0],
+                                     fill_value=ek.shape[0])
+                ek = jnp.concatenate(
+                    [ek, jnp.full((1,), kvagg.EMPTY_KEY, ek.dtype)])[idx]
+                ev = jnp.concatenate(
+                    [ev, jnp.zeros((1,) + ev.shape[1:], ev.dtype)])[idx]
+            if bpe:  # per-packet eviction combine, fixed shape
+                c = kvagg.sorted_combine(ek, ev, op=op)
+                ek, ev = c.unique_keys, c.combined_values
+            n_out = jnp.sum(ek != kvagg.EMPTY_KEY).astype(jnp.int32)
+            return (res.table_keys, res.table_values), (ek, ev, n_ev, n_out)
+
+        init = (jnp.full((cap,), kvagg.EMPTY_KEY, jnp.int32),
+                jnp.zeros((cap,) + lane_shape, values.dtype))
+        (tk, tv), (ek, ev, ne, no) = jax.lax.scan(step, init, (ks, vs))
+        return tk, tv, ek, ev, ne, no
+
+    return jax.vmap(one_switch)(keys, values)
+
+
+def _tier_ingest_packed(keys, values, *, capacity: int, ways: int, op: str,
+                        bpe: bool):
+    """``tier_ingest``'s exact-stream body with keys and value lanes
+    packed into ONE table array.
+
+    ``kvagg._fpe_scan``'s per-record step costs two gathers and two
+    scatters per record (separate key/value tables); under ``vmap`` those
+    batched gathers/scatters dominate the kernel on CPU.  Bitcasting keys
+    (int32 -> float32, ``lax.bitcast_convert_type``) into lane 0 of the
+    value table halves them.  The selection logic (hit / first-empty /
+    evict-shift) is replicated branch for branch, and no arithmetic ever
+    touches the bitcast key lane — every float is moved or combined by
+    exactly the expressions of the reference step, so tables and eviction
+    streams stay BIT-identical to ``kvagg.fpe_aggregate``.
+    """
+    aggop = kvagg.aggops.get(op)
+    w, n_buckets, cap = kvagg._fpe_geometry(capacity, ways)
+    lane_shape = values.shape[3:]
+    lane_nd = len(lane_shape)
+    lanes = 1
+    for d in lane_shape:
+        lanes *= d
+    rpp = keys.shape[2]
+    vals_flat = values.reshape(values.shape[:3] + (lanes,))
+    empty_f = jax.lax.bitcast_convert_type(kvagg.EMPTY_KEY, jnp.float32)
+
+    def one_switch(ks, vs):  # ks [P, R], vs [P, R, lanes]
+        def rec_step(tab, inp):  # tab [n_buckets, w, 1 + lanes]
+            k, v = inp  # k scalar int32, v [lanes] float32
+            b = kvagg.hash_key(k, n_buckets)
+            row = tab[b]  # [w, 1 + lanes] — ONE gather
+            row_k = jax.lax.bitcast_convert_type(row[:, 0], jnp.int32)
+            row_v = row[:, 1:].reshape((w,) + lane_shape)
+            v_l = v.reshape(lane_shape)
+            is_pad = k == kvagg.EMPTY_KEY
+
+            hit = row_k == k  # [w]
+            any_hit = jnp.any(hit) & ~is_pad
+            empty = row_k == kvagg.EMPTY_KEY
+            any_empty = jnp.any(empty) & ~is_pad
+            empty_idx = jnp.argmax(empty)  # first empty way
+            hit_l = hit.reshape(hit.shape + (1,) * lane_nd)
+
+            # --- hit: aggregate into the matching way (key lane kept)
+            agg_v = jnp.where(hit_l, aggop.combine(row_v, v_l), row_v)
+            agg_row = jnp.concatenate(
+                [row[:, :1], agg_v.reshape(w, lanes)], axis=1)
+
+            # packed (key, value) record for insert / shift-in
+            kv = jnp.concatenate(
+                [jax.lax.bitcast_convert_type(k, jnp.float32)[None], v])
+
+            # --- miss+empty: insert at first empty way
+            ins_row = row.at[empty_idx].set(kv)
+
+            # --- miss+full: evict way 0, shift left, insert at last way
+            ev_k, ev_v = row_k[0], row_v[0]
+            sh_row = jnp.concatenate([row[1:], kv[None]])
+
+            new_row = jnp.where(
+                any_hit, agg_row, jnp.where(any_empty, ins_row, sh_row))
+            evicted = (~any_hit) & (~any_empty) & (~is_pad)
+            out_k = jnp.where(evicted, ev_k, kvagg.EMPTY_KEY)
+            out_v = jnp.where(evicted, ev_v, jnp.zeros_like(ev_v))
+
+            new_row = jnp.where(is_pad, row, new_row)
+            tab = tab.at[b].set(new_row)  # ONE scatter
+            return tab, (out_k, out_v.reshape(lanes))
+
+        def pkt_step(tab, pkt):
+            pk, pv = pkt
+            # modest unroll trims scan-iteration overhead on CPU without
+            # the compile-time blowup of a full R-way unroll
+            tab, (ek, ev) = jax.lax.scan(rec_step, tab, (pk, pv),
+                                         unroll=min(4, rpp))
+            n_ev = jnp.sum(ek != kvagg.EMPTY_KEY).astype(jnp.int32)
+            if bpe:  # per-packet eviction combine, fixed shape
+                c = kvagg.sorted_combine(
+                    ek, ev.reshape((rpp,) + lane_shape), op=op)
+                ek = c.unique_keys
+                ev = c.combined_values.reshape(rpp, lanes)
+            n_out = jnp.sum(ek != kvagg.EMPTY_KEY).astype(jnp.int32)
+            return tab, (ek, ev, n_ev, n_out)
+
+        tab0 = jnp.concatenate(
+            [jnp.full((n_buckets, w, 1), empty_f, jnp.float32),
+             jnp.zeros((n_buckets, w, lanes), jnp.float32)], axis=2)
+        tab, (ek, ev, ne, no) = jax.lax.scan(pkt_step, tab0, (ks, vs))
+        tk = jax.lax.bitcast_convert_type(
+            tab[:, :, 0], jnp.int32).reshape(cap)
+        tv = tab[:, :, 1:].reshape((cap,) + lane_shape)
+        return tk, tv, ek, ev.reshape((ek.shape[0], rpp) + lane_shape), ne, no
+
+    return jax.vmap(one_switch)(keys, vals_flat)
+
+
+class _PrecomputedState:
+    """``dataplane.LevelState`` stand-in replaying one switch's batch slice.
+
+    ``net.sim._Node`` calls ``ingest`` once per accepted record-carrying
+    packet (in arrival order — the order ``tier_states`` precomputed) and
+    ``flush`` at end of task; each call pops the corresponding precomputed
+    eviction stream / final table.  Telemetry counters (``n_in``,
+    ``n_evict``, ``n_out``) accrue exactly as ``LevelState``'s do.  Every
+    ``ingest`` cross-checks the packet's keys against the precomputed
+    slot, so a replay that drifts out of lockstep with the acceptance
+    precomputation fails loudly instead of corrupting results.
+    """
+
+    def __init__(self, *, packet_keys: list[np.ndarray],
+                 evict_keys: np.ndarray, evict_values: np.ndarray,
+                 n_evicts: np.ndarray, flush_keys: np.ndarray,
+                 flush_values: np.ndarray):
+        self._packet_keys = packet_keys
+        self._ek = evict_keys
+        self._ev = evict_values
+        self._ne = n_evicts
+        self._fk = flush_keys
+        self._fv = flush_values
+        self._i = 0
+        self._flushed = False
+        self.n_in = 0
+        self.n_evict = 0
+        self.n_out = 0
+
+    def ingest(self, keys, values) -> tuple[np.ndarray, np.ndarray]:
+        if self._flushed:
+            raise RuntimeError("_PrecomputedState already flushed")
+        keys = np.asarray(keys, np.int32)
+        if self._i >= len(self._packet_keys) or \
+                not np.array_equal(keys, self._packet_keys[self._i]):
+            raise AssertionError(
+                "vectorized replay out of lockstep with the acceptance "
+                f"precomputation at packet {self._i} (DESIGN.md §10)")
+        ek = self._ek[self._i]
+        ev = self._ev[self._i]
+        self.n_in += int(np.sum(keys != _EMPTY))
+        self.n_evict += int(self._ne[self._i])
+        self._i += 1
+        mask = ek != _EMPTY
+        fk, fv = ek[mask], ev[mask]
+        self.n_out += int(fk.shape[0])
+        return fk, fv
+
+    def flush(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._flushed:
+            raise RuntimeError("_PrecomputedState already flushed")
+        if self._i != len(self._packet_keys):
+            raise AssertionError(
+                f"flush after {self._i}/{len(self._packet_keys)} "
+                "precomputed packets (DESIGN.md §10)")
+        self._flushed = True
+        self.n_out += int(self._fk.shape[0])
+        return self._fk, self._fv
+
+
+def tier_states(accepted, *, spec: dataplane.LevelSpec, op: str, cfg,
+                value_template: np.ndarray) -> list[_PrecomputedState]:
+    """One batched device step for a whole tier.
+
+    ``accepted`` is, per switch, the ``(keys, values)`` payloads of the
+    record-carrying packets its PSN gate will accept, in arrival order
+    (the simulator precomputes acceptance from headers alone — it depends
+    on neither payloads nor aggregation state).  ``value_template`` is an
+    empty array carrying the op's lane shape and dtype, so switches that
+    accept no packets still build correctly-typed batches.  Returns one
+    :class:`_PrecomputedState` per switch.
+    """
+    rpp = int(cfg.records_per_packet)
+    n_sw = len(accepted)
+    max_p = max((len(pkts) for pkts in accepted), default=0)
+    s_pad = _pow2(n_sw)
+    p_pad = _pow2(max_p, floor=1)
+    lane_shape = value_template.shape[1:]
+    keys = np.full((s_pad, p_pad, rpp), _EMPTY, np.int32)
+    values = np.zeros((s_pad, p_pad, rpp) + lane_shape,
+                      value_template.dtype)
+    packet_keys: list[list[np.ndarray]] = []
+    for s, pkts in enumerate(accepted):
+        pks = []
+        for p, (pk, pv) in enumerate(pkts):
+            pk = np.asarray(pk, np.int32)
+            n = pk.shape[0]
+            if n > rpp:
+                raise ValueError(
+                    f"packet carries {n} records > records_per_packet {rpp}")
+            keys[s, p, :n] = pk
+            values[s, p, :n] = np.asarray(pv)
+            pks.append(pk)
+        packet_keys.append(pks)
+    tk, tv, ek, ev, ne, no = jax.device_get(tier_ingest(
+        jnp.asarray(keys), jnp.asarray(values), capacity=spec.capacity,
+        ways=spec.ways, op=op, bpe=spec.bpe, exact_stream=cfg.exact_stream))
+    if int(ne.max(initial=0)) > rpp:
+        raise AssertionError(
+            "tier_ingest eviction compaction dropped real entries "
+            f"(a packet evicted {int(ne.max())} > {rpp} pairs)")
+    states = []
+    for s in range(n_sw):
+        mask = tk[s] != _EMPTY
+        states.append(_PrecomputedState(
+            packet_keys=packet_keys[s],
+            evict_keys=ek[s], evict_values=ev[s], n_evicts=ne[s],
+            flush_keys=tk[s][mask].astype(np.int32),
+            flush_values=tv[s][mask]))
+    return states
+
+
+# --------------------------------------------------------------------------
+# loss=0 fast path: packet streams as arrays, whole tiers as numpy passes
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PacketStream:
+    """One sender edge's packet stream in array form (DESIGN.md §10).
+
+    Packet ``i`` carries ``sizes[i]`` records under PSN ``i`` and is ready
+    to transmit at ``times[i]``; the last packet always carries the
+    end-of-task flag (every emitter in this simulator closes its stream
+    with EoT, on an empty packet if need be).  ``keys``/``values`` are the
+    concatenated payloads — ``values`` always has the op's canonical
+    ``[N, *lanes]`` carried shape, even when ``N == 0``.
+    """
+
+    job_id: int
+    flow_id: int
+    level: int  # the receiving tier (header ``level`` field)
+    times: np.ndarray  # [P] float64 per-packet ready times
+    sizes: np.ndarray  # [P] int64 records per packet
+    keys: np.ndarray  # [sum(sizes)] int32
+    values: np.ndarray  # [sum(sizes), *lanes]
+
+    @property
+    def n_packets(self) -> int:
+        return int(self.sizes.shape[0])
+
+
+def stream_from_records(keys, values, *, t0: float, job_id: int,
+                        flow_id: int, level: int, rpp: int) -> PacketStream:
+    """A mapper's output stream: ``wire.pack_records`` framing (ceil
+    chunks of ``rpp``, trailing EoT, one empty EoT packet for an empty
+    stream), all ready at ``t0``."""
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values)
+    n = int(keys.shape[0])
+    n_pkts = max(1, -(-n // rpp))
+    sizes = np.full((n_pkts,), rpp, np.int64)
+    sizes[-1] = n - rpp * (n_pkts - 1)
+    return PacketStream(job_id=job_id, flow_id=flow_id, level=level,
+                        times=np.full((n_pkts,), float(t0)),
+                        sizes=sizes, keys=keys, values=values)
+
+
+def streams_from_mapper_records(keys, values, t0s, *, n_mappers: int,
+                                job_id: int, level: int,
+                                rpp: int) -> list[PacketStream]:
+    """All mapper output streams at once: ``np.array_split`` chunking plus
+    per-mapper :func:`stream_from_records`, built from three batched
+    arrays instead of ``2 * n_mappers`` numpy calls.  Chunk boundaries,
+    packet sizes, and ready times are exactly the per-mapper path's —
+    the streams hold views into the same ``keys``/``values`` storage.
+    """
+    keys = np.asarray(keys, np.int32)
+    values = np.asarray(values)
+    n = int(keys.shape[0])
+    # np.array_split: the first n % m chunks get the extra record
+    base, extra = divmod(n, n_mappers)
+    chunk = np.full((n_mappers,), base, np.int64)
+    chunk[:extra] += 1
+    offs = np.concatenate([[0], np.cumsum(chunk)])
+    n_pkts = np.maximum(1, -(-chunk // rpp))
+    p_offs = np.concatenate([[0], np.cumsum(n_pkts)])
+    sizes = np.full((int(p_offs[-1]),), rpp, np.int64)
+    sizes[p_offs[1:] - 1] = chunk - rpp * (n_pkts - 1)
+    times = np.repeat(np.asarray(t0s, np.float64), n_pkts)
+    return [
+        PacketStream(job_id=job_id, flow_id=m, level=level,
+                     times=times[p_offs[m]:p_offs[m + 1]],
+                     sizes=sizes[p_offs[m]:p_offs[m + 1]],
+                     keys=keys[offs[m]:offs[m + 1]],
+                     values=values[offs[m]:offs[m + 1]])
+        for m in range(n_mappers)]
+
+
+def stream_from_packets(stream, *, value_template: np.ndarray) -> PacketStream:
+    """Array form of a node-path ``[(t_ready, wire.Packet), ...]`` stream
+    (PSN order, trailing EoT).  ``value_template`` supplies the carried
+    lane shape/dtype when the stream has no payload at all."""
+    hdr0 = stream[0][1].header
+    times = np.array([t for t, _ in stream], np.float64)
+    sizes = np.array([p.header.n_records for _, p in stream], np.int64)
+    ks = [np.asarray(p.keys, np.int32) for _, p in stream
+          if p.header.n_records]
+    vs = [np.asarray(p.values) for _, p in stream if p.header.n_records]
+    keys = (np.concatenate(ks) if ks else np.zeros((0,), np.int32))
+    values = (np.concatenate(vs) if vs else value_template[:0])
+    return PacketStream(job_id=hdr0.job_id, flow_id=hdr0.flow_id,
+                        level=hdr0.level, times=times, sizes=sizes,
+                        keys=keys, values=values)
+
+
+def stream_to_packets(ps: PacketStream) -> list[tuple[float, wire.Packet]]:
+    """Materialize ``wire.Packet`` objects — the node-path representation —
+    for tiers (disabled/capacity-0/lossy) that walk packets one by one."""
+    offs = np.concatenate([[0], np.cumsum(ps.sizes)])
+    n = ps.n_packets
+    out = []
+    for i in range(n):
+        lo, hi = int(offs[i]), int(offs[i + 1])
+        hdr = wire.PacketHeader(
+            job_id=ps.job_id, flow_id=ps.flow_id, level=ps.level, psn=i,
+            n_records=hi - lo, eot=(i == n - 1))
+        out.append((float(ps.times[i]),
+                    wire.Packet(header=hdr, keys=ps.keys[lo:hi],
+                                values=ps.values[lo:hi])))
+    return out
+
+
+def transmit_stream(ps: PacketStream,
+                    link: links_lib.Link) -> tuple[np.ndarray, float]:
+    """``transport.send_stream`` collapsed to its loss=0 closed form.
+
+    With no drops the window never rewinds and go-back-N is a FIFO chain:
+    ``depart_i = max(depart_{i-1}, ready_i) + ser_i`` — evaluated here
+    with exactly the node engine's float expressions and order, so depart
+    / arrive times and link telemetry are bit-identical.  Returns
+    (per-packet arrival times, sender-finished time).
+    """
+    denom = link.gbps * 1e9  # Link.serialize_s's denominator, precomputed
+    prop = link.propagation_s
+    t = link.busy_until
+    busy_s = link.busy_s
+    wire_list = (wire.HEADER_BYTES + ps.sizes * wire.PAIR_BYTES).tolist()
+    arrive = np.empty((ps.n_packets,), np.float64)
+    i = 0
+    for r, wb in zip(ps.times.tolist(), wire_list):
+        if t < r:
+            t = r
+        ser = wb / denom
+        t += ser  # start + ser, start = max(prev depart, ready)
+        busy_s += ser
+        arrive[i] = t + prop
+        i += 1
+    link.busy_until = t
+    link.busy_s = busy_s
+    link.bytes_sent += sum(wire_list)
+    link.payload_bytes += int(ps.sizes.sum()) * wire.PAIR_BYTES
+    link.packets_sent += ps.n_packets
+    return arrive, t
+
+
+@dataclasses.dataclass
+class _Gate:
+    """Loss=0 receiver stand-in: per-flow PSNs arrive in order, so every
+    packet is accepted and both discard counters stay zero."""
+
+    gap_discards: int = 0
+    duplicate_discards: int = 0
+
+
+@dataclasses.dataclass
+class _TierStats:
+    """``LevelState``-shaped telemetry carrier for the fast path."""
+
+    n_evict: int = 0
+
+
+@dataclasses.dataclass
+class _VNode:
+    """``_Node``-shaped per-switch result of the fast tier path: same
+    telemetry fields, no event-loop state (the arrays already ran)."""
+
+    records_in: int
+    records_out: int
+    bytes_out: int
+    agg_proc_s: float
+    queue_peak: int
+    state: _TierStats | None  # None on forward-only (relay) tiers
+    receiver: _Gate = dataclasses.field(default_factory=_Gate)
+    finished: bool = True
+
+
+def run_tier_fast(streams: list[PacketStream], *, level: int, fanin: int,
+                  spec: dataplane.LevelSpec | None, op: str, cfg, axis: str,
+                  gbps: float, job_id: int, first_flow_id: int,
+                  value_template: np.ndarray):
+    """Run one whole tier at loss=0: transport, acceptance, processing,
+    MTU re-framing, telemetry — arrays plus (at most) one kernel call.
+
+    ``streams`` holds the child streams in child-index order (child *c* of
+    switch *s* at ``streams[s * fanin + c]``).  All per-link FIFO-chain
+    transport state and all per-switch processing/EoT state live in
+    tier-wide arrays (DESIGN.md §10): the serialization recurrence runs
+    once per packet *rank* vectorized over every link at the tier, and the
+    store-and-forward clock recurrence once per merged-arrival rank
+    vectorized over every switch.  ``spec=None`` runs the tier
+    forward-only (host-only baseline or a placement-disabled hop): no
+    kernel, records re-framed unchanged, store-and-forward charged to the
+    clock but not to ``agg_proc_s``.  Returns ``(nodes, out_streams,
+    links, flow_stats, t_done)`` where ``nodes`` are :class:`_VNode`
+    telemetry carriers, ``out_streams`` the per-switch uplink
+    :class:`PacketStream`s, ``links`` the per-edge
+    :class:`~repro.net.links.Link` objects (telemetry filled), and
+    ``t_done`` each child flow's sender-finished time (the mapper finish
+    times at tier 0).  Every float replicates the node engine bitwise.
+    """
+    forward = spec is None
+    n_links = len(streams)
+    n_switches = n_links // fanin
+    rpp = int(cfg.records_per_packet)
+    proc_rate = cfg.processing_gbps * 1e9
+    lane_shape = value_template.shape[1:]
+    vdtype = value_template.dtype
+
+    # --- transport: every link's loss=0 FIFO chain, batched ------------
+    # depart_i = max(depart_{i-1}, ready_i) + ser_i, evaluated per packet
+    # rank over a [n_links] lane; padded ranks carry ready=-inf, bytes=0
+    # so dead lanes reproduce their last state bit-for-bit
+    p_link = np.array([ps.n_packets for ps in streams], np.int64)
+    pm_link = int(p_link.max())
+    sizes_flat = np.concatenate([ps.sizes for ps in streams])
+    big = int(sizes_flat.max(initial=0))
+    if big > rpp:
+        raise ValueError(f"packet carries {big} records > "
+                         f"records_per_packet {rpp}")
+    ready = np.full((n_links, pm_link), -np.inf)
+    wb = np.zeros((n_links, pm_link))
+    lmask = np.arange(pm_link)[None, :] < p_link[:, None]
+    ready[lmask] = np.concatenate([ps.times for ps in streams])
+    wb[lmask] = wire.HEADER_BYTES + sizes_flat * wire.PAIR_BYTES
+    denom = gbps * 1e9  # Link.serialize_s's denominator, precomputed
+    dep = np.zeros((n_links,))
+    busy = np.zeros((n_links,))
+    arr = np.empty((n_links, pm_link))
+    for j in range(pm_link):
+        ser = wb[:, j] / denom
+        dep = np.maximum(dep, ready[:, j]) + ser
+        busy = busy + ser
+        arr[:, j] = dep + cfg.propagation_s
+    links: list[links_lib.Link] = []
+    flow = transport.FlowStats()
+    starts = np.concatenate([[0], np.cumsum(p_link)[:-1]])
+    # every stream has >= 1 packet (an empty stream is one EoT packet),
+    # so each reduceat segment is non-empty
+    pay_bytes = np.add.reduceat(sizes_flat, starts) * wire.PAIR_BYTES
+    for c, ps in enumerate(streams):
+        link = links_lib.Link(
+            name=f"{axis}.s{c // fanin}.c{c % fanin}", axis=axis, gbps=gbps,
+            propagation_s=cfg.propagation_s)
+        link.busy_until = float(dep[c])
+        link.busy_s = float(busy[c])
+        link.bytes_sent = wire.HEADER_BYTES * int(p_link[c]) + int(pay_bytes[c])
+        link.payload_bytes = int(pay_bytes[c])
+        link.packets_sent = int(p_link[c])
+        links.append(link)
+    flow.packets_sent = int(p_link.sum())
+    flow.wire_bytes = int(wire.HEADER_BYTES * p_link.sum()
+                          + wire.PAIR_BYTES * sizes_flat.sum())
+    t_done = dep.tolist()
+
+    # --- merge: one global sort keyed (switch, t, flow, psn) — per
+    # switch this is the node engine's (t, flow_id, psn) stable order ---
+    s_all = np.repeat(np.arange(n_links) // fanin, p_link)
+    t_all = arr[lmask]
+    flow_all = np.repeat(np.array([ps.flow_id for ps in streams]), p_link)
+    psn_all = np.arange(p_link.sum()) - np.repeat(starts, p_link)
+    eot_all = np.zeros(t_all.shape, bool)
+    eot_all[np.cumsum(p_link) - 1] = True
+    order = np.lexsort((psn_all, flow_all, t_all, s_all))
+    s_m, t_m = s_all[order], t_all[order]
+    sizes_m = sizes_flat[order]
+    eot_m = eot_all[order]
+
+    # payload rows [P_total, rpp] in merged order (record packets only)
+    fill = np.arange(rpp)[None, :] < sizes_flat[:, None]
+    mat_k = np.full((t_all.shape[0], rpp), _EMPTY, np.int32)
+    mat_k[fill] = np.concatenate([ps.keys for ps in streams])
+    mat_v = np.zeros((t_all.shape[0], rpp) + lane_shape, vdtype)
+    mat_v[fill] = np.concatenate(
+        [ps.values for ps in streams if ps.values.shape[0]]
+        or [value_template[:0]])
+    rec_m = sizes_m > 0
+    sel = order[rec_m]  # record packets in merged order, one gather each
+    rows_k, rows_v = mat_k[sel], mat_v[sel]
+    s_rec = s_m[rec_m]
+    p_counts = np.bincount(s_rec, minlength=n_switches)
+    rec_start = np.concatenate([[0], np.cumsum(p_counts)[:-1]])
+
+    # --- the kernel: one jitted call for the whole tier, pad-to-pow2
+    # batch shapes (forward-only tiers never touch the device) ----------
+    if not forward:
+        s_pad = _pow2(n_switches)
+        p_pad = _pow2(int(p_counts.max(initial=0)), floor=1)
+        keys_b = np.full((s_pad, p_pad, rpp), _EMPTY, np.int32)
+        vals_b = np.zeros((s_pad, p_pad, rpp) + lane_shape, vdtype)
+        dst = np.arange(s_rec.shape[0]) - np.repeat(rec_start, p_counts)
+        keys_b[s_rec, dst] = rows_k
+        vals_b[s_rec, dst] = rows_v
+        tk, tv, ek, ev, ne, no = jax.device_get(tier_ingest(
+            jnp.asarray(keys_b), jnp.asarray(vals_b),
+            capacity=spec.capacity, ways=spec.ways, op=op, bpe=spec.bpe,
+            exact_stream=cfg.exact_stream))
+        if int(ne.max(initial=0)) > rpp:
+            raise AssertionError(
+                "tier_ingest eviction compaction dropped real entries "
+                f"(a packet evicted {int(ne.max())} > {rpp} pairs)")
+
+    # --- processing-time recurrence (the _Node.receive float ops),
+    # batched over switches: one pass per merged-arrival rank -----------
+    m_counts = np.bincount(s_m, minlength=n_switches)
+    seg_start = np.concatenate([[0], np.cumsum(m_counts)[:-1]])
+    psm = int(m_counts.max(initial=0))
+    rank = np.arange(s_m.shape[0]) - np.repeat(seg_start, m_counts)
+    t_as = np.zeros((n_switches, psm))
+    nrec = np.zeros((n_switches, psm), np.int64)
+    eots = np.zeros((n_switches, psm), bool)
+    t_as[s_m, rank] = t_m
+    nrec[s_m, rank] = sizes_m
+    eots[s_m, rank] = eot_m
+    pf = np.zeros((n_switches,))
+    agg_s = np.zeros((n_switches,))
+    t_fin = np.zeros((n_switches,))
+    tp = np.empty((n_switches, psm))
+    if n_switches >= 32:
+        # wide tier: one pass per rank, [n_switches]-wide lanes
+        cnt = np.zeros((n_switches,), np.int64)
+        for j in range(psm):
+            live = nrec[:, j] > 0
+            busy_j = (wire.HEADER_BYTES + nrec[:, j] * wire.PAIR_BYTES) \
+                / proc_rate
+            pf = np.where(live, np.maximum(pf, t_as[:, j]) + busy_j, pf)
+            if not forward:  # a relay's charge is store-and-forward
+                agg_s = np.where(live, agg_s + busy_j, agg_s)
+            tp[:, j] = pf
+            t_j = np.where(live, pf, t_as[:, j])
+            cnt = cnt + eots[:, j]
+            hit = eots[:, j] & (cnt == fanin)
+            t_fin = np.where(hit, np.maximum(t_j, pf), t_fin)
+    else:
+        # narrow tier (few switches, long streams): python scalars beat
+        # width-1 numpy lanes by ~10x; identical float ops either way
+        for s in range(n_switches):
+            m = int(m_counts[s])
+            pf_s = 0.0
+            agg = 0.0
+            eots_s = 0
+            fin = 0.0
+            tp_row = tp[s]
+            for j, (t_a, nr, eot) in enumerate(zip(
+                    t_as[s, :m].tolist(), nrec[s, :m].tolist(),
+                    eots[s, :m].tolist())):
+                t = t_a
+                if nr:
+                    start = pf_s if pf_s > t_a else t_a
+                    busy_j = (wire.HEADER_BYTES + nr * wire.PAIR_BYTES) \
+                        / proc_rate
+                    pf_s = start + busy_j
+                    if not forward:
+                        agg += busy_j
+                    t = pf_s
+                tp_row[j] = pf_s
+                if eot:
+                    eots_s += 1
+                    if eots_s == fanin:
+                        fin = pf_s if pf_s > t else t
+            pf[s] = pf_s
+            agg_s[s] = agg
+            t_fin[s] = fin
+    # --- EoT flush (the _Node._finish float ops; relays hold no table)
+    if forward:
+        flush_ns = np.zeros((n_switches,), np.int64)
+        t_end_v = t_fin
+    else:
+        flush_m = tk[:n_switches] != _EMPTY
+        flush_ns = flush_m.sum(axis=1).astype(np.int64)
+        busy_f = flush_ns * wire.PAIR_BYTES / proc_rate
+        flushed = flush_ns > 0
+        agg_s = np.where(flushed, agg_s + busy_f, agg_s)
+        t_end_v = np.where(flushed, np.maximum(t_fin, pf) + busy_f, t_fin)
+
+    nodes: list[_VNode] = []
+    out_streams: list[PacketStream] = []
+    for s in range(n_switches):
+        pc = int(p_counts[s])
+        mrow = slice(int(seg_start[s]), int(seg_start[s]) + int(m_counts[s]))
+        live_row = nrec[s, :m_counts[s]] > 0
+        if forward:
+            out_counts = nrec[s, :m_counts[s]][live_row]
+        else:
+            out_counts = no[s, :pc].astype(np.int64)
+        flush_n = int(flush_ns[s])
+        t_end = float(t_end_v[s])
+        # --- MTU re-framing: frame j closes at the arrival whose output
+        # pushed the pending queue past (j+1)*rpp; the rest flush at EoT
+        cumout = np.cumsum(out_counts)
+        total = int(cumout[-1]) if pc else 0
+        total_after = total + flush_n
+        k1 = total // rpp
+        k_total = total_after // rpp
+        rem = total_after - k_total * rpp
+        frame_t = np.full((k_total + 1,), t_end, np.float64)
+        if k1:
+            idx = np.searchsorted(cumout,
+                                  np.arange(1, k1 + 1) * rpp, side="left")
+            frame_t[:k1] = tp[s, :m_counts[s]][live_row][idx]
+        frame_sizes = np.full((k_total + 1,), rpp, np.int64)
+        frame_sizes[-1] = rem  # the EoT frame (empty when rem == 0)
+        # --- payload: forwarded records, or per-packet eviction streams
+        # followed by the table flush ---
+        seg = slice(int(rec_start[s]), int(rec_start[s]) + pc)
+        if forward:
+            fwd = np.arange(rpp)[None, :] < out_counts[:, None]
+            out_k, out_v = rows_k[seg][fwd], rows_v[seg][fwd]
+        else:
+            emask = ek[s, :pc] != _EMPTY
+            out_k = ek[s, :pc][emask]
+            out_v = ev[s, :pc][emask]
+            if flush_n:
+                out_k = np.concatenate([out_k, tk[s][flush_m[s]]])
+                out_v = np.concatenate([out_v, tv[s][flush_m[s]]])
+        assert out_k.shape[0] == total_after
+        # --- telemetry (matches _Node counter for counter) ---
+        pend_before = (cumout - out_counts) % rpp
+        peaks = (pend_before + out_counts)[out_counts > 0]
+        peak = int(peaks.max()) if peaks.size else 0
+        if flush_n:
+            peak = max(peak, total % rpp + flush_n)
+        nodes.append(_VNode(
+            records_in=int(sizes_m[mrow].sum()),
+            records_out=total_after,
+            bytes_out=((k_total + 1) * wire.HEADER_BYTES
+                       + total_after * wire.PAIR_BYTES),
+            agg_proc_s=float(agg_s[s]),
+            queue_peak=peak,
+            state=None if forward else _TierStats(
+                n_evict=int(ne[s, :pc].sum())),
+        ))
+        out_streams.append(PacketStream(
+            job_id=job_id, flow_id=first_flow_id + s, level=level + 1,
+            times=frame_t, sizes=frame_sizes,
+            keys=out_k.astype(np.int32), values=out_v))
+    return nodes, out_streams, links, flow, t_done

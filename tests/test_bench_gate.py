@@ -1,10 +1,12 @@
 """The CI perf-regression gate (tools/check_bench_regression.py).
 
-The gate compares smoke-run BENCH_fpe/BENCH_dataplane metrics against
-checked-in baselines with a tolerance band.  These tests pin its contract
-on synthetic fixtures: identical runs pass, >30% throughput drops fail,
-improvements pass (with a re-baseline note), semantic (reduction-ratio)
-drift fails tightly, and coverage shrink fails.
+The gate compares smoke-run BENCH_fpe/BENCH_dataplane/BENCH_sim metrics
+against checked-in baselines with a tolerance band.  These tests pin its
+contract on synthetic fixtures: identical runs pass, >30% throughput
+drops fail, improvements pass (with a re-baseline note), semantic
+(reduction-ratio / engine-parity) drift fails tightly, the sim suite's
+absolute speedup floor fails regardless of the baseline, and coverage
+shrink fails.
 """
 
 import importlib.util
@@ -41,12 +43,27 @@ def _dp_row(**kw):
     return row
 
 
-def _write(dirpath, fpe_rows, dp_rows):
+def _sim_row(**kw):
+    row = {"cell": "fat16_tor", "pods": 16, "n_mappers": 2048,
+           "records": 131072, "records_per_packet": 4, "policy": "tor_only",
+           "switch_steps": 237220, "node_wall_us": 10_000_000.0,
+           "vec_wall_us": 100_000.0, "node_steps_per_s": 23_722.0,
+           "vec_steps_per_s": 2_372_200.0, "speedup": 100.0, "parity": 1.0,
+           "speedup_floor": 50.0}
+    row.update(kw)
+    return row
+
+
+def _write(dirpath, fpe_rows, dp_rows, sim_rows=None):
     dirpath.mkdir(parents=True, exist_ok=True)
     (dirpath / "BENCH_fpe.json").write_text(
         json.dumps({"bench": "fpe", "rows": fpe_rows}))
     (dirpath / "BENCH_dataplane.json").write_text(
         json.dumps({"bench": "dataplane", "rows": dp_rows}))
+    (dirpath / "BENCH_sim.json").write_text(
+        json.dumps({"bench": "sim",
+                    "rows": sim_rows if sim_rows is not None
+                    else [_sim_row()]}))
 
 
 @pytest.fixture()
@@ -133,6 +150,36 @@ def test_update_then_check_roundtrip(tmp_path):
     _write(out, [_fpe_row()], [_dp_row()])
     assert gate.update(out, base) == 0
     assert _check(base, out) == 0
+
+
+def test_sim_speedup_below_floor_fails(dirs):
+    # the tier engine slipping under the absolute 50x bar fails, even
+    # though as a throughput ratio 49x-vs-100x-baseline would only be a
+    # cell-level note
+    base, out = dirs
+    _write(out, [_fpe_row()], [_dp_row()],
+           [_sim_row(speedup=49.0, vec_wall_us=204_081.0,
+                     vec_steps_per_s=1_162_477.0)])
+    assert _check(base, out) == 1
+
+
+def test_sim_speedup_floor_comes_from_current_run(dirs):
+    # re-baselining cannot lower the bar: a stale baseline floor of 10x
+    # does not save a current run that declares (and misses) 50x
+    base, out = dirs
+    _write(base, [_fpe_row()], [_dp_row()],
+           [_sim_row(speedup_floor=10.0)])
+    _write(out, [_fpe_row()], [_dp_row()],
+           [_sim_row(speedup=49.0, vec_wall_us=204_081.0,
+                     vec_steps_per_s=1_162_477.0)])
+    assert _check(base, out) == 1
+
+
+def test_sim_parity_break_fails(dirs):
+    # parity is semantic: any drift from 1.0 means the engines disagreed
+    base, out = dirs
+    _write(out, [_fpe_row()], [_dp_row()], [_sim_row(parity=0.0)])
+    assert _check(base, out) == 1
 
 
 def test_repo_baselines_match_gated_files():

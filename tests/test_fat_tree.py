@@ -278,6 +278,40 @@ def test_incast_jct_orders_full_tor_host(small_incast):
     assert j["full"] <= j["tor_only"] <= j["host_only"]
 
 
+def test_disabled_hop_telemetry_zero_proc_nonzero_bytes(small_incast):
+    """Regression: a placement-disabled (forward-only) hop must still
+    report its wire bytes and queue depth — zero aggregation-engine
+    seconds, nonzero bytes_out — identically in both engines (forward
+    relays used to skip the pending-queue accounting entirely)."""
+    import dataclasses
+
+    from repro.net import sim as netsim
+
+    ft, keys, _ = small_incast
+    vals = np.ones_like(keys, np.float32)
+    placement = pl.place_aggregation_tree(
+        ft, per_host_pairs=512, key_variety=512, policy="tor_only")
+    assert placement.level_enabled[0] and not all(placement.level_enabled)
+    cfg = netsim.NetConfig(exact_stream=True, records_per_packet=32)
+    res = {eng: netsim.simulate_fat_tree_job(
+        ft, keys, vals, placement=placement,
+        cfg=dataclasses.replace(cfg, engine=eng))
+        for eng in ("node", "vectorized")}
+    for eng, r in res.items():
+        for lvl, enabled in zip(r.per_level, placement.level_enabled):
+            if enabled:
+                assert lvl["agg_proc_s"] > 0.0, (eng, lvl)
+                continue
+            # forward-only: every record moves (bytes, queue) but the
+            # aggregation engine never runs (proc seconds, evictions)
+            assert lvl["agg_proc_s"] == 0.0, (eng, lvl)
+            assert lvl["evictions"] == 0, (eng, lvl)
+            assert lvl["bytes_out"] > 0, (eng, lvl)
+            assert lvl["records_out"] == lvl["records_in"], (eng, lvl)
+            assert lvl["queue_peak"] > 0, (eng, lvl)
+    assert res["vectorized"].report() == res["node"].report()
+
+
 def test_host_only_placement_equals_aggregate_false_baseline(small_incast):
     from repro.net import sim as netsim
 

@@ -1,8 +1,9 @@
 #!/usr/bin/env python
 """Perf-regression gate for the CI bench smoke step.
 
-Compares the smoke-run ``BENCH_fpe.json`` / ``BENCH_dataplane.json`` in
-``--out-dir`` against the checked-in ``benchmarks/baselines/*.json``:
+Compares the smoke-run ``BENCH_fpe.json`` / ``BENCH_dataplane.json`` /
+``BENCH_sim.json`` in ``--out-dir`` against the checked-in
+``benchmarks/baselines/*.json``:
 
   * throughput (FPE scan/fast pairs-per-second, dataplane pairs-per-
     second derived from ``n / wall_us``) is gated on the GEOMETRIC MEAN
@@ -13,10 +14,14 @@ Compares the smoke-run ``BENCH_fpe.json`` / ``BENCH_dataplane.json`` in
     mode), so any single cell can swing 30%+ on a loaded CI runner,
     while a real regression moves the whole suite.  Per-cell swings
     beyond the band are still printed as notes;
-  * semantic metrics (dataplane end-to-end reduction ratio) are gated
-    per cell within an absolute ``--semantic-tolerance`` band — these
-    are deterministic, so drift means the aggregation semantics moved,
-    not the machine;
+  * semantic metrics (dataplane end-to-end reduction ratio, sim-engine
+    parity flags) are gated per cell within an absolute
+    ``--semantic-tolerance`` band — these are deterministic, so drift
+    means the aggregation semantics moved, not the machine;
+  * ``floor:<x>`` metrics (the vectorized simulator's node-vs-tier
+    speedup, DESIGN.md §10) are gated against an ABSOLUTE bar carried in
+    the bench rows themselves — the baseline only feeds the note, so
+    re-baselining a slow run cannot lower the bar;
   * a config row present in the baseline but missing from the current
     run fails too (silent coverage shrink is a regression).
 
@@ -38,7 +43,7 @@ import shutil
 import sys
 
 #: files the gate covers, with their metric extractors (see below)
-GATED = ("BENCH_fpe.json", "BENCH_dataplane.json")
+GATED = ("BENCH_fpe.json", "BENCH_dataplane.json", "BENCH_sim.json")
 
 
 def _load_rows(path: pathlib.Path) -> list[dict]:
@@ -70,9 +75,31 @@ def dataplane_metrics(rows: list[dict]) -> dict[str, tuple[float, str]]:
     return out
 
 
+def sim_metrics(rows: list[dict]) -> dict[str, tuple[float, str]]:
+    """Engine-vs-engine simulator cells (DESIGN.md §10): per-engine
+    steps/s ride the throughput geomean; the parity flag is semantic
+    (the engines either agreed exactly or the cell is broken); the
+    flagship cell's node-vs-vectorized speedup carries an absolute
+    ``floor:<x>`` bar — the tier engine must stay >= that many times
+    faster than the node oracle no matter what the baseline says."""
+    out = {}
+    for r in rows:
+        key = r["cell"]
+        out[f"sim:{key}:node_steps_per_s"] = (r["node_steps_per_s"],
+                                              "throughput")
+        out[f"sim:{key}:vec_steps_per_s"] = (r["vec_steps_per_s"],
+                                             "throughput")
+        out[f"sim:{key}:parity"] = (r["parity"], "semantic")
+        if "speedup_floor" in r:
+            out[f"sim:{key}:speedup"] = (r["speedup"],
+                                         f"floor:{r['speedup_floor']}")
+    return out
+
+
 EXTRACTORS = {
     "BENCH_fpe.json": fpe_metrics,
     "BENCH_dataplane.json": dataplane_metrics,
+    "BENCH_sim.json": sim_metrics,
 }
 
 
@@ -91,7 +118,7 @@ def compare(
             fails.append(f"{name}: present in baseline but missing from the "
                          f"current run (coverage shrank)")
             continue
-        cur, _ = current[name]
+        cur, cur_kind = current[name]
         if kind == "throughput":
             if base <= 0:
                 continue
@@ -100,6 +127,19 @@ def compare(
             if abs(rel) > tolerance:  # informational: one cell is noise
                 notes.append(f"{name}: {rel:+.1%} vs baseline (cell-level, "
                              f"not gated)")
+        elif kind.startswith("floor:"):
+            # an absolute bar, independent of the baseline: the metric
+            # must stay >= the floor the CURRENT run declares (the bar is
+            # versioned with the bench code, and re-baselining a slow run
+            # cannot lower it)
+            floor = float((cur_kind if cur_kind.startswith("floor:")
+                           else kind).split(":", 1)[1])
+            if cur < floor:
+                fails.append(f"{name}: {cur:.1f} below the absolute "
+                             f"floor {floor:.1f}")
+            else:
+                notes.append(f"{name}: {cur:.1f} >= floor {floor:.1f} "
+                             f"(baseline {base:.1f})")
         else:  # semantic: deterministic, tight absolute band per cell
             if abs(cur - base) > semantic_tolerance:
                 fails.append(f"{name}: {cur:.4f} vs baseline {base:.4f} "
