@@ -1054,3 +1054,47 @@ def size_fpe_capacity(key_variety: int, target_reduction: float, data_amount: in
     if denom <= 0:
         return key_variety
     return max(1, math.ceil(target_reduction / denom))
+
+def tier_batch_key(configure, level: int, *, ways: int = 4,
+                   bpe: bool = True) -> tuple | None:
+    """The kernel-static signature of one tier of an admitted job, or
+    ``None`` when the tier issues no kernel (disabled/forwarding hop, or
+    capacity-0 exact level).
+
+    Two jobs' tiers with equal keys run in ONE batched ``tier_ingest``
+    call under the vectorized simulator — the plan-derived half of the
+    batcher's grouping (the shared-``NetConfig`` half — exact_stream,
+    records_per_packet, value lanes — is constant across a batch run
+    with one config).
+    """
+    from . import dataplane  # local import: dataplane is downstream
+
+    plan = dataplane.plan_from_configure(configure, ways=ways, bpe=bpe)
+    if level >= len(plan.levels):
+        return None
+    spec = plan.levels[level]
+    if not (spec.enabled and spec.capacity > 0):
+        return None
+    return (spec.capacity, spec.ways, plan.op, spec.bpe)
+
+
+def batch_tier_groups(job_plans, *, ways: int = 4,
+                      bpe: bool = True) -> dict[int, dict[tuple, list[int]]]:
+    """Predict the vectorized simulator's multi-job tier batching:
+    ``{level: {tier_batch_key: [job indices]}}`` over an admitted batch.
+
+    ``net.sim.simulate_job_plans`` packs, per level, each key group's
+    switches into one ``tier_ingest`` dispatch, so the number of jitted
+    kernel calls at a level equals the number of key groups here — the
+    invariant the batching tests pin.  Jobs whose tier is kernel-free
+    (``tier_batch_key`` ``None``) appear in no group.
+    """
+    groups: dict[int, dict[tuple, list[int]]] = {}
+    for i, jp in enumerate(job_plans):
+        configure = getattr(jp, "configure", jp)
+        for level in range(len(configure.level_axes)):
+            key = tier_batch_key(configure, level, ways=ways, bpe=bpe)
+            if key is None:
+                continue
+            groups.setdefault(level, {}).setdefault(key, []).append(i)
+    return groups

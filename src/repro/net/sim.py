@@ -24,6 +24,12 @@ level: a node's full arrival schedule is known once its children finished,
 so no global event heap is needed — arrivals are merged in time order and
 ingested sequentially, which keeps the hash-table dynamics honest.
 
+Concurrency: :func:`simulate_jobs` steps a whole batch of independent
+jobs level by level in lockstep, so tiers at the same depth that share a
+kernel-static signature run as ONE batched ``vsim.tier_ingest`` call
+(multi-job tier batching, DESIGN.md §10) — results are bit-identical to
+running each job alone.
+
 ``aggregate=False`` is the host-only baseline: switches forward records
 unaggregated and the reducer in-link carries the entire map output — the
 configuration the paper's Fig. 10 JCT comparison is measured against.
@@ -68,9 +74,16 @@ class NetConfig:
     exact_stream: bool = True
     #: "node" steps one Python node per switch (the oracle);
     #: "vectorized" batches each tier's per-packet FPE work into one
-    #: jitted call (DESIGN.md §10) — bit-identical results, orders of
-    #: magnitude more simulated switch-steps per second
+    #: jitted call (DESIGN.md §10) — bit-identical results at any loss
+    #: rate, orders of magnitude more simulated switch-steps per second
     engine: str = "node"
+    #: optional ``transport.LossModel`` override (e.g. an explicit
+    #: drop-mask model in the property tests); ``None`` builds
+    #: ``LossModel(loss_rate, seed)``.  The model's ``rate`` must be > 0
+    #: for the lossy transport path to engage, and its ``drop`` /
+    #: ``drop_array`` must stay elementwise-consistent so both engines
+    #: see the same loss pattern.
+    loss_model: transport.LossModel | None = None
 
 
 class _Node:
@@ -78,19 +91,16 @@ class _Node:
 
     def __init__(self, *, level: int, n_children: int,
                  spec: dataplane.LevelSpec | None, op: str, aggregate: bool,
-                 cfg: NetConfig, job_id: int, flow_id: int, state=None):
+                 cfg: NetConfig, job_id: int, flow_id: int):
         self.level = level
         self.n_children = n_children
         # a disabled spec (placement left this tier out, DESIGN.md §9) is a
         # forward-only switch — same path as the host-only baseline
         self.aggregate = aggregate and (spec is None or spec.enabled)
-        if state is not None:  # tier-batched precompute (DESIGN.md §10)
-            self.state = state
-        else:
-            self.state = (dataplane.LevelState(
-                spec, op, batch_pad=cfg.records_per_packet,
-                exact_stream=cfg.exact_stream)
-                if self.aggregate else None)
+        self.state = (dataplane.LevelState(
+            spec, op, batch_pad=cfg.records_per_packet,
+            exact_stream=cfg.exact_stream)
+            if self.aggregate else None)
         self.receiver = transport.Receiver()
         self.proc_free = 0.0
         self.proc_rate = cfg.processing_gbps * 1e9
@@ -233,6 +243,331 @@ def _default_axes(n: int) -> tuple[str, ...]:
     return tuple(f"lvl{i}" for i in range(n))
 
 
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One job's inputs to :func:`simulate_jobs` — exactly
+    :func:`simulate_job`'s signature as data, so a batch of concurrent
+    jobs can run through the level-lockstep engine together."""
+
+    keys: object
+    values: object
+    fanins: Sequence[int]
+    plan: dataplane.CascadePlan | None = None
+    op: str = "sum"
+    aggregate: bool = True
+    cfg: NetConfig | None = None
+    axes: Sequence[str] | None = None
+    mapper_delay: Callable[[int], float] | None = None
+    job_id: int = 0
+
+
+class _JobRun:
+    """Mutable per-job state while :func:`simulate_jobs` steps the batch
+    level by level.  Jobs never interact — each owns its links, flows,
+    and streams; the lockstep exists only so same-depth tiers can share
+    batched kernel calls."""
+
+    def __init__(self, spec: JobSpec):
+        cfg = spec.cfg or NetConfig()
+        if cfg.engine not in ("node", "vectorized"):
+            raise ValueError(f"unknown sim engine {cfg.engine!r} "
+                             "(expected 'node' or 'vectorized')")
+        fanins = tuple(int(f) for f in spec.fanins)
+        if not fanins or any(f < 1 for f in fanins):
+            raise ValueError(f"bad fanins {fanins}")
+        n_levels = len(fanins)
+        axes = (tuple(spec.axes) if spec.axes is not None
+                else _default_axes(n_levels))
+        if len(axes) != n_levels:
+            raise ValueError("axes must match fanins")
+        op, plan, aggregate = spec.op, spec.plan, spec.aggregate
+        if plan is not None:
+            op = plan.op  # the plan owns the op even for the baseline
+        if aggregate:
+            if plan is None:
+                plan = dataplane.CascadePlan(op=op, levels=tuple(
+                    dataplane.LevelSpec(capacity=0) for _ in fanins))
+            if len(plan.levels) != n_levels:
+                raise ValueError(
+                    f"plan has {len(plan.levels)} levels, tree has "
+                    f"{n_levels}")
+        link_gbps = (tuple(cfg.link_gbps) if cfg.link_gbps is not None
+                     else (TEN_GBE,) * n_levels)
+        if len(link_gbps) != n_levels:
+            raise ValueError("link_gbps must match fanins")
+        self.cfg = cfg
+        self.fanins = fanins
+        self.n_levels = n_levels
+        self.axes = axes
+        self.op = op
+        self.plan = plan
+        self.aggregate = aggregate
+        self.aggop = aggops.get(op)
+        self.link_gbps = link_gbps
+        self.reducer_gbps = (cfg.reducer_gbps if cfg.reducer_gbps is not None
+                             else link_gbps[-1])
+        self.job_id = spec.job_id
+
+        n_mappers = math.prod(fanins)
+        self.keys = np.asarray(spec.keys, np.int32)
+        self.carried = np.asarray(self.aggop.prepare_values(
+            jnp.asarray(np.asarray(spec.values))))
+        self.loss = (cfg.loss_model if cfg.loss_model is not None
+                     else transport.LossModel(cfg.loss_rate, cfg.seed))
+        self.all_links: list[links_lib.Link] = []
+        self.flows = transport.FlowStats()
+        self.mapper_finish = [0.0] * n_mappers
+        self.fast_engine = cfg.engine == "vectorized"
+        self.next_flow_id = n_mappers
+        self.per_level_nodes: list[list] = []
+        self.reducer_gap = 0
+        self.reducer_dup = 0
+
+        # mapper output flows (flow ids 0..n_mappers-1); streams live as
+        # Packet lists (node path) or array-form PacketStreams (fast path)
+        t0s = [float(spec.mapper_delay(m)) if spec.mapper_delay is not None
+               else 0.0 for m in range(n_mappers)]
+        if self.fast_engine:
+            self.current: list = vsim.streams_from_mapper_records(
+                self.keys, self.carried, t0s, n_mappers=n_mappers,
+                job_id=self.job_id, level=0, rpp=cfg.records_per_packet)
+        else:
+            key_chunks = np.array_split(self.keys, n_mappers)
+            val_chunks = np.array_split(self.carried, n_mappers)
+            self.current = []
+            for m in range(n_mappers):
+                pkts = wire.pack_records(
+                    key_chunks[m], val_chunks[m], job_id=self.job_id,
+                    flow_id=m, level=0, eot=True,
+                    records_per_packet=cfg.records_per_packet)
+                self.current.append([(t0s[m], p) for p in pkts])
+
+    def _add_flow(self, st: transport.FlowStats) -> None:
+        self.flows.packets_sent += st.packets_sent
+        self.flows.packets_dropped += st.packets_dropped
+        self.flows.retransmissions += st.retransmissions
+        self.flows.timeouts += st.timeouts
+        self.flows.wire_bytes += st.wire_bytes
+
+    def _run_flow(self, stream, link, sink) -> float:
+        arrivals: list[tuple[float, wire.Packet]] = []
+        fid = stream[0][1].header.flow_id
+        t_done, st = transport.send_stream(
+            stream, link, self.loss, flow_id=fid, window=self.cfg.window,
+            timeout_s=self.cfg.timeout_s,
+            deliver=lambda p, t: arrivals.append((t, p)))
+        self._add_flow(st)
+        sink.extend(arrivals)
+        return t_done
+
+    def start_tier(self, l: int) -> vsim.TierWork | None:
+        """Run tier *l*'s front half.  Fast-path tiers return a
+        ``TierWork`` for the shared kernel dispatch; node-path tiers
+        (host-only engine, or capacity-0 exact levels) run to completion
+        here and return ``None``."""
+        spec = self.plan.levels[l] if self.aggregate else None
+        # forward-only tiers (host-only baseline, placement-disabled hops)
+        # have no aggregation state at all, so the fast path covers them
+        # with pure array re-framing — no kernel call
+        fast_forward = self.fast_engine and (
+            not self.aggregate or (spec is not None and not spec.enabled))
+        if fast_forward or (self.fast_engine and self.aggregate
+                            and vsim.supports(spec)):
+            # fast path (DESIGN.md §10): the whole tier — transport (any
+            # loss rate), acceptance, processing, re-framing, telemetry —
+            # as array passes plus at most one jitted kernel call,
+            # bit-identical to the node walk
+            streams = [
+                s if isinstance(s, vsim.PacketStream)
+                else vsim.stream_from_packets(
+                    s, value_template=self.carried[:0])
+                for s in self.current]
+            return vsim.tier_start(
+                streams, level=l, fanin=self.fanins[l],
+                spec=None if fast_forward else spec, op=self.op,
+                cfg=self.cfg, axis=self.axes[l], gbps=self.link_gbps[l],
+                job_id=self.job_id, first_flow_id=self.next_flow_id,
+                value_template=self.carried[:0], loss=self.loss)
+        self._run_tier_node(l)
+        return None
+
+    def finish_tier(self, l: int, work: vsim.TierWork) -> None:
+        """Consume tier *l*'s dispatched kernel slice and advance."""
+        nodes, out_streams, tier_links, tier_flow, t_done = \
+            vsim.tier_finish(work)
+        self.next_flow_id += work.n_switches
+        self.all_links.extend(tier_links)
+        self._add_flow(tier_flow)
+        if l == 0:
+            self.mapper_finish = list(t_done)
+        self.per_level_nodes.append(nodes)
+        self.current = out_streams
+
+    def _run_tier_node(self, l: int) -> None:
+        # node path tiers (host-only engine, capacity-0 exact levels)
+        # walk materialized packets
+        fanin = self.fanins[l]
+        n_switches = math.prod(self.fanins[l + 1:])
+        spec = self.plan.levels[l] if self.aggregate else None
+        current = [
+            vsim.stream_to_packets(s) if isinstance(s, vsim.PacketStream)
+            else s for s in self.current]
+        nodes: list[_Node] = []
+        nxt: list[list[tuple[float, wire.Packet]]] = []
+        for s in range(n_switches):
+            # phase A — transport: run every child-edge flow; links are
+            # FIFO and flows per-edge, so the switch's full arrival
+            # schedule is known before its node steps
+            arrivals: list[tuple[float, wire.Packet]] = []
+            for c in range(fanin):
+                ci = s * fanin + c
+                link = links_lib.Link(
+                    name=f"{self.axes[l]}.s{s}.c{c}", axis=self.axes[l],
+                    gbps=self.link_gbps[l],
+                    propagation_s=self.cfg.propagation_s)
+                self.all_links.append(link)
+                t_done = self._run_flow(current[ci], link, arrivals)
+                if l == 0:
+                    self.mapper_finish[ci] = t_done
+            arrivals.sort(key=lambda a: (a[0], a[1].header.flow_id,
+                                         a[1].header.psn))
+            # phase B — host walk: acceptance, aggregation, timing,
+            # packetization, and telemetry through the node code
+            node = _Node(level=l, n_children=fanin, spec=spec, op=self.op,
+                         aggregate=self.aggregate, cfg=self.cfg,
+                         job_id=self.job_id, flow_id=self.next_flow_id)
+            self.next_flow_id += 1
+            for t, p in arrivals:
+                node.receive(p, t)
+            assert node.finished, "reliable transport must complete the node"
+            nodes.append(node)
+            nxt.append(node.out)
+        self.per_level_nodes.append(nodes)
+        self.current = nxt
+
+    def finalize(self) -> SimResult:
+        """Root -> reducer over the reducer in-link, then assemble."""
+        cfg = self.cfg
+        red_link = links_lib.Link(name="reducer", axis="reducer",
+                                  gbps=self.reducer_gbps,
+                                  propagation_s=cfg.propagation_s)
+        self.all_links.append(red_link)
+        root = self.current[0]
+        if isinstance(root, vsim.PacketStream):
+            # fast path: acceptance falls out of the window algebra, so
+            # the reducer's pre-merge stream is the root stream verbatim
+            # and the JCT is the last accepted arrival
+            if self.loss.rate > 0.0:
+                arrive, _, st, self.reducer_gap = vsim.transmit_stream_lossy(
+                    root, red_link, self.loss, window=cfg.window,
+                    timeout_s=cfg.timeout_s)
+                self._add_flow(st)
+            else:
+                arrive, _ = vsim.transmit_stream(root, red_link)
+                self.flows.packets_sent += root.n_packets
+                self.flows.wire_bytes += (
+                    wire.HEADER_BYTES * root.n_packets
+                    + wire.PAIR_BYTES * int(root.sizes.sum()))
+            jct = max(0.0, float(arrive.max()))
+            arrived_k, arrived_v = root.keys, root.values
+        else:
+            recv = transport.Receiver()
+            arrivals: list[tuple[float, wire.Packet]] = []
+            self._run_flow(root, red_link, arrivals)
+            arrivals.sort(key=lambda a: (a[0], a[1].header.psn))
+            jct = 0.0
+            rec_k: list[np.ndarray] = []
+            rec_v: list[np.ndarray] = []
+            for t, p in arrivals:
+                if recv.accept(p.header):
+                    jct = max(jct, t)
+                    if p.header.n_records:
+                        rec_k.append(np.asarray(p.keys, np.int32))
+                        rec_v.append(np.asarray(p.values))
+            arrived_k = (np.concatenate(rec_k) if rec_k
+                         else np.zeros((0,), np.int32))
+            arrived_v = (np.concatenate(rec_v) if rec_v
+                         else np.zeros((0,) + self.carried.shape[1:],
+                                       self.carried.dtype))
+            self.reducer_gap = recv.gap_discards
+            self.reducer_dup = recv.duplicate_discards
+        if arrived_k.size:  # the reducer host's final exact merge
+            c = kvagg.sorted_combine(jnp.asarray(arrived_k),
+                                     jnp.asarray(arrived_v), op=self.op)
+            n_unique = int(c.n_unique)
+            dk = np.asarray(c.unique_keys)[:n_unique]
+            dv = np.asarray(self.aggop.finalize_values(
+                c.combined_values))[:n_unique]
+        else:
+            n_unique, dk = 0, np.zeros((0,), np.int32)
+            dv = np.zeros((0,), np.float32)
+
+        gap = sum(n.receiver.gap_discards
+                  for lvl in self.per_level_nodes for n in lvl) \
+            + self.reducer_gap
+        dup = sum(n.receiver.duplicate_discards
+                  for lvl in self.per_level_nodes for n in lvl) \
+            + self.reducer_dup
+        per_level = []
+        for l, nodes in enumerate(self.per_level_nodes):
+            per_level.append({
+                "level": l,
+                "axis": self.axes[l],
+                "switches": len(nodes),
+                "records_in": sum(n.records_in for n in nodes),
+                "records_out": sum(n.records_out for n in nodes),
+                "evictions": sum(n.state.n_evict if n.state is not None
+                                 else 0 for n in nodes),
+                # disabled (forward-only) hops do no aggregation-engine
+                # work but still move every byte: zero agg_proc_s, nonzero
+                # bytes_out — and the queue depth is tracked for relays too
+                "bytes_out": sum(n.bytes_out for n in nodes),
+                "agg_proc_s": sum(n.agg_proc_s for n in nodes),
+                "queue_peak": max((n.queue_peak for n in nodes), default=0),
+            })
+        return SimResult(
+            jct_s=jct,
+            aggregate=self.aggregate,
+            op=self.op,
+            fanins=self.fanins,
+            axes=self.axes,
+            delivered_keys=dk,
+            delivered_values=dv,
+            delivered_records=n_unique,
+            delivered_bytes=wire.stream_wire_bytes(
+                n_unique, cfg.records_per_packet),
+            arrived_records=int(arrived_k.shape[0]),
+            link_stats=links_lib.stats_by_axis(self.all_links),
+            per_level=per_level,
+            retransmissions=self.flows.retransmissions,
+            timeouts=self.flows.timeouts,
+            packets_dropped=self.flows.packets_dropped,
+            gap_discards=gap,
+            duplicate_discards=dup,
+            mapper_finish_s=self.mapper_finish,
+        )
+
+
+def simulate_jobs(specs: Sequence[JobSpec]) -> list[SimResult]:
+    """Run a batch of independent jobs, tiers stepped level by level in
+    lockstep so same-depth fast-path tiers share batched kernel calls
+    (``vsim.dispatch_tier_ingest``; ``planner.batch_tier_groups``
+    predicts the packing).  Returns one :class:`SimResult` per spec,
+    bit-identical to running each spec through :func:`simulate_job`
+    alone — the batching changes kernel dispatch count, never results.
+    """
+    runs = [_JobRun(s) for s in specs]
+    for l in range(max((r.n_levels for r in runs), default=0)):
+        pending = [(r, r.start_tier(l)) for r in runs if l < r.n_levels]
+        works = [w for _, w in pending if w is not None]
+        if works:
+            vsim.dispatch_tier_ingest(works)
+        for r, w in pending:
+            if w is not None:
+                r.finish_tier(l, w)
+    return [r.finalize() for r in runs]
+
+
 def simulate_job(
     keys,
     values,
@@ -254,256 +589,34 @@ def simulate_job(
     adds per-mapper start delay — the straggler-injection hook shared with
     ``runtime.fault_tolerance``.
     """
+    return simulate_jobs([JobSpec(
+        keys=keys, values=values, fanins=fanins, plan=plan, op=op,
+        aggregate=aggregate, cfg=cfg, axes=axes, mapper_delay=mapper_delay,
+        job_id=job_id)])[0]
+
+
+def _job_plan_spec(
+    job_plan,
+    keys,
+    values,
+    *,
+    cfg: NetConfig | None,
+    aggregate: bool,
+    mapper_delay: Callable[[int], float] | None,
+) -> JobSpec:
+    """A controller-admitted job (``planner.JobPlan``) as a
+    :class:`JobSpec`: cascade geometry from its ``ConfigureMsg``, link
+    rates from its ``AggregationTree`` levels."""
     cfg = cfg or NetConfig()
-    if cfg.engine not in ("node", "vectorized"):
-        raise ValueError(f"unknown sim engine {cfg.engine!r} "
-                         "(expected 'node' or 'vectorized')")
-    fanins = tuple(int(f) for f in fanins)
-    if not fanins or any(f < 1 for f in fanins):
-        raise ValueError(f"bad fanins {fanins}")
-    n_levels = len(fanins)
-    axes = tuple(axes) if axes is not None else _default_axes(n_levels)
-    if len(axes) != n_levels:
-        raise ValueError("axes must match fanins")
-    if plan is not None:
-        op = plan.op  # the plan owns the op even for the host-only baseline
-    if aggregate:
-        if plan is None:
-            plan = dataplane.CascadePlan(op=op, levels=tuple(
-                dataplane.LevelSpec(capacity=0) for _ in fanins))
-        if len(plan.levels) != n_levels:
-            raise ValueError(
-                f"plan has {len(plan.levels)} levels, tree has {n_levels}")
-    aggop = aggops.get(op)
-    link_gbps = (tuple(cfg.link_gbps) if cfg.link_gbps is not None
-                 else (TEN_GBE,) * n_levels)
-    if len(link_gbps) != n_levels:
-        raise ValueError("link_gbps must match fanins")
-    reducer_gbps = (cfg.reducer_gbps if cfg.reducer_gbps is not None
-                    else link_gbps[-1])
-
-    n_mappers = math.prod(fanins)
-    keys = np.asarray(keys, np.int32)
-    carried = np.asarray(aggop.prepare_values(jnp.asarray(np.asarray(values))))
-
-    loss = transport.LossModel(cfg.loss_rate, cfg.seed)
-    all_links: list[links_lib.Link] = []
-    flows = transport.FlowStats()
-    mapper_finish = [0.0] * n_mappers
-
-    # with no loss the go-back-N machinery never rewinds, so the
-    # vectorized engine can run whole tiers as array passes (DESIGN.md
-    # §10); under loss it falls back to precompute + node replay below
-    fast_engine = cfg.engine == "vectorized" and cfg.loss_rate <= 0.0
-
-    # mapper output flows (flow ids 0..n_mappers-1); streams live as
-    # Packet lists (node path) or array-form PacketStreams (fast path)
-    t0s = [float(mapper_delay(m)) if mapper_delay is not None else 0.0
-           for m in range(n_mappers)]
-    if fast_engine:
-        current: list = vsim.streams_from_mapper_records(
-            keys, carried, t0s, n_mappers=n_mappers, job_id=job_id,
-            level=0, rpp=cfg.records_per_packet)
-    else:
-        key_chunks = np.array_split(keys, n_mappers)
-        val_chunks = np.array_split(carried, n_mappers)
-        current = []
-        for m in range(n_mappers):
-            pkts = wire.pack_records(
-                key_chunks[m], val_chunks[m], job_id=job_id, flow_id=m,
-                level=0, eot=True,
-                records_per_packet=cfg.records_per_packet)
-            current.append([(t0s[m], p) for p in pkts])
-
-    def _run_flow(stream, link, sink) -> float:
-        arrivals: list[tuple[float, wire.Packet]] = []
-        fid = stream[0][1].header.flow_id
-        t_done, st = transport.send_stream(
-            stream, link, loss, flow_id=fid, window=cfg.window,
-            timeout_s=cfg.timeout_s,
-            deliver=lambda p, t: arrivals.append((t, p)))
-        flows.packets_sent += st.packets_sent
-        flows.packets_dropped += st.packets_dropped
-        flows.retransmissions += st.retransmissions
-        flows.timeouts += st.timeouts
-        flows.wire_bytes += st.wire_bytes
-        sink.extend(arrivals)
-        return t_done
-
-    next_flow_id = n_mappers
-    per_level_nodes: list[list] = []
-    for l in range(n_levels):
-        n_switches = math.prod(fanins[l + 1:])
-        spec = plan.levels[l] if aggregate else None
-        # forward-only tiers (host-only baseline, placement-disabled hops)
-        # have no aggregation state at all, so the fast path covers them
-        # with pure array re-framing — no kernel call
-        fast_forward = fast_engine and (
-            not aggregate or (spec is not None and not spec.enabled))
-        if fast_forward or (fast_engine and aggregate
-                            and vsim.supports(spec)):
-            # fast path (DESIGN.md §10): the whole tier — transport,
-            # acceptance, processing, re-framing, telemetry — as array
-            # passes plus at most one jitted kernel call, bit-identical
-            streams = [
-                s if isinstance(s, vsim.PacketStream)
-                else vsim.stream_from_packets(s, value_template=carried[:0])
-                for s in current]
-            nodes, out_streams, tier_links, tier_flow, t_done = \
-                vsim.run_tier_fast(
-                    streams, level=l, fanin=fanins[l],
-                    spec=None if fast_forward else spec, op=op,
-                    cfg=cfg, axis=axes[l], gbps=link_gbps[l],
-                    job_id=job_id, first_flow_id=next_flow_id,
-                    value_template=carried[:0])
-            next_flow_id += n_switches
-            all_links.extend(tier_links)
-            flows.packets_sent += tier_flow.packets_sent
-            flows.wire_bytes += tier_flow.wire_bytes
-            if l == 0:
-                mapper_finish = list(t_done)
-            per_level_nodes.append(nodes)
-            current = out_streams
-            continue
-        # node path tiers (host-only, disabled, capacity-0, or lossy)
-        # walk materialized packets
-        current = [
-            vsim.stream_to_packets(s) if isinstance(s, vsim.PacketStream)
-            else s for s in current]
-        # phase A — transport: run every child-edge flow; links are FIFO
-        # and flows per-edge, so each switch's full arrival schedule is
-        # known before its node steps
-        level_arrivals: list[list[tuple[float, wire.Packet]]] = []
-        for s in range(n_switches):
-            arrivals: list[tuple[float, wire.Packet]] = []
-            for c in range(fanins[l]):
-                ci = s * fanins[l] + c
-                link = links_lib.Link(
-                    name=f"{axes[l]}.s{s}.c{c}", axis=axes[l],
-                    gbps=link_gbps[l], propagation_s=cfg.propagation_s)
-                all_links.append(link)
-                t_done = _run_flow(current[ci], link, arrivals)
-                if l == 0:
-                    mapper_finish[ci] = t_done
-            arrivals.sort(key=lambda a: (a[0], a[1].header.flow_id,
-                                         a[1].header.psn))
-            level_arrivals.append(arrivals)
-        # phase B — tier-batched precompute (DESIGN.md §10): PSN acceptance
-        # depends on headers alone, so the per-packet FPE inputs of every
-        # switch at this tier are known now and run as ONE jitted call
-        states: list = [None] * n_switches
-        if cfg.engine == "vectorized" and aggregate and vsim.supports(spec):
-            accepted = []
-            for arrivals in level_arrivals:
-                gate = transport.Receiver()
-                accepted.append([
-                    (p.keys, p.values) for _, p in arrivals
-                    if gate.accept(p.header) and p.header.n_records])
-            states = vsim.tier_states(accepted, spec=spec, op=op, cfg=cfg,
-                                      value_template=carried[:0])
-        # phase C — host replay: timing, packetization, and telemetry run
-        # through the same node code, consuming precomputed results
-        nodes: list[_Node] = []
-        nxt: list[list[tuple[float, wire.Packet]]] = []
-        for s in range(n_switches):
-            node = _Node(level=l, n_children=fanins[l], spec=spec,
-                         op=op, aggregate=aggregate, cfg=cfg, job_id=job_id,
-                         flow_id=next_flow_id, state=states[s])
-            next_flow_id += 1
-            for t, p in level_arrivals[s]:
-                node.receive(p, t)
-            assert node.finished, "reliable transport must complete the node"
-            nodes.append(node)
-            nxt.append(node.out)
-        per_level_nodes.append(nodes)
-        current = nxt
-
-    # root -> reducer over the reducer in-link
-    red_link = links_lib.Link(name="reducer", axis="reducer",
-                              gbps=reducer_gbps,
-                              propagation_s=cfg.propagation_s)
-    all_links.append(red_link)
-    root = current[0]
-    recv = transport.Receiver()
-    if isinstance(root, vsim.PacketStream):
-        # loss=0 fast path: every packet is accepted in PSN order, so the
-        # reducer's pre-merge stream is the root stream verbatim and the
-        # JCT is the last packet's arrival off the FIFO chain
-        arrive, _ = vsim.transmit_stream(root, red_link)
-        flows.packets_sent += root.n_packets
-        flows.wire_bytes += (wire.HEADER_BYTES * root.n_packets
-                             + wire.PAIR_BYTES * int(root.sizes.sum()))
-        jct = max(0.0, float(arrive.max()))
-        arrived_k, arrived_v = root.keys, root.values
-    else:
-        arrivals = []
-        _run_flow(root, red_link, arrivals)
-        arrivals.sort(key=lambda a: (a[0], a[1].header.psn))
-        jct = 0.0
-        rec_k: list[np.ndarray] = []
-        rec_v: list[np.ndarray] = []
-        for t, p in arrivals:
-            if recv.accept(p.header):
-                jct = max(jct, t)
-                if p.header.n_records:
-                    rec_k.append(np.asarray(p.keys, np.int32))
-                    rec_v.append(np.asarray(p.values))
-        arrived_k = (np.concatenate(rec_k) if rec_k
-                     else np.zeros((0,), np.int32))
-        arrived_v = (np.concatenate(rec_v) if rec_v
-                     else np.zeros((0,) + carried.shape[1:], carried.dtype))
-    if arrived_k.size:  # the reducer host's final exact merge
-        c = kvagg.sorted_combine(jnp.asarray(arrived_k),
-                                 jnp.asarray(arrived_v), op=op)
-        n_unique = int(c.n_unique)
-        dk = np.asarray(c.unique_keys)[:n_unique]
-        dv = np.asarray(aggop.finalize_values(c.combined_values))[:n_unique]
-    else:
-        n_unique, dk = 0, np.zeros((0,), np.int32)
-        dv = np.zeros((0,), np.float32)
-
-    gap = sum(n.receiver.gap_discards
-              for lvl in per_level_nodes for n in lvl) + recv.gap_discards
-    dup = sum(n.receiver.duplicate_discards
-              for lvl in per_level_nodes for n in lvl) + recv.duplicate_discards
-    per_level = []
-    for l, nodes in enumerate(per_level_nodes):
-        per_level.append({
-            "level": l,
-            "axis": axes[l],
-            "switches": len(nodes),
-            "records_in": sum(n.records_in for n in nodes),
-            "records_out": sum(n.records_out for n in nodes),
-            "evictions": sum(n.state.n_evict if n.state is not None else 0
-                             for n in nodes),
-            # disabled (forward-only) hops do no aggregation-engine work
-            # but still move every byte: zero agg_proc_s, nonzero
-            # bytes_out — and the queue depth is tracked for relays too
-            "bytes_out": sum(n.bytes_out for n in nodes),
-            "agg_proc_s": sum(n.agg_proc_s for n in nodes),
-            "queue_peak": max((n.queue_peak for n in nodes), default=0),
-        })
-    return SimResult(
-        jct_s=jct,
-        aggregate=aggregate,
-        op=op,
-        fanins=fanins,
-        axes=axes,
-        delivered_keys=dk,
-        delivered_values=dv,
-        delivered_records=n_unique,
-        delivered_bytes=wire.stream_wire_bytes(
-            n_unique, cfg.records_per_packet),
-        arrived_records=int(arrived_k.shape[0]),
-        link_stats=links_lib.stats_by_axis(all_links),
-        per_level=per_level,
-        retransmissions=flows.retransmissions,
-        timeouts=flows.timeouts,
-        packets_dropped=flows.packets_dropped,
-        gap_discards=gap,
-        duplicate_discards=dup,
-        mapper_finish_s=mapper_finish,
-    )
+    cascade = dataplane.plan_from_configure(job_plan.configure)
+    tree = job_plan.tree
+    cfg = dataclasses.replace(
+        cfg, link_gbps=tuple(l.link_gbps for l in tree.levels))
+    return JobSpec(
+        keys=keys, values=values, fanins=job_plan.configure.fanins,
+        plan=cascade, op=job_plan.configure.op, aggregate=aggregate,
+        cfg=cfg, axes=tree.axes, mapper_delay=mapper_delay,
+        job_id=job_plan.configure.tree_id)
 
 
 def simulate_job_plan(
@@ -523,16 +636,36 @@ def simulate_job_plan(
     ``JobScheduler`` emitted, so measured drain can be fed back via
     :func:`drain_calibration` + ``JobScheduler.calibrate``.
     """
-    cfg = cfg or NetConfig()
-    cascade = dataplane.plan_from_configure(job_plan.configure)
-    tree = job_plan.tree
-    cfg = dataclasses.replace(
-        cfg, link_gbps=tuple(l.link_gbps for l in tree.levels))
-    return simulate_job(
-        keys, values, fanins=job_plan.configure.fanins, plan=cascade,
-        op=job_plan.configure.op, aggregate=aggregate, cfg=cfg,
-        axes=tree.axes, mapper_delay=mapper_delay,
-        job_id=job_plan.configure.tree_id)
+    return simulate_jobs([_job_plan_spec(
+        job_plan, keys, values, cfg=cfg, aggregate=aggregate,
+        mapper_delay=mapper_delay)])[0]
+
+
+def simulate_job_plans(
+    job_plans: Sequence,
+    keys_list: Sequence,
+    values_list: Sequence,
+    *,
+    cfg: NetConfig | None = None,
+    aggregate: bool = True,
+    mapper_delays: Sequence[Callable[[int], float] | None] | None = None,
+) -> list[SimResult]:
+    """Run a whole admitted batch (``JobScheduler.plan_all`` output)
+    concurrently: one :func:`simulate_jobs` call, so tiers of different
+    jobs that share a kernel-static signature ride ONE batched
+    ``tier_ingest`` dispatch under the vectorized engine.  Results are
+    bit-identical to per-job :func:`simulate_job_plan` runs.
+    """
+    if not len(job_plans) == len(keys_list) == len(values_list):
+        raise ValueError("job_plans, keys_list, values_list must align")
+    if mapper_delays is not None and len(mapper_delays) != len(job_plans):
+        raise ValueError("mapper_delays must align with job_plans")
+    return simulate_jobs([
+        _job_plan_spec(
+            jp, keys_list[i], values_list[i], cfg=cfg, aggregate=aggregate,
+            mapper_delay=mapper_delays[i] if mapper_delays is not None
+            else None)
+        for i, jp in enumerate(job_plans)])
 
 
 def drain_calibration(result: SimResult) -> dict[str, float]:
@@ -569,10 +702,11 @@ def jct_comparison(
     ``(switchagg, host_only)`` SimResult pair for callers (the JCT bench)
     that need more than the report scalars — drop the key before dumping.
     """
-    sw = simulate_job(keys, values, fanins=fanins, plan=plan, op=op,
-                      aggregate=True, cfg=cfg, axes=axes)
-    host = simulate_job(keys, values, fanins=fanins, plan=plan, op=op,
-                        aggregate=False, cfg=cfg, axes=axes)
+    sw, host = simulate_jobs([
+        JobSpec(keys=keys, values=values, fanins=fanins, plan=plan, op=op,
+                aggregate=True, cfg=cfg, axes=axes),
+        JobSpec(keys=keys, values=values, fanins=fanins, plan=plan, op=op,
+                aggregate=False, cfg=cfg, axes=axes)])
     return {
         "switchagg": sw.report(),
         "host_only": host.report(),
@@ -583,6 +717,33 @@ def jct_comparison(
                             / max(1, host.arrived_records)),
         "_results": (sw, host),
     }
+
+
+def _fat_tree_spec(
+    ft,
+    keys,
+    values,
+    *,
+    placement,
+    op: str,
+    cfg: NetConfig | None,
+    mapper_delay: Callable[[int], float] | None = None,
+    job_id: int = 0,
+) -> JobSpec:
+    """One fat-tree incast as a :class:`JobSpec`: the topology's own
+    per-tier links, aggregation only where ``placement`` put nodes."""
+    plan = dataplane.plan_from_placement(placement, op=op)
+    topo_links = ft.link_tiers()
+    cfg = cfg or NetConfig()
+    cfg = dataclasses.replace(
+        cfg, link_gbps=tuple(l.gbps for l in topo_links),
+        reducer_gbps=(cfg.reducer_gbps if cfg.reducer_gbps is not None
+                      else ft.edge_gbps))
+    return JobSpec(
+        keys=keys, values=values,
+        fanins=tuple(l.fanin for l in topo_links), plan=plan, op=op,
+        aggregate=True, cfg=cfg, axes=tuple(l.axis for l in topo_links),
+        mapper_delay=mapper_delay, job_id=job_id)
 
 
 def simulate_fat_tree_job(
@@ -616,18 +777,9 @@ def simulate_fat_tree_job(
         placement = planner.place_aggregation_tree(
             ft, per_host_pairs=per_host,
             key_variety=int(keys_arr.max(initial=0)) + 1, policy=policy)
-    plan = dataplane.plan_from_placement(placement, op=op)
-    topo_links = ft.link_tiers()
-    cfg = cfg or NetConfig()
-    cfg = dataclasses.replace(
-        cfg, link_gbps=tuple(l.gbps for l in topo_links),
-        reducer_gbps=(cfg.reducer_gbps if cfg.reducer_gbps is not None
-                      else ft.edge_gbps))
-    return simulate_job(
-        keys, values, fanins=tuple(l.fanin for l in topo_links), plan=plan,
-        op=op, aggregate=True, cfg=cfg,
-        axes=tuple(l.axis for l in topo_links),
-        mapper_delay=mapper_delay, job_id=job_id)
+    return simulate_jobs([_fat_tree_spec(
+        ft, keys, values, placement=placement, op=op, cfg=cfg,
+        mapper_delay=mapper_delay, job_id=job_id)])[0]
 
 
 def fat_tree_jct_comparison(
@@ -644,7 +796,10 @@ def fat_tree_jct_comparison(
     """The rack-scale Fig. 10: one mapper stream, one fat-tree network,
     JCT and per-tier wire bytes for each placement policy side by side.
 
-    The returned dict maps each policy to its report plus a ``placement``
+    All policies run as ONE :func:`simulate_jobs` batch, so under the
+    vectorized engine their same-depth aggregating tiers share kernel
+    dispatches (e.g. full's ToR tier batches with tor_only's).  The
+    returned dict maps each policy to its report plus a ``placement``
     record (placed tiers, modeled scarce bytes); ``jct_s`` collects the
     headline JCTs.  ``_results`` holds the raw SimResults (drop before
     JSON-dumping).  For any aggregating placement the delivered table is
@@ -660,12 +815,17 @@ def fat_tree_jct_comparison(
         key_variety = int(keys_arr.max(initial=0)) + 1
     out: dict = {"policies": list(policies), "jct_s": {},
                  "scarce_axis": ft.scarce_uplink_axis(), "_results": {}}
-    for pol in policies:
-        placement = planner.place_aggregation_tree(
+    placements = {
+        pol: planner.place_aggregation_tree(
             ft, per_host_pairs=per_host_pairs, key_variety=key_variety,
             policy=pol)
-        res = simulate_fat_tree_job(ft, keys, values, placement=placement,
-                                    op=op, cfg=cfg)
+        for pol in policies}
+    results = simulate_jobs([
+        _fat_tree_spec(ft, keys, values, placement=placements[pol], op=op,
+                       cfg=cfg)
+        for pol in policies])
+    for pol, res in zip(policies, results):
+        placement = placements[pol]
         rep = res.report()
         rep["placement"] = {
             "policy": pol,

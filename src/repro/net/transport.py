@@ -14,7 +14,11 @@ duplicate (a retransmission of something already combined) is discarded
 combine exactly once under any loss pattern (the transport property test).
 
 Loss is a pure function of (seed, flow, psn, attempt): reproducible, and
-independent retransmissions re-roll the dice.
+independent retransmissions re-roll the dice.  :func:`loss_uniform` IS
+that function — a vectorizable integer hash, not a stateful RNG — so the
+per-packet node sender and the array-form vectorized sender (``net.vsim``)
+consume identical draws by construction: one calls it with scalars, the
+other with whole ``[links, window]`` batches, and the values cannot drift.
 """
 
 from __future__ import annotations
@@ -27,9 +31,46 @@ import numpy as np
 from . import links as links_lib
 from . import wire
 
+# splitmix64 finalizer constants (Steele et al.; the standard 64-bit mix)
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer on uint64 arrays (wrap-around arithmetic)."""
+    x = (x ^ (x >> np.uint64(30))) * _MIX1
+    x = (x ^ (x >> np.uint64(27))) * _MIX2
+    return x ^ (x >> np.uint64(31))
+
+
+def loss_uniform(seed, flow_id, psn, attempt):
+    """THE seeded per-(flow, psn, attempt) loss draw, as a pure function.
+
+    Returns uniforms in [0, 1) — scalar in, scalar out; array in
+    (broadcasting), array out — computed by absorbing the four words into
+    a splitmix64 sponge.  Both transport engines MUST draw through here:
+    the go-back-N node sender calls it one packet at a time, the
+    vectorized tier sender (``net.vsim``) calls it on whole
+    ``[links, window]`` burst batches, and because it is the same pure
+    function there is no seed-drift risk between them.
+    """
+    with np.errstate(over="ignore"):  # wrap-around is the hash
+        h = _mix64(np.asarray(seed).astype(np.uint64) + _GOLDEN)
+        for word in (flow_id, psn, attempt):
+            h = _mix64(h + np.asarray(word).astype(np.uint64) + _GOLDEN)
+    return h.astype(np.float64) * 2.0**-64
+
 
 class LossModel:
-    """Deterministic seeded packet-loss oracle."""
+    """Deterministic seeded packet-loss oracle.
+
+    ``drop`` (scalar, the node sender's call) and ``drop_array`` (batched,
+    the vectorized sender's call) evaluate the same :func:`loss_uniform`
+    draw, so the two engines see identical loss patterns by construction.
+    Subclasses overriding the pair (e.g. an explicit drop-mask model in
+    the property tests) must keep them elementwise-consistent.
+    """
 
     def __init__(self, rate: float = 0.0, seed: int = 0):
         if not 0.0 <= rate < 1.0:
@@ -40,9 +81,16 @@ class LossModel:
     def drop(self, flow_id: int, psn: int, attempt: int) -> bool:
         if self.rate <= 0.0:
             return False
-        r = np.random.default_rng(
-            (self.seed, flow_id, psn, attempt)).random()
-        return bool(r < self.rate)
+        return bool(loss_uniform(self.seed, flow_id, psn, attempt)
+                    < self.rate)
+
+    def drop_array(self, flow_ids, psns, attempts) -> np.ndarray:
+        """Batched ``drop``: bool array over broadcast (flow, psn, attempt)."""
+        if self.rate <= 0.0:
+            return np.zeros(np.broadcast(
+                np.asarray(flow_ids), np.asarray(psns),
+                np.asarray(attempts)).shape, bool)
+        return loss_uniform(self.seed, flow_ids, psns, attempts) < self.rate
 
 
 @dataclasses.dataclass

@@ -16,21 +16,34 @@ not merely equal when grouped — the property the differential harness
 
 Host/device boundary: transport, link timing, packetization, and PSN
 acceptance stay on the host (they are cheap arithmetic; the node engine's
-cost is dispatch count, not math).  Two host paths consume the kernel:
+cost is dispatch count, not math).  The host path is the
+``tier_start`` → ``dispatch_tier_ingest`` → ``tier_finish`` trio
+(``run_tier_fast`` bundles the three for one tier), and it covers ANY
+loss rate:
 
-* ``run_tier_fast`` — the loss=0 fast path.  Packet streams live as
-  arrays (:class:`PacketStream`), go-back-N reduces to the FIFO chain
-  ``depart_i = max(depart_{i-1}, ready_i) + ser_i`` (no timeouts fire,
-  so the window adds no waiting), and a whole tier — transport, PSN
-  acceptance, processing-time recurrence, MTU re-framing, telemetry —
-  runs as a handful of numpy passes plus one ``tier_ingest`` call.
-  Every float op replicates the node engine's expression and evaluation
-  order, so results stay BIT-identical, including JCT.
-* ``tier_states`` — the lossy path.  Acceptance depends on headers
-  alone, so per-switch accepted payloads are precomputed, run through
-  ``tier_ingest`` once, and replayed through the unmodified ``_Node``
-  event walk via :class:`_PrecomputedState` (a ``LevelState`` stand-in)
-  while transport keeps its packet-by-packet go-back-N machinery.
+* at loss=0, go-back-N never rewinds and transport reduces to the FIFO
+  chain ``depart_i = max(depart_{i-1}, ready_i) + ser_i`` (no timeouts
+  fire, so the window adds no waiting) — one numpy pass per packet rank
+  over every link at the tier.
+* under loss the go-back-N window itself runs in array form
+  (:func:`_windowed_transport`): every link steps its burst rounds in
+  lockstep — one vectorized ``loss.drop_array`` draw per round over the
+  ``[links, window]`` rectangle, retransmit/timeout state as per-link
+  lanes — until a fixed point (every sender done).  The same window
+  algebra that drives the sender yields the receiver side for free:
+  within a burst from ``base``, packets before the first loss are the
+  accepted ones (PSN == expected, exactly once), later survivors are
+  gap discards, so acceptance needs no per-packet Receiver walk.
+  Timing replays the node sender's float ops transmission by
+  transmission (one pass per (round, slot) over ``[links]`` lanes),
+  so accepted-arrival times, retransmit byte/queue telemetry, and JCT
+  stay BIT-identical to ``transport.send_stream``.
+* ``dispatch_tier_ingest`` packs the kernel work of MANY tiers — the
+  concurrent jobs of ``net.sim.simulate_jobs`` — into as few
+  ``tier_ingest`` calls as possible: works sharing a kernel-static
+  signature (capacity, ways, op, bpe, exact_stream, packet geometry)
+  concatenate their switch lanes into ONE batch.  ``vmap`` lanes are
+  independent, so each job's slice is bit-identical to its solo run.
 
 Shape policy: ``S`` (switches) and ``P`` (packets) pad to the next power
 of two, ``R`` (records) to the config's fixed packet capacity — the same
@@ -241,120 +254,8 @@ def _tier_ingest_packed(keys, values, *, capacity: int, ways: int, op: str,
     return jax.vmap(one_switch)(keys, vals_flat)
 
 
-class _PrecomputedState:
-    """``dataplane.LevelState`` stand-in replaying one switch's batch slice.
-
-    ``net.sim._Node`` calls ``ingest`` once per accepted record-carrying
-    packet (in arrival order — the order ``tier_states`` precomputed) and
-    ``flush`` at end of task; each call pops the corresponding precomputed
-    eviction stream / final table.  Telemetry counters (``n_in``,
-    ``n_evict``, ``n_out``) accrue exactly as ``LevelState``'s do.  Every
-    ``ingest`` cross-checks the packet's keys against the precomputed
-    slot, so a replay that drifts out of lockstep with the acceptance
-    precomputation fails loudly instead of corrupting results.
-    """
-
-    def __init__(self, *, packet_keys: list[np.ndarray],
-                 evict_keys: np.ndarray, evict_values: np.ndarray,
-                 n_evicts: np.ndarray, flush_keys: np.ndarray,
-                 flush_values: np.ndarray):
-        self._packet_keys = packet_keys
-        self._ek = evict_keys
-        self._ev = evict_values
-        self._ne = n_evicts
-        self._fk = flush_keys
-        self._fv = flush_values
-        self._i = 0
-        self._flushed = False
-        self.n_in = 0
-        self.n_evict = 0
-        self.n_out = 0
-
-    def ingest(self, keys, values) -> tuple[np.ndarray, np.ndarray]:
-        if self._flushed:
-            raise RuntimeError("_PrecomputedState already flushed")
-        keys = np.asarray(keys, np.int32)
-        if self._i >= len(self._packet_keys) or \
-                not np.array_equal(keys, self._packet_keys[self._i]):
-            raise AssertionError(
-                "vectorized replay out of lockstep with the acceptance "
-                f"precomputation at packet {self._i} (DESIGN.md §10)")
-        ek = self._ek[self._i]
-        ev = self._ev[self._i]
-        self.n_in += int(np.sum(keys != _EMPTY))
-        self.n_evict += int(self._ne[self._i])
-        self._i += 1
-        mask = ek != _EMPTY
-        fk, fv = ek[mask], ev[mask]
-        self.n_out += int(fk.shape[0])
-        return fk, fv
-
-    def flush(self) -> tuple[np.ndarray, np.ndarray]:
-        if self._flushed:
-            raise RuntimeError("_PrecomputedState already flushed")
-        if self._i != len(self._packet_keys):
-            raise AssertionError(
-                f"flush after {self._i}/{len(self._packet_keys)} "
-                "precomputed packets (DESIGN.md §10)")
-        self._flushed = True
-        self.n_out += int(self._fk.shape[0])
-        return self._fk, self._fv
-
-
-def tier_states(accepted, *, spec: dataplane.LevelSpec, op: str, cfg,
-                value_template: np.ndarray) -> list[_PrecomputedState]:
-    """One batched device step for a whole tier.
-
-    ``accepted`` is, per switch, the ``(keys, values)`` payloads of the
-    record-carrying packets its PSN gate will accept, in arrival order
-    (the simulator precomputes acceptance from headers alone — it depends
-    on neither payloads nor aggregation state).  ``value_template`` is an
-    empty array carrying the op's lane shape and dtype, so switches that
-    accept no packets still build correctly-typed batches.  Returns one
-    :class:`_PrecomputedState` per switch.
-    """
-    rpp = int(cfg.records_per_packet)
-    n_sw = len(accepted)
-    max_p = max((len(pkts) for pkts in accepted), default=0)
-    s_pad = _pow2(n_sw)
-    p_pad = _pow2(max_p, floor=1)
-    lane_shape = value_template.shape[1:]
-    keys = np.full((s_pad, p_pad, rpp), _EMPTY, np.int32)
-    values = np.zeros((s_pad, p_pad, rpp) + lane_shape,
-                      value_template.dtype)
-    packet_keys: list[list[np.ndarray]] = []
-    for s, pkts in enumerate(accepted):
-        pks = []
-        for p, (pk, pv) in enumerate(pkts):
-            pk = np.asarray(pk, np.int32)
-            n = pk.shape[0]
-            if n > rpp:
-                raise ValueError(
-                    f"packet carries {n} records > records_per_packet {rpp}")
-            keys[s, p, :n] = pk
-            values[s, p, :n] = np.asarray(pv)
-            pks.append(pk)
-        packet_keys.append(pks)
-    tk, tv, ek, ev, ne, no = jax.device_get(tier_ingest(
-        jnp.asarray(keys), jnp.asarray(values), capacity=spec.capacity,
-        ways=spec.ways, op=op, bpe=spec.bpe, exact_stream=cfg.exact_stream))
-    if int(ne.max(initial=0)) > rpp:
-        raise AssertionError(
-            "tier_ingest eviction compaction dropped real entries "
-            f"(a packet evicted {int(ne.max())} > {rpp} pairs)")
-    states = []
-    for s in range(n_sw):
-        mask = tk[s] != _EMPTY
-        states.append(_PrecomputedState(
-            packet_keys=packet_keys[s],
-            evict_keys=ek[s], evict_values=ev[s], n_evicts=ne[s],
-            flush_keys=tk[s][mask].astype(np.int32),
-            flush_values=tv[s][mask]))
-    return states
-
-
 # --------------------------------------------------------------------------
-# loss=0 fast path: packet streams as arrays, whole tiers as numpy passes
+# fast path: packet streams as arrays, whole tiers as numpy passes
 # --------------------------------------------------------------------------
 
 
@@ -449,7 +350,7 @@ def stream_from_packets(stream, *, value_template: np.ndarray) -> PacketStream:
 
 def stream_to_packets(ps: PacketStream) -> list[tuple[float, wire.Packet]]:
     """Materialize ``wire.Packet`` objects — the node-path representation —
-    for tiers (disabled/capacity-0/lossy) that walk packets one by one."""
+    for tiers (disabled/capacity-0) that walk packets one by one."""
     offs = np.concatenate([[0], np.cumsum(ps.sizes)])
     n = ps.n_packets
     out = []
@@ -497,10 +398,163 @@ def transmit_stream(ps: PacketStream,
     return arrive, t
 
 
+def default_timeout_s(gbps: float, propagation_s: float,
+                      window: int) -> float:
+    """``send_stream``'s conservative RTO — a full window's serialization
+    plus one RTT — replicated float op for float op."""
+    denom = gbps * 1e9  # Link.serialize_s's denominator
+    return 2.0 * (window * (wire.MTU_BYTES / denom) + 2.0 * propagation_s)
+
+
+@dataclasses.dataclass
+class _LinkTransport:
+    """One tier's lossy transport leg in array form: accepted-arrival
+    times plus the per-link telemetry ``send_stream`` would have accrued
+    (all shapes ``[n_links]`` except ``arr``)."""
+
+    arr: np.ndarray  # [n_links, pm] accepted-arrival time per PSN
+    dep: np.ndarray  # sender-finished time (= final depart)
+    busy: np.ndarray  # serialization occupancy, retransmissions included
+    tx: np.ndarray  # transmissions, retransmissions included
+    wire_b: np.ndarray  # wire bytes, retransmissions included (int64)
+    dropped: np.ndarray
+    retx: np.ndarray
+    timeouts: np.ndarray
+    gaps: np.ndarray  # receiver gap discards (burst survivors past a loss)
+
+
+def _windowed_transport(*, ready: np.ndarray, wbi: np.ndarray,
+                        p_link: np.ndarray, flow_ids: np.ndarray,
+                        denom: float, prop: float,
+                        loss: transport.LossModel, window: int,
+                        timeout_s: float) -> _LinkTransport:
+    """Go-back-N under loss for every link of a tier at once.
+
+    ``ready [n_links, pm]`` / ``wbi [n_links, pm]`` are per-PSN ready
+    times and wire bytes (padded past ``p_link``); ``denom`` is the
+    shared ``gbps * 1e9`` serialization denominator.  Two phases:
+
+    * **control** — a fixed-point loop over burst rounds, every live link
+      stepped in lockstep.  A round transmits the ``[n_links, window]``
+      rectangle from each link's ``base``; one batched ``drop_array``
+      draw (same pure hash as the node sender's per-packet ``drop``)
+      decides losses; ``base`` advances to the first loss (go-back-N
+      rewind) or past the burst.  Because the transmission schedule
+      depends only on the draws — never on timing — acceptance is decided
+      here too: slots before the first loss are accepted (they arrive
+      with PSN == expected), later survivors are gap discards, and
+      duplicates cannot occur (the sender never rewinds past an accepted
+      PSN).  Counter telemetry accrues per round.
+    * **timing** — replays the recorded rounds transmission by
+      transmission with the node sender's float expressions in its
+      evaluation order: ``depart = max(depart, ready) + wire/denom`` per
+      slot, ``+= timeout_s`` after a lossy burst, accepted arrivals at
+      ``depart + prop``.  One vectorized pass per (round, slot) over
+      ``[n_links]`` lanes.
+    """
+    n_links, pm = ready.shape
+    w = int(window)
+    n_pkts = np.asarray(p_link, np.int64)
+    attempts = np.zeros((n_links, pm), np.int64)
+    base = np.zeros((n_links,), np.int64)
+    live = base < n_pkts
+    fl = np.asarray(flow_ids, np.int64)[:, None]
+    rows = np.arange(n_links)
+    lidx = np.broadcast_to(rows[:, None], (n_links, w))
+    slot = np.arange(w)[None, :]
+    tx = np.zeros((n_links,), np.int64)
+    wire_b = np.zeros((n_links,), np.int64)
+    dropped = np.zeros((n_links,), np.int64)
+    retx = np.zeros((n_links,), np.int64)
+    timeouts = np.zeros((n_links,), np.int64)
+    gaps = np.zeros((n_links,), np.int64)
+    rounds: list[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = []
+    while live.any():
+        upto = np.minimum(base + w, n_pkts)
+        psn = base[:, None] + slot
+        valid = live[:, None] & (psn < upto[:, None])
+        psn_c = np.minimum(psn, pm - 1)  # clipped for safe gathers
+        # a (link, psn) pair appears at most once per round, so the
+        # unbuffered scatter-add increments each attempt exactly once
+        np.add.at(attempts, (lidx[valid], psn[valid]), 1)
+        att = np.take_along_axis(attempts, psn_c, axis=1)
+        if int(att[valid].max(initial=0)) > transport.MAX_ATTEMPTS:
+            raise RuntimeError(
+                f"a psn exceeded {transport.MAX_ATTEMPTS} attempts "
+                "(loss rate too close to 1?)")
+        drop = valid & loss.drop_array(fl, psn_c, att)
+        anyd = drop.any(axis=1)
+        first = np.where(anyd, drop.argmax(axis=1), w)
+        tx += valid.sum(axis=1)
+        wire_b += np.where(valid, np.take_along_axis(wbi, psn_c, axis=1),
+                           0).sum(axis=1)
+        dropped += drop.sum(axis=1)
+        retx += (valid & (att > 1)).sum(axis=1)
+        timeouts += anyd
+        gaps += (valid & ~drop & (slot > first[:, None])).sum(axis=1)
+        rounds.append((psn_c, valid, first, anyd))
+        base = np.where(live, np.where(anyd, base + first, upto), base)
+        live = base < n_pkts
+    t = np.zeros((n_links,))
+    busy = np.zeros((n_links,))
+    arr = np.zeros((n_links, pm))
+    for psn_c, valid, first, anyd in rounds:
+        for j in range(w):
+            v = valid[:, j]
+            if not v.any():
+                continue
+            p = psn_c[:, j]
+            ser = wbi[rows, p] / denom
+            t = np.where(v, np.maximum(t, ready[rows, p]) + ser, t)
+            busy = np.where(v, busy + ser, busy)
+            acc = v & (j < first)
+            if acc.any():
+                arr[acc, p[acc]] = t[acc] + prop
+        t = np.where(anyd, t + timeout_s, t)
+    return _LinkTransport(arr=arr, dep=t, busy=busy, tx=tx, wire_b=wire_b,
+                          dropped=dropped, retx=retx, timeouts=timeouts,
+                          gaps=gaps)
+
+
+def transmit_stream_lossy(
+        ps: PacketStream, link: links_lib.Link, loss: transport.LossModel,
+        *, window: int, timeout_s: float | None,
+) -> tuple[np.ndarray, float, transport.FlowStats, int]:
+    """``transport.send_stream`` over one array-form stream under loss:
+    :func:`_windowed_transport` with a single link lane.  Fills ``link``
+    telemetry, returns (per-PSN accepted-arrival times, sender-finished
+    time, flow stats, receiver gap discards)."""
+    denom = link.gbps * 1e9
+    if timeout_s is None:
+        timeout_s = default_timeout_s(link.gbps, link.propagation_s, window)
+    sizes = ps.sizes
+    lt = _windowed_transport(
+        ready=ps.times[None, :],
+        wbi=(wire.HEADER_BYTES + sizes * wire.PAIR_BYTES)[None, :],
+        p_link=np.array([ps.n_packets], np.int64),
+        flow_ids=np.array([ps.flow_id], np.int64), denom=denom,
+        prop=link.propagation_s, loss=loss, window=window,
+        timeout_s=timeout_s)
+    link.busy_until = float(lt.dep[0])
+    link.busy_s += float(lt.busy[0])
+    link.bytes_sent += int(lt.wire_b[0])
+    link.payload_bytes += int(sizes.sum()) * wire.PAIR_BYTES
+    link.packets_sent += int(lt.tx[0])
+    stats = transport.FlowStats(
+        packets_sent=int(lt.tx[0]), packets_dropped=int(lt.dropped[0]),
+        retransmissions=int(lt.retx[0]), timeouts=int(lt.timeouts[0]),
+        wire_bytes=int(lt.wire_b[0]))
+    return lt.arr[0], float(lt.dep[0]), stats, int(lt.gaps[0])
+
+
 @dataclasses.dataclass
 class _Gate:
-    """Loss=0 receiver stand-in: per-flow PSNs arrive in order, so every
-    packet is accepted and both discard counters stay zero."""
+    """Receiver stand-in: the vectorized transport decides acceptance in
+    the window algebra, so only the discard counters survive here.  At
+    loss=0 every packet arrives in PSN order and both stay zero; under
+    loss the burst survivors past a rewind point land as gap discards.
+    Duplicates cannot occur (the sender never rewinds past an accepted
+    PSN), matching the node engine's always-zero duplicate counter."""
 
     gap_discards: int = 0
     duplicate_discards: int = 0
@@ -528,29 +582,67 @@ class _VNode:
     finished: bool = True
 
 
-def run_tier_fast(streams: list[PacketStream], *, level: int, fanin: int,
-                  spec: dataplane.LevelSpec | None, op: str, cfg, axis: str,
-                  gbps: float, job_id: int, first_flow_id: int,
-                  value_template: np.ndarray):
-    """Run one whole tier at loss=0: transport, acceptance, processing,
-    MTU re-framing, telemetry — arrays plus (at most) one kernel call.
+@dataclasses.dataclass
+class TierWork:
+    """One tier's state between :func:`tier_start` and :func:`tier_finish`.
+
+    ``kernel_key`` is the kernel-static signature
+    ``(capacity, ways, op, bpe, exact_stream, rpp, lane_shape, dtype)``;
+    works sharing it can run in ONE batched ``tier_ingest`` call
+    (``None`` on forward-only tiers — they issue no kernel).
+    :func:`dispatch_tier_ingest` fills ``kernel_out`` with this work's
+    ``(tk, tv, ek, ev, ne, no)`` switch-lane slice.
+    """
+
+    forward: bool
+    level: int
+    fanin: int
+    job_id: int
+    first_flow_id: int
+    n_switches: int
+    rpp: int
+    proc_rate: float
+    kernel_key: tuple | None
+    # kernel batch scatter (record packets in merged order)
+    s_rec: np.ndarray
+    dst: np.ndarray
+    rows_k: np.ndarray
+    rows_v: np.ndarray
+    p_counts: np.ndarray
+    rec_start: np.ndarray
+    # merged arrival schedule (all packets, per-switch (t, flow, psn) order)
+    s_m: np.ndarray
+    t_m: np.ndarray
+    sizes_m: np.ndarray
+    eot_m: np.ndarray
+    # transport results
+    links: list
+    flow: transport.FlowStats
+    t_done: list[float]
+    gaps_sw: np.ndarray  # [n_switches] receiver gap discards
+    kernel_out: tuple | None = None
+
+
+def tier_start(streams: list[PacketStream], *, level: int, fanin: int,
+               spec: dataplane.LevelSpec | None, op: str, cfg, axis: str,
+               gbps: float, job_id: int, first_flow_id: int,
+               value_template: np.ndarray,
+               loss: transport.LossModel | None = None) -> TierWork:
+    """Run one tier's host-side front half: transport (any loss rate),
+    PSN acceptance, the merged arrival schedule, and the kernel batch
+    scatter.  Returns a :class:`TierWork` for :func:`dispatch_tier_ingest`
+    + :func:`tier_finish`.
 
     ``streams`` holds the child streams in child-index order (child *c* of
-    switch *s* at ``streams[s * fanin + c]``).  All per-link FIFO-chain
-    transport state and all per-switch processing/EoT state live in
-    tier-wide arrays (DESIGN.md §10): the serialization recurrence runs
-    once per packet *rank* vectorized over every link at the tier, and the
-    store-and-forward clock recurrence once per merged-arrival rank
-    vectorized over every switch.  ``spec=None`` runs the tier
-    forward-only (host-only baseline or a placement-disabled hop): no
-    kernel, records re-framed unchanged, store-and-forward charged to the
-    clock but not to ``agg_proc_s``.  Returns ``(nodes, out_streams,
-    links, flow_stats, t_done)`` where ``nodes`` are :class:`_VNode`
-    telemetry carriers, ``out_streams`` the per-switch uplink
-    :class:`PacketStream`s, ``links`` the per-edge
-    :class:`~repro.net.links.Link` objects (telemetry filled), and
-    ``t_done`` each child flow's sender-finished time (the mapper finish
-    times at tier 0).  Every float replicates the node engine bitwise.
+    switch *s* at ``streams[s * fanin + c]``).  All per-link transport
+    state lives in tier-wide arrays (DESIGN.md §10): at loss=0 the
+    serialization recurrence runs once per packet *rank* vectorized over
+    every link at the tier; under loss :func:`_windowed_transport` steps
+    the go-back-N rounds in lockstep instead.  ``spec=None`` runs the
+    tier forward-only (host-only baseline or a placement-disabled hop):
+    no kernel, records re-framed unchanged, store-and-forward charged to
+    the clock but not to ``agg_proc_s``.  Every float replicates the node
+    engine bitwise.
     """
     forward = spec is None
     n_links = len(streams)
@@ -559,11 +651,11 @@ def run_tier_fast(streams: list[PacketStream], *, level: int, fanin: int,
     proc_rate = cfg.processing_gbps * 1e9
     lane_shape = value_template.shape[1:]
     vdtype = value_template.dtype
+    lossy = loss is not None and loss.rate > 0.0
 
-    # --- transport: every link's loss=0 FIFO chain, batched ------------
-    # depart_i = max(depart_{i-1}, ready_i) + ser_i, evaluated per packet
-    # rank over a [n_links] lane; padded ranks carry ready=-inf, bytes=0
-    # so dead lanes reproduce their last state bit-for-bit
+    # --- transport: every link's go-back-N, batched over the tier ------
+    # padded ranks carry ready=-inf, bytes=0 so dead lanes reproduce
+    # their last state bit-for-bit
     p_link = np.array([ps.n_packets for ps in streams], np.int64)
     pm_link = int(p_link.max())
     sizes_flat = np.concatenate([ps.sizes for ps in streams])
@@ -577,37 +669,59 @@ def run_tier_fast(streams: list[PacketStream], *, level: int, fanin: int,
     ready[lmask] = np.concatenate([ps.times for ps in streams])
     wb[lmask] = wire.HEADER_BYTES + sizes_flat * wire.PAIR_BYTES
     denom = gbps * 1e9  # Link.serialize_s's denominator, precomputed
-    dep = np.zeros((n_links,))
-    busy = np.zeros((n_links,))
-    arr = np.empty((n_links, pm_link))
-    for j in range(pm_link):
-        ser = wb[:, j] / denom
-        dep = np.maximum(dep, ready[:, j]) + ser
-        busy = busy + ser
-        arr[:, j] = dep + cfg.propagation_s
-    links: list[links_lib.Link] = []
-    flow = transport.FlowStats()
     starts = np.concatenate([[0], np.cumsum(p_link)[:-1]])
     # every stream has >= 1 packet (an empty stream is one EoT packet),
     # so each reduceat segment is non-empty
     pay_bytes = np.add.reduceat(sizes_flat, starts) * wire.PAIR_BYTES
+    flow = transport.FlowStats()
+    if lossy:
+        window = int(cfg.window)
+        timeout_s = (cfg.timeout_s if cfg.timeout_s is not None else
+                     default_timeout_s(gbps, cfg.propagation_s, window))
+        lt = _windowed_transport(
+            ready=ready, wbi=np.where(lmask, wb, 0).astype(np.int64),
+            p_link=p_link,
+            flow_ids=np.array([ps.flow_id for ps in streams], np.int64),
+            denom=denom, prop=cfg.propagation_s, loss=loss, window=window,
+            timeout_s=timeout_s)
+        dep, busy, arr = lt.dep, lt.busy, lt.arr
+        tx_link, wire_link = lt.tx, lt.wire_b
+        flow.packets_dropped = int(lt.dropped.sum())
+        flow.retransmissions = int(lt.retx.sum())
+        flow.timeouts = int(lt.timeouts.sum())
+        gaps_sw = lt.gaps.reshape(n_switches, fanin).sum(axis=1)
+    else:
+        # loss=0: go-back-N never rewinds — the FIFO chain
+        # depart_i = max(depart_{i-1}, ready_i) + ser_i per packet rank
+        dep = np.zeros((n_links,))
+        busy = np.zeros((n_links,))
+        arr = np.empty((n_links, pm_link))
+        for j in range(pm_link):
+            ser = wb[:, j] / denom
+            dep = np.maximum(dep, ready[:, j]) + ser
+            busy = busy + ser
+            arr[:, j] = dep + cfg.propagation_s
+        tx_link = p_link
+        wire_link = wire.HEADER_BYTES * p_link + pay_bytes
+        gaps_sw = np.zeros((n_switches,), np.int64)
+    links: list[links_lib.Link] = []
     for c, ps in enumerate(streams):
         link = links_lib.Link(
             name=f"{axis}.s{c // fanin}.c{c % fanin}", axis=axis, gbps=gbps,
             propagation_s=cfg.propagation_s)
         link.busy_until = float(dep[c])
         link.busy_s = float(busy[c])
-        link.bytes_sent = wire.HEADER_BYTES * int(p_link[c]) + int(pay_bytes[c])
+        link.bytes_sent = int(wire_link[c])
         link.payload_bytes = int(pay_bytes[c])
-        link.packets_sent = int(p_link[c])
+        link.packets_sent = int(tx_link[c])
         links.append(link)
-    flow.packets_sent = int(p_link.sum())
-    flow.wire_bytes = int(wire.HEADER_BYTES * p_link.sum()
-                          + wire.PAIR_BYTES * sizes_flat.sum())
+    flow.packets_sent = int(tx_link.sum())
+    flow.wire_bytes = int(wire_link.sum())
     t_done = dep.tolist()
 
     # --- merge: one global sort keyed (switch, t, flow, psn) — per
-    # switch this is the node engine's (t, flow_id, psn) stable order ---
+    # switch this is the node engine's (t, flow_id, psn) stable order of
+    # the ACCEPTED packets (discarded arrivals have no state effects) ---
     s_all = np.repeat(np.arange(n_links) // fanin, p_link)
     t_all = arr[lmask]
     flow_all = np.repeat(np.array([ps.flow_id for ps in streams]), p_link)
@@ -633,25 +747,91 @@ def run_tier_fast(streams: list[PacketStream], *, level: int, fanin: int,
     s_rec = s_m[rec_m]
     p_counts = np.bincount(s_rec, minlength=n_switches)
     rec_start = np.concatenate([[0], np.cumsum(p_counts)[:-1]])
+    dst = np.arange(s_rec.shape[0]) - np.repeat(rec_start, p_counts)
+    kernel_key = None if forward else (
+        spec.capacity, spec.ways, op, spec.bpe, bool(cfg.exact_stream),
+        rpp, lane_shape, str(vdtype))
+    return TierWork(
+        forward=forward, level=level, fanin=fanin, job_id=job_id,
+        first_flow_id=first_flow_id, n_switches=n_switches, rpp=rpp,
+        proc_rate=proc_rate, kernel_key=kernel_key, s_rec=s_rec, dst=dst,
+        rows_k=rows_k, rows_v=rows_v, p_counts=p_counts,
+        rec_start=rec_start, s_m=s_m, t_m=t_m, sizes_m=sizes_m,
+        eot_m=eot_m, links=links, flow=flow, t_done=t_done,
+        gaps_sw=gaps_sw)
 
-    # --- the kernel: one jitted call for the whole tier, pad-to-pow2
-    # batch shapes (forward-only tiers never touch the device) ----------
-    if not forward:
-        s_pad = _pow2(n_switches)
-        p_pad = _pow2(int(p_counts.max(initial=0)), floor=1)
+
+#: jitted tier_ingest dispatches issued so far (tests assert the
+#: multi-job batcher's call count against planner.batch_tier_groups)
+ingest_calls = 0
+
+
+def dispatch_tier_ingest(works: list[TierWork]) -> int:
+    """Run the kernel work of many tiers in as few jitted calls as
+    possible (multi-job tier batching, DESIGN.md §10).
+
+    Works sharing a ``kernel_key`` concatenate their switch lanes along
+    the batch axis of ONE ``tier_ingest`` call; each work gets back its
+    own slice in ``kernel_out``.  ``vmap`` lanes are independent and the
+    pad shapes are the same pow2 buckets a solo run would pick, so every
+    slice is bit-identical to the work's standalone kernel call.
+    Returns the number of jitted calls issued.
+    """
+    global ingest_calls
+    groups: dict[tuple, list[TierWork]] = {}
+    for wk in works:
+        if wk.kernel_key is not None:
+            groups.setdefault(wk.kernel_key, []).append(wk)
+    for key, ws in groups.items():
+        capacity, ways, op, bpe, exact_stream, rpp, lane_shape, dt = key
+        s_pad = _pow2(sum(wk.n_switches for wk in ws))
+        p_pad = _pow2(max(int(wk.p_counts.max(initial=0)) for wk in ws),
+                      floor=1)
         keys_b = np.full((s_pad, p_pad, rpp), _EMPTY, np.int32)
-        vals_b = np.zeros((s_pad, p_pad, rpp) + lane_shape, vdtype)
-        dst = np.arange(s_rec.shape[0]) - np.repeat(rec_start, p_counts)
-        keys_b[s_rec, dst] = rows_k
-        vals_b[s_rec, dst] = rows_v
-        tk, tv, ek, ev, ne, no = jax.device_get(tier_ingest(
-            jnp.asarray(keys_b), jnp.asarray(vals_b),
-            capacity=spec.capacity, ways=spec.ways, op=op, bpe=spec.bpe,
-            exact_stream=cfg.exact_stream))
+        vals_b = np.zeros((s_pad, p_pad, rpp) + lane_shape, np.dtype(dt))
+        off = 0
+        for wk in ws:
+            keys_b[wk.s_rec + off, wk.dst] = wk.rows_k
+            vals_b[wk.s_rec + off, wk.dst] = wk.rows_v
+            off += wk.n_switches
+        out = jax.device_get(tier_ingest(
+            jnp.asarray(keys_b), jnp.asarray(vals_b), capacity=capacity,
+            ways=ways, op=op, bpe=bpe, exact_stream=exact_stream))
+        ingest_calls += 1
+        ne = out[4]
         if int(ne.max(initial=0)) > rpp:
             raise AssertionError(
                 "tier_ingest eviction compaction dropped real entries "
                 f"(a packet evicted {int(ne.max())} > {rpp} pairs)")
+        off = 0
+        for wk in ws:
+            wk.kernel_out = tuple(
+                a[off:off + wk.n_switches] for a in out)
+            off += wk.n_switches
+    return len(groups)
+
+
+def tier_finish(work: TierWork):
+    """Run one tier's host-side back half — the processing-time
+    recurrence, EoT flush, MTU re-framing, and telemetry — from a
+    :class:`TierWork` whose kernel slice has been dispatched.  Returns
+    ``(nodes, out_streams, links, flow_stats, t_done)``: :class:`_VNode`
+    telemetry carriers, the per-switch uplink :class:`PacketStream`s, the
+    per-edge :class:`~repro.net.links.Link` objects (telemetry filled),
+    and each child flow's sender-finished time (the mapper finish times
+    at tier 0).
+    """
+    forward = work.forward
+    n_switches = work.n_switches
+    fanin = work.fanin
+    rpp = work.rpp
+    proc_rate = work.proc_rate
+    s_m, t_m = work.s_m, work.t_m
+    sizes_m, eot_m = work.sizes_m, work.eot_m
+    rows_k, rows_v = work.rows_k, work.rows_v
+    p_counts, rec_start = work.p_counts, work.rec_start
+    if not forward:
+        tk, tv, ek, ev, ne, no = work.kernel_out
 
     # --- processing-time recurrence (the _Node.receive float ops),
     # batched over switches: one pass per merged-arrival rank -----------
@@ -782,9 +962,29 @@ def run_tier_fast(streams: list[PacketStream], *, level: int, fanin: int,
             queue_peak=peak,
             state=None if forward else _TierStats(
                 n_evict=int(ne[s, :pc].sum())),
+            receiver=_Gate(gap_discards=int(work.gaps_sw[s])),
         ))
         out_streams.append(PacketStream(
-            job_id=job_id, flow_id=first_flow_id + s, level=level + 1,
-            times=frame_t, sizes=frame_sizes,
+            job_id=work.job_id, flow_id=work.first_flow_id + s,
+            level=work.level + 1, times=frame_t, sizes=frame_sizes,
             keys=out_k.astype(np.int32), values=out_v))
-    return nodes, out_streams, links, flow, t_done
+    return nodes, out_streams, work.links, work.flow, work.t_done
+
+
+def run_tier_fast(streams: list[PacketStream], *, level: int, fanin: int,
+                  spec: dataplane.LevelSpec | None, op: str, cfg, axis: str,
+                  gbps: float, job_id: int, first_flow_id: int,
+                  value_template: np.ndarray,
+                  loss: transport.LossModel | None = None):
+    """Run one whole tier — transport (any loss rate), acceptance,
+    processing, MTU re-framing, telemetry — arrays plus (at most) one
+    kernel call: :func:`tier_start` → :func:`dispatch_tier_ingest` →
+    :func:`tier_finish` for a single tier.  See those for the contract;
+    ``net.sim.simulate_jobs`` drives the trio directly so concurrent
+    jobs' tiers can share kernel batches."""
+    work = tier_start(
+        streams, level=level, fanin=fanin, spec=spec, op=op, cfg=cfg,
+        axis=axis, gbps=gbps, job_id=job_id, first_flow_id=first_flow_id,
+        value_template=value_template, loss=loss)
+    dispatch_tier_ingest([work])
+    return tier_finish(work)

@@ -192,3 +192,39 @@ def test_repo_baselines_match_gated_files():
         rows = gate._load_rows(path)
         assert rows, f"baseline {fname} has no rows"
         assert gate.EXTRACTORS[fname](rows), f"no metrics from {fname}"
+
+
+def _lossy_row(**kw):
+    row = _sim_row(cell="fat64_lossy", pods=64, n_mappers=8192,
+                   records=49152, policy="full", loss_rate=0.01,
+                   switch_steps=104642, node_wall_us=10_000_000.0,
+                   vec_wall_us=300_000.0, node_steps_per_s=10_464.2,
+                   vec_steps_per_s=348_806.7, speedup=33.3,
+                   speedup_floor=20.0)
+    row.update(kw)
+    return row
+
+
+def test_sim_every_floor_row_gates_independently(dirs):
+    # multiple floor-carrying cells: the flagship passing its 50x bar
+    # does not excuse the lossy cell missing its 20x bar
+    base, out = dirs
+    _write(base, [_fpe_row()], [_dp_row()], [_sim_row(), _lossy_row()])
+    _write(out, [_fpe_row()], [_dp_row()],
+           [_sim_row(), _lossy_row(speedup=19.0, vec_wall_us=526_315.0,
+                                   vec_steps_per_s=198_819.8)])
+    assert _check(base, out) == 1
+    _write(out, [_fpe_row()], [_dp_row()], [_sim_row(), _lossy_row()])
+    assert _check(base, out) == 0
+
+
+def test_repo_sim_baseline_carries_the_floor_cells():
+    # the checked-in sim baseline must keep every gated floor cell: losing
+    # one (coverage shrink) must fail, not silently stop gating it
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    rows = gate._load_rows(repo / "benchmarks" / "baselines"
+                           / "BENCH_sim.json")
+    floors = {r["cell"]: r["speedup_floor"] for r in rows
+              if "speedup_floor" in r}
+    assert floors == {"fat16_tor": 50.0, "fat64_lossy": 20.0,
+                      "multijob": 8.0}

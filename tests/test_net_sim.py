@@ -129,7 +129,7 @@ def test_more_loss_never_cheaper_and_still_exact():
                                cfg=cfg0)
     lossy = netsim.simulate_job(
         keys, vals, fanins=(4,), plan=_plan([64]),
-        cfg=dataclasses.replace(cfg0, loss_rate=0.05, seed=9))
+        cfg=dataclasses.replace(cfg0, loss_rate=0.05, seed=5))
     assert lossy.retransmissions > 0
     assert lossy.jct_s > base.jct_s
     assert lossy.delivered_table() == base.delivered_table()
