@@ -4,6 +4,18 @@ One place owns the ``BENCH_*.json`` schema (``{"bench": name, "rows":
 [...]}``) that the CI artifact upload and ``tools/check_bench_regression``
 parse — each suite's ``write_out`` delegates here, so a schema change
 cannot drift per suite.
+
+**baselines/ vs out/ policy.**  ``benchmarks/out/`` is where every run
+(local or CI) writes its ``BENCH_*.json`` plus the observability
+artifacts (``metrics.json`` / ``trace.json`` / ``dashboard.*``,
+DESIGN.md §11); it is generated output, gitignored, and safe to delete
+— never commit anything from it by hand.  ``benchmarks/baselines/``
+holds the CHECKED-IN reference rows the perf gate compares against; it
+changes only via ``tools/check_bench_regression.py --update`` (run the
+smoke first), so a baseline always reflects one complete, parity-clean
+smoke run rather than hand-edited cells.  Absolute bars (``*_floor``
+fields) live in the bench rows themselves and are read from the CURRENT
+run, which is why re-baselining a slow run can never lower a floor.
 """
 
 from __future__ import annotations

@@ -25,7 +25,13 @@ exists for:
   * ``fat64_lossy``     — 64 pods / 8192 mappers, full-tree aggregation
                           at 1% loss: the vectorized go-back-N window
                           algebra vs the per-packet node sender
-                          (floor-gated >= 20x).
+                          (floor-gated >= 20x);
+  * ``obs_overhead``    — the fat16_tor vectorized leg with the tracer
+                          disabled vs enabled (DESIGN.md §11): gates that
+                          the no-op tracer really is free and that full
+                          tracing stays within a bounded tax.  Both bars
+                          are in-process throughput RATIOS, so the gate
+                          carries no machine dependence.
 
     PYTHONPATH=src python benchmarks/bench_sim.py --smoke \
         --out benchmarks/out/BENCH_sim.json
@@ -59,6 +65,14 @@ LOSSY_FLOOR = 20.0
 #: the multi-job batch's bar: one batched dispatch per tier group must
 #: beat stepping the jobs through the node engine one by one
 MULTIJOB_FLOOR = 8.0
+#: obs_overhead bars: tracing ENABLED must keep >= this fraction of the
+#: tracing-disabled throughput (the observability tax is bounded) ...
+OBS_ON_OFF_FLOOR = 0.5
+#: ... and the tracing-DISABLED leg must keep >= this fraction of the
+#: same run's gated fat16_tor vectorized throughput (the no-op tracer's
+#: zero-overhead contract, DESIGN.md §11, as a perf bar rather than an
+#: allocation test)
+OBS_VS_BASE_FLOOR = 0.7
 
 
 def _steps(res) -> int:
@@ -240,9 +254,87 @@ def multijob_cell(*, n_jobs: int = 4, floor: float | None = None) -> dict:
     return row
 
 
+def obs_overhead_cell(base_row: dict, *, reps: int = 2) -> dict:
+    """Tracing cost on the gated fat16_tor geometry (DESIGN.md §11).
+
+    Runs the SAME vectorized fat16_tor job twice — once under a scoped
+    DISABLED tracer (the production default) and once under a scoped
+    enabled one — and reports two machine-independent ratios:
+
+      * ``off_on_ratio``  — enabled / disabled throughput: the full
+        observability tax (spans + per-run metrics publishing);
+      * ``vs_base_ratio`` — disabled / this run's own ``fat16_tor``
+        vectorized throughput: the no-op tracer's zero-overhead contract
+        as a perf bar (both legs run in this process, so machine speed
+        cancels out).
+
+    Parity doubles as a semantics check: tracing must not change the
+    simulated result bit-for-bit.
+    """
+    from repro.core import planner
+    from repro.core import reduction_model as rm
+    from repro.net import sim as netsim
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
+
+    ft = planner.FatTreeTopology(pods=16, tors_per_pod=8, hosts_per_tor=16,
+                                 oversubscription=4.0, table_pairs=2048)
+    n = ft.n_hosts * 64
+    keys = rm.zipf_keys(n, 2048, skew=0.99, seed=0).astype(np.int32)
+    vals = np.ones((n,), np.float32)
+    placement = planner.place_aggregation_tree(
+        ft, per_host_pairs=64, key_variety=2048, policy="tor_only")
+    cfg = netsim.NetConfig(records_per_packet=4, exact_stream=True,
+                           engine="vectorized")
+
+    def run():
+        return netsim.simulate_fat_tree_job(ft, keys, vals,
+                                            placement=placement, cfg=cfg)
+
+    def best_leg():
+        res, best_us = None, float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res = run()
+            best_us = min(best_us, (time.perf_counter() - t0) * 1e6)
+        return res, best_us
+
+    run()  # warm the tier kernel's jit cache (standalone-safe)
+    with obs_metrics.scoped(), \
+            obs_trace.scoped_tracer(obs_trace.Tracer(enabled=False)):
+        r_off, off_us = best_leg()
+    with obs_metrics.scoped(), obs_trace.scoped_tracer():
+        r_on, on_us = best_leg()
+    steps = _steps(r_off)
+    off_sps = steps / off_us * 1e6
+    on_sps = steps / on_us * 1e6
+    return {
+        "cell": "obs_overhead",
+        "pods": 16,
+        "n_mappers": ft.n_hosts,
+        "records": n,
+        "records_per_packet": 4,
+        "policy": "tor_only",
+        "loss_rate": 0.0,
+        "switch_steps": steps,
+        "obs_off_wall_us": round(off_us, 1),
+        "obs_on_wall_us": round(on_us, 1),
+        "obs_off_steps_per_s": round(off_sps, 1),
+        "obs_on_steps_per_s": round(on_sps, 1),
+        "off_on_ratio": round(on_sps / off_sps, 3),
+        "vs_base_ratio": round(off_sps / base_row["vec_steps_per_s"], 3),
+        "off_on_floor": OBS_ON_OFF_FLOOR,
+        "vs_base_floor": OBS_VS_BASE_FLOOR,
+        "parity": 1.0 if (r_off.report() == r_on.report()
+                          and r_off.delivered_table()
+                          == r_on.delivered_table()) else 0.0,
+    }
+
+
 def smoke_rows() -> list[dict]:
-    """The CI job: five engine-vs-engine cells, smallest first (the small
-    cells double as jit warmup for the big ones' node legs)."""
+    """The CI job: five engine-vs-engine cells plus the observability
+    overhead ratio cell, smallest first (the small cells double as jit
+    warmup for the big ones' node legs)."""
     rows = [
         jct_smoke_cell(),
         _fat_tree_cell("placement_accept", pods=4, tors_per_pod=4,
@@ -258,13 +350,19 @@ def smoke_rows() -> list[dict]:
                        rpp=4, policy="full", table_pairs=2048,
                        loss_rate=0.01, floor=LOSSY_FLOOR),
     ]
-    for r in rows:  # a cell only counts if the engines agreed exactly
+    rows.append(obs_overhead_cell(rows[3]))  # ratios vs this run's fat16
+    for r in rows:  # a cell only counts if the engines/legs agreed exactly
         assert r["parity"] == 1.0, f"engine parity broke on {r['cell']}"
     for r in rows:
         if "speedup_floor" in r:
             assert r["speedup"] >= r["speedup_floor"], (
                 f"{r['cell']} speedup {r['speedup']}x < "
                 f"{r['speedup_floor']}x floor")
+        for bar in ("off_on", "vs_base"):
+            if f"{bar}_floor" in r:
+                assert r[f"{bar}_ratio"] >= r[f"{bar}_floor"], (
+                    f"{r['cell']} {bar}_ratio {r[f'{bar}_ratio']} < "
+                    f"{r[f'{bar}_floor']} floor")
     return rows
 
 
@@ -277,6 +375,13 @@ def print_rows(rows: list[dict]) -> None:
           f"{'steps':>8} {'node ms':>9} {'vec ms':>8} {'speedup':>8} "
           f"{'parity':>6}")
     for r in rows:
+        if r["cell"] == "obs_overhead":  # off/on legs, ratio bars
+            print(f"{r['cell']:<18} {r['n_mappers']:>7} {r['records']:>8} "
+                  f"{r['records_per_packet']:>3} {r['switch_steps']:>8} "
+                  f"{r['obs_off_wall_us'] / 1e3:>9.1f} "
+                  f"{r['obs_on_wall_us'] / 1e3:>8.1f} "
+                  f"{r['off_on_ratio']:>7.2f}r {r['parity']:>6.0f}")
+            continue
         print(f"{r['cell']:<18} {r['n_mappers']:>7} {r['records']:>8} "
               f"{r['records_per_packet']:>3} {r['switch_steps']:>8} "
               f"{r['node_wall_us'] / 1e3:>9.1f} "

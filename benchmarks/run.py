@@ -39,21 +39,33 @@ SMOKE_SUITES = ("multijob", "dataplane", "fpe", "jct", "placement", "sim")
 
 
 def run_smoke(out_dir: str, *, ci: bool = False) -> dict:
-    """Run every bench suite's smoke config; write all BENCH_*.json."""
+    """Run every bench suite's smoke config; write all BENCH_*.json plus
+    the observability artifacts (trace.json / metrics.json / dashboard,
+    DESIGN.md §11) for the CI artifact upload."""
     import importlib
 
+    from repro.obs import report as obs_report
+    from repro.obs import trace as obs_trace
+
     os.makedirs(out_dir, exist_ok=True)
+    obs_trace.enable()
+    tracer = obs_trace.get_tracer()
     results = {}
     for name in SMOKE_SUITES:
         mod = importlib.import_module(f"benchmarks.bench_{name}")
         t0 = time.perf_counter()
-        rows = mod.smoke_rows()
+        with tracer.span(f"smoke:{name}", cat="bench"):
+            rows = mod.smoke_rows()
         dt = time.perf_counter() - t0
         if not ci:
             mod.print_rows(rows)
         mod.write_out(rows, os.path.join(out_dir, f"BENCH_{name}.json"))
         print(f"smoke_{name},{dt*1e6:.0f},{len(rows)}rows")
         results[name] = rows
+    paths = obs_report.write_obs_artifacts(
+        out_dir, title="bench smoke observability")
+    print("smoke_obs_artifacts,0," + ";".join(
+        os.path.basename(p) for p in sorted(paths.values())))
     return results
 
 

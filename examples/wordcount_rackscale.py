@@ -13,7 +13,8 @@ exact, they differ only in where traffic dies.
     PYTHONPATH=src python examples/wordcount_rackscale.py
 
 Env knobs (the examples test uses the defaults): RACK_PODS, RACK_TORS,
-RACK_HOSTS, RACK_PAIRS, RACK_VARIETY.
+RACK_HOSTS, RACK_PAIRS, RACK_VARIETY; RACK_OBS_DIR overrides where the
+observability artifacts (Perfetto trace + dashboard, DESIGN.md §11) land.
 """
 
 import os
@@ -26,11 +27,14 @@ import numpy as np
 from repro.core import planner
 from repro.core import reduction_model as rm
 from repro.net import sim as netsim
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
 
 MiB = float(1 << 20)
 
 
 def main():
+    obs_trace.enable()
     pods = int(os.environ.get("RACK_PODS", "4"))
     tors = int(os.environ.get("RACK_TORS", "4"))
     hosts = int(os.environ.get("RACK_HOSTS", "8"))
@@ -87,6 +91,16 @@ def main():
     print(f"rack-scale JCT saved vs host-only: {saved:.0%}")
     ordered = j["full"] <= j["tor_only"] <= j["host_only"]
     print(f"JCT ordering full-tree <= ToR-only <= host-only: {ordered}")
+
+    # --- observability artifacts: Perfetto trace + dashboard --------------
+    obs_dir = os.environ.get("RACK_OBS_DIR", os.path.join(
+        os.path.dirname(__file__), "..", "benchmarks", "artifacts",
+        "rackscale_obs"))
+    paths = obs_report.write_obs_artifacts(
+        obs_dir, title="rack-scale wordcount observability")
+    print("\nobs artifacts (trace.json loads in Perfetto):")
+    for name in sorted(paths):
+        print(f"  {name}: {os.path.relpath(paths[name])}")
 
 
 if __name__ == "__main__":

@@ -35,6 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from . import aggops, kvagg
 from . import reduction_model as rm
 
@@ -527,13 +530,15 @@ def run_cascade_stream(
         ek, ev = states[i].ingest(k, v)
         push(i + 1, ek, ev)
 
-    for k, v in batches:
-        v = np.asarray(op.prepare_values(jnp.asarray(v))) if prepare \
-            else np.asarray(v)
-        push(0, np.asarray(k, np.int32), v)
-    for i, st in enumerate(states):
-        fk, fv = st.flush()
-        push(i + 1, fk, fv)
+    with obs_trace.get_tracer().span("dataplane.run_cascade_stream",
+                                     cat="dataplane"):
+        for k, v in batches:
+            v = np.asarray(op.prepare_values(jnp.asarray(v))) if prepare \
+                else np.asarray(v)
+            push(0, np.asarray(k, np.int32), v)
+        for i, st in enumerate(states):
+            fk, fv = st.flush()
+            push(i + 1, fk, fv)
 
     if root_k:
         rk = np.concatenate(root_k)
@@ -556,6 +561,15 @@ def run_cascade_stream(
     if finalize:
         v_out = op.finalize_values(v_out)
     i32 = lambda xs: jnp.asarray(np.asarray(xs, np.int32))  # noqa: E731
+    _publish_levels(
+        plan.op,
+        [{"level": i, "records_in": int(s.n_in),
+          "records_out": int(s.n_out), "evictions": int(s.n_evict),
+          "reduction": round(1.0 - int(s.n_out) / max(int(s.n_in), 1), 4)}
+         for i, s in enumerate(states)],
+        end_to_end=round(1.0 - int(states[-1].n_out)
+                         / max(int(states[0].n_in), 1), 4),
+        source="stream")
     return CascadeResult(
         keys=k_out, values=v_out,
         n_in=i32(states[0].n_in), n_out=i32(states[-1].n_out),
@@ -593,6 +607,31 @@ def predicted_level_reductions(
     return preds
 
 
+def _publish_levels(op_name: str, levels: list, *, end_to_end: float,
+                    source: str) -> None:
+    """Per-level cascade telemetry into the obs registry (DESIGN.md §11).
+
+    ``run_cascade`` is jitted, so publishing happens at its observation
+    points — :func:`telemetry` (post device_get, ``source="cascade"``)
+    and the eager :func:`run_cascade_stream` (``source="stream"``).
+    """
+    reg = obs_metrics.get_registry()
+    base = {"op": op_name, "source": source}
+    for lvl in levels:
+        lbl = dict(base, level=lvl["level"])
+        reg.counter("dataplane.level.records_in_total",
+                    **lbl).inc(lvl["records_in"])
+        reg.counter("dataplane.level.records_out_total",
+                    **lbl).inc(lvl["records_out"])
+        reg.counter("dataplane.level.evictions_total",
+                    **lbl).inc(lvl["evictions"])
+        reg.gauge("dataplane.level.reduction", **lbl).set(lvl["reduction"])
+        if "predicted_reduction" in lvl:
+            reg.gauge("dataplane.level.predicted_reduction",
+                      **lbl).set(lvl["predicted_reduction"])
+    reg.gauge("dataplane.end_to_end_reduction", **base).set(end_to_end)
+
+
 def telemetry(res: CascadeResult, plan: CascadePlan) -> dict:
     """JSON-able per-level report (the dry-run / bench record)."""
     li = [int(x) for x in jax.device_get(res.level_in)]
@@ -608,13 +647,17 @@ def telemetry(res: CascadeResult, plan: CascadePlan) -> dict:
             "evictions": le[i],
             "reduction": round(1.0 - lo[i] / max(li[i], 1), 4),
         })
-    return {
+    report = {
         "op": plan.op,
         "levels": levels,
         "n_in": int(res.n_in),
         "n_out": int(res.n_out),
         "end_to_end_reduction": round(float(end_to_end_reduction(res)), 4),
     }
+    _publish_levels(plan.op, levels,
+                    end_to_end=report["end_to_end_reduction"],
+                    source="cascade")
+    return report
 
 
 def simulate_plan(
@@ -637,8 +680,14 @@ def simulate_plan(
     res = run_cascade(keys, values, plan, backend=backend, interpret=interpret)
     report = telemetry(res, plan)
     preds = predicted_level_reductions(plan, data_amount, key_variety)
+    reg = obs_metrics.get_registry()
     for lvl, p in zip(report["levels"], preds):
         lvl["predicted_reduction"] = round(p, 4)
+        # same label set telemetry() used, so the dashboard can join the
+        # Eq.3 prediction against the measured reduction per level
+        reg.gauge("dataplane.level.predicted_reduction", op=plan.op,
+                  source="cascade",
+                  level=lvl["level"]).set(lvl["predicted_reduction"])
     report["dist"] = dist
     report["data_amount"] = data_amount
     report["key_variety"] = key_variety

@@ -29,9 +29,12 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import time
 from typing import Sequence
 
 from repro.net import wire
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from . import reduction_model as rm
 from . import tree as tree_lib
@@ -914,10 +917,13 @@ def place_aggregation_tree(
     if policy not in PLACEMENT_POLICIES:
         raise ValueError(f"unknown placement policy {policy!r}; "
                          f"choose from {PLACEMENT_POLICIES}")
+    t0_wall = time.perf_counter()
     present = ft.present_tiers()
     placeable = [t for t in present if ft.switch_table(t) > 0]
+    n_scored = [0]
 
     def score(tiers):
+        n_scored[0] += 1
         return _score_tiers(ft, tiers, per_host_pairs=per_host_pairs,
                             key_variety=key_variety)
 
@@ -962,6 +968,19 @@ def place_aggregation_tree(
 
     chosen = tuple(t for t in present if t in chosen)  # leaf->root order
     (scarce_b, _, total_b), tier_b = score(chosen)
+    reg = obs_metrics.get_registry()
+    lbl = {"policy": policy, "scarce_axis": ft.scarce_uplink_axis()}
+    reg.counter("planner.placement.candidates_scored_total",
+                **lbl).inc(n_scored[0])
+    reg.gauge("planner.placement.scarce_uplink_bytes", **lbl).set(scarce_b)
+    reg.gauge("planner.placement.total_bytes", **lbl).set(total_b)
+    reg.gauge("planner.placement.n_agg_tiers", **lbl).set(len(chosen))
+    for tier, b in tier_b.items():
+        reg.gauge("planner.placement.tier_bytes", tier=tier, **lbl).set(b)
+    obs_trace.get_tracer().add_wall_span(
+        f"place_aggregation_tree[{policy}]", t0_wall, time.perf_counter(),
+        cat="planner", args={"policy": policy, "scored": n_scored[0],
+                             "tiers": list(chosen)})
     links = ft.link_tiers()
     caps, enabled = [], []
     for l in links:

@@ -298,7 +298,15 @@ def main():
     ap.add_argument("--q-chunk", type=int, default=None)
     ap.add_argument("--k-chunk", type=int, default=None)
     ap.add_argument("--tag", default="")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="enable span tracing + metrics and write "
+                         "trace.json / metrics.json / dashboard.{md,html} "
+                         "to DIR (DESIGN.md §11)")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable()
 
     archs = list(configs.ARCH_IDS) if args.arch == "all" else [args.arch]
     shapes = ([s.name for s in configs.ALL_SHAPES] if args.shape == "all"
@@ -322,12 +330,16 @@ def main():
                     continue
                 label = f"{arch} x {shape_name} x {pod_tag} x {args.mode}"
                 try:
-                    r = run_cell(arch, shape_name, mp, args.out, args.mode,
-                                 args.dump_hlo, args.q_chunk, args.k_chunk,
-                                 args.tag, accum=args.accum, seq_shard=args.sp,
-                                 post_accum=args.post_accum,
-                                 wire_bf16=args.wire_bf16,
-                                 k_fraction=args.k_fraction)
+                    from repro.obs import trace as obs_trace
+                    with obs_trace.get_tracer().span(
+                            f"dryrun {label}", cat="dryrun"):
+                        r = run_cell(
+                            arch, shape_name, mp, args.out, args.mode,
+                            args.dump_hlo, args.q_chunk, args.k_chunk,
+                            args.tag, accum=args.accum, seq_shard=args.sp,
+                            post_accum=args.post_accum,
+                            wire_bf16=args.wire_bf16,
+                            k_fraction=args.k_fraction)
                     rf = r["roofline"]
                     pl = r.get("plan")
                     plan_txt = ""
@@ -362,6 +374,11 @@ def main():
                                     "error": str(e)})
     n_ok = sum(1 for r in results if r.get("ok"))
     print(f"\n{n_ok}/{len(results)} cells OK")
+    if args.trace:
+        from repro.obs import report as obs_report
+        paths = obs_report.write_obs_artifacts(
+            args.trace, title="dryrun observability")
+        print("obs artifacts: " + " ".join(sorted(paths.values())))
     if n_ok < len(results):
         raise SystemExit(1)
 

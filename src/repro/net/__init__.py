@@ -6,7 +6,9 @@ Submodules:
               (pure numpy: importable from ``core.reduction_model``)
   links     — per-link bandwidth / latency / FIFO-queue model
   transport — seeded loss injection + go-back-N retransmit
+  schema    — unified sim report schema + metrics publishing
   sim       — discrete-event engine: mappers -> switch cascade -> reducer
+  vsim      — vectorized tier engine behind ``NetConfig.engine``
 
 Submodules load lazily: ``core.reduction_model`` imports ``net.wire`` for
 its byte constants while ``net.sim`` imports ``core.dataplane`` — eager
@@ -17,7 +19,7 @@ from __future__ import annotations
 
 import importlib
 
-_SUBMODULES = ("wire", "links", "transport", "sim")
+_SUBMODULES = ("wire", "links", "transport", "schema", "sim", "vsim")
 
 
 def __getattr__(name: str):

@@ -45,7 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggops, dataplane, kvagg
+from repro.obs import trace as obs_trace
 from . import links as links_lib
+from . import schema as schema_lib
 from . import transport, vsim, wire
 
 _EMPTY = int(kvagg.EMPTY_KEY)
@@ -220,23 +222,9 @@ class SimResult:
                 for k, v in zip(self.delivered_keys, self.delivered_values)}
 
     def report(self) -> dict:
-        """JSON-able record (the bench/dry-run shape)."""
-        return {
-            "aggregate": self.aggregate,
-            "op": self.op,
-            "fanins": list(self.fanins),
-            "jct_s": self.jct_s,
-            "delivered_records": self.delivered_records,
-            "delivered_bytes": self.delivered_bytes,
-            "arrived_records": self.arrived_records,
-            "retransmissions": self.retransmissions,
-            "timeouts": self.timeouts,
-            "packets_dropped": self.packets_dropped,
-            "link_bytes": {ax: s["bytes"] for ax, s in self.link_stats.items()},
-            "link_drain_s": {ax: s["drain_s"]
-                             for ax, s in self.link_stats.items()},
-            "per_level": self.per_level,
-        }
+        """JSON-able record in the unified schema (``net.schema``) —
+        identical keys from both engines, bench/dry-run/dashboard shape."""
+        return schema_lib.report_dict(self)
 
 
 def _default_axes(n: int) -> tuple[str, ...]:
@@ -259,6 +247,9 @@ class JobSpec:
     axes: Sequence[str] | None = None
     mapper_delay: Callable[[int], float] | None = None
     job_id: int = 0
+    #: telemetry tag: labels this job's metric series and names its trace
+    #: track (placement policy, comparison leg, ...); default "job<id>"
+    tag: str = ""
 
 
 class _JobRun:
@@ -307,6 +298,15 @@ class _JobRun:
         self.reducer_gbps = (cfg.reducer_gbps if cfg.reducer_gbps is not None
                              else link_gbps[-1])
         self.job_id = spec.job_id
+        self.tag = spec.tag or f"job{spec.job_id}"
+        # one virtual-time trace track per run (DESIGN.md §11): per-level
+        # ingest/transport lanes on their own pid so repeated runs and
+        # concurrent jobs never interleave on one lane
+        tracer = obs_trace.get_tracer()
+        self._pid: int | None = None
+        if tracer.enabled:
+            leg = "" if spec.aggregate else " (host-only)"
+            self._pid = tracer.new_track(f"sim {self.tag}{leg}")
 
         n_mappers = math.prod(fanins)
         self.keys = np.asarray(spec.keys, np.int32)
@@ -341,6 +341,20 @@ class _JobRun:
                     flow_id=m, level=0, eot=True,
                     records_per_packet=cfg.records_per_packet)
                 self.current.append([(t0s[m], p) for p in pkts])
+
+    def _note_tier(self, l: int, *, t0: float, t1: float,
+                   kind: str) -> None:
+        """Replay one tier interval onto this run's virtual-time track
+        (span taxonomy: ``sim.transport`` = child flows draining,
+        ``sim.ingest`` = switch accept/aggregate/re-frame window)."""
+        tracer = obs_trace.get_tracer()
+        if not tracer.enabled or self._pid is None:
+            return
+        tid = 2 * l + (1 if kind == "ingest" else 0)
+        name = f"L{l} {self.axes[l]} {kind}"
+        tracer.name_thread(self._pid, tid, name)
+        tracer.add_span(name, t0, t1, cat=f"sim.{kind}", pid=self._pid,
+                        tid=tid, args={"level": l, "axis": self.axes[l]})
 
     def _add_flow(self, st: transport.FlowStats) -> None:
         self.flows.packets_sent += st.packets_sent
@@ -402,6 +416,13 @@ class _JobRun:
             self.mapper_finish = list(t_done)
         self.per_level_nodes.append(nodes)
         self.current = out_streams
+        if self._pid is not None and obs_trace.get_tracer().enabled:
+            t0 = float(work.t_m.min()) if work.t_m.size else 0.0
+            t_tx = max(t_done, default=t0)
+            self._note_tier(l, t0=t0, t1=t_tx, kind="transport")
+            t_out = max((float(s.times[-1]) for s in out_streams
+                         if s.times.size), default=t_tx)
+            self._note_tier(l, t0=t0, t1=t_out, kind="ingest")
 
     def _run_tier_node(self, l: int) -> None:
         # node path tiers (host-only engine, capacity-0 exact levels)
@@ -414,6 +435,7 @@ class _JobRun:
             else s for s in self.current]
         nodes: list[_Node] = []
         nxt: list[list[tuple[float, wire.Packet]]] = []
+        t_first, t_tx, t_out = math.inf, 0.0, 0.0
         for s in range(n_switches):
             # phase A — transport: run every child-edge flow; links are
             # FIFO and flows per-edge, so the switch's full arrival
@@ -427,6 +449,7 @@ class _JobRun:
                     propagation_s=self.cfg.propagation_s)
                 self.all_links.append(link)
                 t_done = self._run_flow(current[ci], link, arrivals)
+                t_tx = max(t_tx, t_done)
                 if l == 0:
                     self.mapper_finish[ci] = t_done
             arrivals.sort(key=lambda a: (a[0], a[1].header.flow_id,
@@ -442,8 +465,16 @@ class _JobRun:
             assert node.finished, "reliable transport must complete the node"
             nodes.append(node)
             nxt.append(node.out)
+            if arrivals:
+                t_first = min(t_first, arrivals[0][0])
+            if node.out:
+                t_out = max(t_out, max(t for t, _ in node.out))
         self.per_level_nodes.append(nodes)
         self.current = nxt
+        if self._pid is not None and obs_trace.get_tracer().enabled:
+            t0 = 0.0 if math.isinf(t_first) else t_first
+            self._note_tier(l, t0=t0, t1=max(t_tx, t0), kind="transport")
+            self._note_tier(l, t0=t0, t1=max(t_out, t0), kind="ingest")
 
     def finalize(self) -> SimResult:
         """Root -> reducer over the reducer in-link, then assemble."""
@@ -508,24 +539,9 @@ class _JobRun:
         dup = sum(n.receiver.duplicate_discards
                   for lvl in self.per_level_nodes for n in lvl) \
             + self.reducer_dup
-        per_level = []
-        for l, nodes in enumerate(self.per_level_nodes):
-            per_level.append({
-                "level": l,
-                "axis": self.axes[l],
-                "switches": len(nodes),
-                "records_in": sum(n.records_in for n in nodes),
-                "records_out": sum(n.records_out for n in nodes),
-                "evictions": sum(n.state.n_evict if n.state is not None
-                                 else 0 for n in nodes),
-                # disabled (forward-only) hops do no aggregation-engine
-                # work but still move every byte: zero agg_proc_s, nonzero
-                # bytes_out — and the queue depth is tracked for relays too
-                "bytes_out": sum(n.bytes_out for n in nodes),
-                "agg_proc_s": sum(n.agg_proc_s for n in nodes),
-                "queue_peak": max((n.queue_peak for n in nodes), default=0),
-            })
-        return SimResult(
+        per_level = [schema_lib.level_report(l, self.axes[l], nodes)
+                     for l, nodes in enumerate(self.per_level_nodes)]
+        result = SimResult(
             jct_s=jct,
             aggregate=self.aggregate,
             op=self.op,
@@ -546,6 +562,24 @@ class _JobRun:
             duplicate_discards=dup,
             mapper_finish_s=self.mapper_finish,
         )
+        # telemetry out (DESIGN.md §11): both engines publish through the
+        # one schema path, so their metric series are comparable 1:1
+        schema_lib.publish_report(result.report(), job=self.tag,
+                                  engine=self.cfg.engine)
+        tracer = obs_trace.get_tracer()
+        if tracer.enabled and self._pid is not None:
+            root_t0 = 0.0
+            if isinstance(root, vsim.PacketStream):
+                if root.times.size:
+                    root_t0 = float(root.times[0])
+            elif root:
+                root_t0 = float(root[0][0])
+            tid = 2 * self.n_levels
+            tracer.name_thread(self._pid, tid, "reducer drain")
+            tracer.add_span("reducer drain", root_t0, max(jct, root_t0),
+                            cat="sim.transport", pid=self._pid, tid=tid,
+                            args={"axis": "reducer"})
+        return result
 
 
 def simulate_jobs(specs: Sequence[JobSpec]) -> list[SimResult]:
@@ -580,6 +614,7 @@ def simulate_job(
     axes: Sequence[str] | None = None,
     mapper_delay: Callable[[int], float] | None = None,
     job_id: int = 0,
+    tag: str = "",
 ) -> SimResult:
     """Run one job end to end over the emulated network.
 
@@ -587,12 +622,13 @@ def simulate_job(
     among ``prod(fanins)`` mappers); ``plan`` gives each tree level its
     node geometry (default: exact capacity-0 nodes).  ``mapper_delay(m)``
     adds per-mapper start delay — the straggler-injection hook shared with
-    ``runtime.fault_tolerance``.
+    ``runtime.fault_tolerance``.  ``tag`` names the run's metric series
+    and trace track (DESIGN.md §11; default ``job<job_id>``).
     """
     return simulate_jobs([JobSpec(
         keys=keys, values=values, fanins=fanins, plan=plan, op=op,
         aggregate=aggregate, cfg=cfg, axes=axes, mapper_delay=mapper_delay,
-        job_id=job_id)])[0]
+        job_id=job_id, tag=tag)])[0]
 
 
 def _job_plan_spec(
@@ -704,9 +740,9 @@ def jct_comparison(
     """
     sw, host = simulate_jobs([
         JobSpec(keys=keys, values=values, fanins=fanins, plan=plan, op=op,
-                aggregate=True, cfg=cfg, axes=axes),
+                aggregate=True, cfg=cfg, axes=axes, tag="switchagg"),
         JobSpec(keys=keys, values=values, fanins=fanins, plan=plan, op=op,
-                aggregate=False, cfg=cfg, axes=axes)])
+                aggregate=False, cfg=cfg, axes=axes, tag="host_only")])
     return {
         "switchagg": sw.report(),
         "host_only": host.report(),
@@ -729,6 +765,7 @@ def _fat_tree_spec(
     cfg: NetConfig | None,
     mapper_delay: Callable[[int], float] | None = None,
     job_id: int = 0,
+    tag: str = "",
 ) -> JobSpec:
     """One fat-tree incast as a :class:`JobSpec`: the topology's own
     per-tier links, aggregation only where ``placement`` put nodes."""
@@ -743,7 +780,7 @@ def _fat_tree_spec(
         keys=keys, values=values,
         fanins=tuple(l.fanin for l in topo_links), plan=plan, op=op,
         aggregate=True, cfg=cfg, axes=tuple(l.axis for l in topo_links),
-        mapper_delay=mapper_delay, job_id=job_id)
+        mapper_delay=mapper_delay, job_id=job_id, tag=tag)
 
 
 def simulate_fat_tree_job(
@@ -822,7 +859,7 @@ def fat_tree_jct_comparison(
         for pol in policies}
     results = simulate_jobs([
         _fat_tree_spec(ft, keys, values, placement=placements[pol], op=op,
-                       cfg=cfg)
+                       cfg=cfg, tag=pol)
         for pol in policies])
     for pol, res in zip(policies, results):
         placement = placements[pol]

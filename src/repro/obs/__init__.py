@@ -1,0 +1,32 @@
+"""repro.obs — observability: span tracing, metrics, dashboards.
+
+DESIGN.md §11.  Stdlib-only, so every layer (core, net, train, launch,
+tools) can import it without cycles or jax.
+"""
+
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    InstrumentedStep,
+    MetricsRegistry,
+    get_registry,
+    instrument_step,
+    scoped,
+    set_registry,
+)
+from repro.obs.trace import (  # noqa: F401
+    Tracer,
+    disable,
+    enable,
+    get_tracer,
+    scoped_tracer,
+    set_tracer,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "InstrumentedStep", "MetricsRegistry",
+    "get_registry", "instrument_step", "scoped", "set_registry",
+    "Tracer", "disable", "enable", "get_tracer", "scoped_tracer",
+    "set_tracer",
+]

@@ -1,0 +1,498 @@
+"""Join traces + metrics into a self-contained dashboard (DESIGN.md §11).
+
+:func:`write_obs_artifacts` is the one entry point: it dumps the metrics
+registry (``metrics.json``), the tracer's Chrome trace (``trace.json``,
+loads in Perfetto), and renders both a markdown and an HTML dashboard
+with the views the paper's claims live on:
+
+* **JCT breakdown** — per job: completion time, mapper-finish tail,
+  reducer drain (``sim.job.*`` / ``sim.link.drain_s`` series);
+* **per-level reduction waterfall** — records in vs out per cascade
+  level (``sim.level.*_total``), the paper's R per hop;
+* **link bytes / utilization heatline** — wire bytes and drain-time
+  share of JCT per link tier (``sim.link.*``);
+* **predicted Eq.3 vs simulated** — the dataplane's per-level
+  prediction deltas (``dataplane.level.*reduction``);
+* transport-loss counters and train-exchange series when present.
+
+The HTML is a single file, no external assets; colors follow the
+repo-standard palette with light/dark via ``prefers-color-scheme`` and
+``[data-theme]``.  Every chart has a table twin, so nothing is
+color-alone.  Renderers are defensive: sections whose series were never
+published render as "no data" instead of failing, because dashboards
+are emitted from partial runs (smoke bench vs full dryrun vs example).
+"""
+
+from __future__ import annotations
+
+import html as html_lib
+import json
+import os
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+# repo-standard viz palette (validated light/dark pairs)
+_SEQ = ("#cde2fb", "#9ec5f4", "#6da7ec", "#3987e5",
+        "#256abf", "#1c5cab", "#104281")
+
+_CSS = """
+:root { color-scheme: light; }
+body {
+  margin: 0; padding: 24px; background: #f9f9f7; color: #0b0b0b;
+  font-family: system-ui, -apple-system, "Segoe UI", sans-serif;
+}
+.viz-root {
+  color-scheme: light;
+  --surface-1: #fcfcfb; --page: #f9f9f7;
+  --text-primary: #0b0b0b; --text-secondary: #52514e; --muted: #898781;
+  --grid: #e1e0d9; --baseline: #c3c2b7;
+  --series-1: #2a78d6; --series-2: #eb6834; --series-3: #1baf7a;
+  --ring: rgba(11,11,11,0.10);
+}
+@media (prefers-color-scheme: dark) {
+  :root:where(:not([data-theme="light"])) body {
+    background: #0d0d0d; color: #ffffff;
+  }
+  :root:where(:not([data-theme="light"])) .viz-root {
+    color-scheme: dark;
+    --surface-1: #1a1a19; --page: #0d0d0d;
+    --text-primary: #ffffff; --text-secondary: #c3c2b7; --muted: #898781;
+    --grid: #2c2c2a; --baseline: #383835;
+    --series-1: #3987e5; --series-2: #d95926; --series-3: #199e70;
+    --ring: rgba(255,255,255,0.10);
+  }
+}
+:root[data-theme="dark"] body { background: #0d0d0d; color: #ffffff; }
+:root[data-theme="dark"] .viz-root {
+  color-scheme: dark;
+  --surface-1: #1a1a19; --page: #0d0d0d;
+  --text-primary: #ffffff; --text-secondary: #c3c2b7; --muted: #898781;
+  --grid: #2c2c2a; --baseline: #383835;
+  --series-1: #3987e5; --series-2: #d95926; --series-3: #199e70;
+  --ring: rgba(255,255,255,0.10);
+}
+.viz-root {
+  background: var(--surface-1); color: var(--text-primary);
+  border: 1px solid var(--ring); border-radius: 8px;
+  padding: 20px; margin: 0 0 20px; max-width: 980px;
+}
+h1 { font-size: 20px; margin: 0 0 4px; }
+h2 { font-size: 15px; margin: 0 0 2px; }
+.sub { color: var(--text-secondary); font-size: 12px; margin: 0 0 12px; }
+.row { display: flex; align-items: center; gap: 8px; margin: 2px 0; }
+.rlab {
+  flex: 0 0 200px; font-size: 12px; color: var(--text-secondary);
+  text-align: right; overflow: hidden; text-overflow: ellipsis;
+  white-space: nowrap;
+}
+.rtrack { flex: 1; background: none; border-left: 2px solid var(--baseline); }
+.rbar { height: 14px; border-radius: 0 4px 4px 0; min-width: 2px; }
+.rval {
+  flex: 0 0 110px; font-size: 12px; color: var(--text-primary);
+  font-variant-numeric: tabular-nums;
+}
+.heat { display: flex; gap: 2px; margin: 6px 0; }
+.cell {
+  flex: 1; height: 34px; border-radius: 4px; display: flex;
+  align-items: center; justify-content: center; font-size: 11px;
+}
+.clab { font-size: 11px; color: var(--muted); flex: 1; text-align: center; }
+table { border-collapse: collapse; font-size: 12px; margin: 10px 0 4px; }
+th {
+  text-align: left; color: var(--text-secondary); font-weight: 600;
+  border-bottom: 1px solid var(--baseline); padding: 3px 14px 3px 0;
+}
+td {
+  padding: 3px 14px 3px 0; border-bottom: 1px solid var(--grid);
+  font-variant-numeric: tabular-nums; color: var(--text-primary);
+}
+.nodata { color: var(--muted); font-size: 12px; font-style: italic; }
+"""
+
+
+# -- series helpers --------------------------------------------------------
+
+def _series(metrics: list, name: str) -> list:
+    return [(m["labels"], m["value"]) for m in metrics
+            if m["name"] == name]
+
+
+def _jobs(metrics: list) -> list:
+    seen = []
+    for lbl, _ in _series(metrics, "sim.job.jct_s"):
+        key = (lbl.get("job", "?"), lbl.get("agg", "1"),
+               lbl.get("engine", "?"))
+        if key not in seen:
+            seen.append(key)
+    return seen
+
+
+def _job_name(job: str, agg: str) -> str:
+    return job if agg == "1" else f"{job} (no agg)"
+
+
+def _fmt(v: float) -> str:
+    if v == 0:
+        return "0"
+    if abs(v) >= 1e6:
+        return f"{v:,.0f}"
+    if abs(v) >= 100:
+        return f"{v:,.1f}"
+    if abs(v) >= 0.01:
+        return f"{v:.3g}"
+    return f"{v:.3e}"
+
+
+def _get(metrics: list, name: str, **want):
+    for lbl, v in _series(metrics, name):
+        if all(str(lbl.get(k)) == str(w) for k, w in want.items()):
+            return v
+    return None
+
+
+# -- section extraction (shared by md + html) ------------------------------
+
+def _jct_rows(metrics: list) -> list:
+    rows = []
+    for job, agg, engine in _jobs(metrics):
+        want = {"job": job, "agg": agg, "engine": engine}
+        jct = _get(metrics, "sim.job.jct_s", **want)
+        rows.append({
+            "job": _job_name(job, agg),
+            "jct_s": jct or 0.0,
+            "mapper_finish_s": _get(metrics, "sim.job.mapper_finish_max_s",
+                                    **want) or 0.0,
+            "reducer_drain_s": _get(metrics, "sim.link.drain_s",
+                                    axis="reducer", **want) or 0.0,
+            "engine": engine,
+        })
+    rows.sort(key=lambda r: -r["jct_s"])
+    return rows
+
+
+def _reduction_rows(metrics: list) -> list:
+    rows = []
+    for lbl, rin in _series(metrics, "sim.level.records_in_total"):
+        want = {k: lbl[k] for k in ("job", "agg", "engine", "level", "axis")
+                if k in lbl}
+        rout = _get(metrics, "sim.level.records_out_total", **want)
+        if rout is None:
+            continue
+        rows.append({
+            "job": _job_name(lbl.get("job", "?"), lbl.get("agg", "1")),
+            "level": int(lbl.get("level", 0)),
+            "axis": lbl.get("axis", ""),
+            "records_in": rin,
+            "records_out": rout,
+            "reduction": 1.0 - rout / max(rin, 1.0),
+        })
+    rows.sort(key=lambda r: (r["job"], r["level"]))
+    return rows
+
+
+def _link_rows(metrics: list) -> list:
+    rows = []
+    for job, agg, engine in _jobs(metrics):
+        want = {"job": job, "agg": agg, "engine": engine}
+        jct = _get(metrics, "sim.job.jct_s", **want) or 0.0
+        for lbl, b in _series(metrics, "sim.link.wire_bytes_total"):
+            if (lbl.get("job"), lbl.get("agg"),
+                    lbl.get("engine")) != (job, agg, engine):
+                continue
+            ax = lbl.get("axis", "")
+            drain = _get(metrics, "sim.link.drain_s", axis=ax,
+                         **want) or 0.0
+            rows.append({
+                "job": _job_name(job, agg), "axis": ax, "wire_bytes": b,
+                "drain_s": drain,
+                "utilization": min(drain / jct, 1.0) if jct > 0 else 0.0,
+            })
+    return rows
+
+
+def _eq3_rows(metrics: list) -> list:
+    rows = []
+    for lbl, pred in _series(metrics, "dataplane.level.predicted_reduction"):
+        want = {k: lbl[k] for k in ("op", "source", "level") if k in lbl}
+        meas = _get(metrics, "dataplane.level.reduction", **want)
+        if meas is None:
+            continue
+        rows.append({"op": lbl.get("op", "?"), "level": int(lbl["level"]),
+                     "predicted": pred, "simulated": meas,
+                     "delta": meas - pred})
+    rows.sort(key=lambda r: (r["op"], r["level"]))
+    return rows
+
+
+def _transport_rows(metrics: list) -> list:
+    names = ("transport.retransmissions_total", "transport.timeouts_total",
+             "transport.packets_dropped_total",
+             "transport.gap_discards_total",
+             "transport.duplicate_discards_total")
+    rows = []
+    for job, agg, engine in _jobs(metrics):
+        want = {"job": job, "agg": agg, "engine": engine}
+        vals = {n.split(".", 1)[1][:-len("_total")]:
+                _get(metrics, n, **want) or 0 for n in names}
+        rows.append({"job": _job_name(job, agg), **vals})
+    return rows
+
+
+def _trace_rows(tracer) -> list:
+    agg: dict = {}
+    for ev in tracer.events:
+        if ev.get("ph") != "X":
+            continue
+        key = (ev.get("cat", ""), ev["name"])
+        cnt, tot = agg.get(key, (0, 0.0))
+        agg[key] = (cnt + 1, tot + ev.get("dur", 0.0))
+    rows = [{"cat": c, "name": n, "count": cnt, "total_ms": tot / 1e3}
+            for (c, n), (cnt, tot) in agg.items()]
+    rows.sort(key=lambda r: -r["total_ms"])
+    return rows[:20]
+
+
+# -- markdown --------------------------------------------------------------
+
+def _md_bar(frac: float, width: int = 24) -> str:
+    n = max(0, min(width, round(frac * width)))
+    return "█" * n + "░" * (width - n)
+
+
+def dashboard_markdown(metrics: list, tracer=None,
+                       title: str = "repro observability") -> str:
+    L = [f"# {title}", ""]
+    jct = _jct_rows(metrics)
+    L += ["## JCT breakdown", ""]
+    if jct:
+        mx = max(r["jct_s"] for r in jct) or 1.0
+        L += ["| job | jct_s | mapper_finish_s | reducer_drain_s | |",
+              "|---|---|---|---|---|"]
+        for r in jct:
+            L.append(f"| {r['job']} | {_fmt(r['jct_s'])} | "
+                     f"{_fmt(r['mapper_finish_s'])} | "
+                     f"{_fmt(r['reducer_drain_s'])} | "
+                     f"`{_md_bar(r['jct_s'] / mx)}` |")
+    else:
+        L.append("_no data_")
+    L += ["", "## Per-level reduction waterfall", ""]
+    red = _reduction_rows(metrics)
+    if red:
+        L += ["| job | level | axis | records in | records out | "
+              "reduction | |", "|---|---|---|---|---|---|---|"]
+        for r in red:
+            L.append(f"| {r['job']} | {r['level']} | {r['axis']} | "
+                     f"{_fmt(r['records_in'])} | {_fmt(r['records_out'])} "
+                     f"| {r['reduction']:.1%} | "
+                     f"`{_md_bar(r['reduction'])}` |")
+    else:
+        L.append("_no data_")
+    L += ["", "## Link bytes / utilization", ""]
+    links = _link_rows(metrics)
+    if links:
+        L += ["| job | axis | wire bytes | drain_s | utilization |",
+              "|---|---|---|---|---|"]
+        for r in links:
+            L.append(f"| {r['job']} | {r['axis']} | "
+                     f"{_fmt(r['wire_bytes'])} | {_fmt(r['drain_s'])} | "
+                     f"{r['utilization']:.1%} |")
+    else:
+        L.append("_no data_")
+    L += ["", "## Predicted (Eq.3) vs simulated reduction", ""]
+    eq3 = _eq3_rows(metrics)
+    if eq3:
+        L += ["| op | level | predicted | simulated | delta |",
+              "|---|---|---|---|---|"]
+        for r in eq3:
+            L.append(f"| {r['op']} | {r['level']} | {r['predicted']:.4f} "
+                     f"| {r['simulated']:.4f} | {r['delta']:+.4f} |")
+    else:
+        L.append("_no data_")
+    L += ["", "## Transport", ""]
+    tr = _transport_rows(metrics)
+    if tr:
+        L += ["| job | retransmissions | timeouts | packets_dropped | "
+              "gap_discards | duplicate_discards |",
+              "|---|---|---|---|---|---|"]
+        for r in tr:
+            L.append(f"| {r['job']} | {r['retransmissions']:.0f} | "
+                     f"{r['timeouts']:.0f} | {r['packets_dropped']:.0f} | "
+                     f"{r['gap_discards']:.0f} | "
+                     f"{r['duplicate_discards']:.0f} |")
+    else:
+        L.append("_no data_")
+    if tracer is not None and tracer.events:
+        L += ["", "## Top spans", "",
+              "| cat | span | count | total_ms |", "|---|---|---|---|"]
+        for r in _trace_rows(tracer):
+            L.append(f"| {r['cat']} | {r['name']} | {r['count']} | "
+                     f"{r['total_ms']:.3f} |")
+    L.append("")
+    return "\n".join(L)
+
+
+# -- html ------------------------------------------------------------------
+
+def _esc(s) -> str:
+    return html_lib.escape(str(s))
+
+
+def _html_bars(rows, label_key, value_key, *, color_var, fmt=_fmt,
+               frac_of=None) -> str:
+    if not rows:
+        return '<p class="nodata">no data</p>'
+    mx = frac_of or max(abs(r[value_key]) for r in rows) or 1.0
+    out = []
+    for r in rows:
+        frac = max(0.0, min(1.0, r[value_key] / mx))
+        out.append(
+            f'<div class="row" title="{_esc(r[label_key])}: '
+            f'{_esc(fmt(r[value_key]))}">'
+            f'<div class="rlab">{_esc(r[label_key])}</div>'
+            f'<div class="rtrack"><div class="rbar" style="width:'
+            f'{frac * 100:.2f}%;background:var({color_var})"></div></div>'
+            f'<div class="rval">{_esc(fmt(r[value_key]))}</div></div>')
+    return "".join(out)
+
+
+def _html_table(rows, cols, fmts=None) -> str:
+    if not rows:
+        return '<p class="nodata">no data</p>'
+    fmts = fmts or {}
+    head = "".join(f"<th>{_esc(c)}</th>" for c in cols)
+    body = []
+    for r in rows:
+        tds = []
+        for c in cols:
+            v = r.get(c, "")
+            f = fmts.get(c)
+            tds.append(f"<td>{_esc(f(v) if f else v)}</td>")
+        body.append("<tr>" + "".join(tds) + "</tr>")
+    return (f"<table><thead><tr>{head}</tr></thead>"
+            f"<tbody>{''.join(body)}</tbody></table>")
+
+
+def _html_heatline(links) -> str:
+    if not links:
+        return '<p class="nodata">no data</p>'
+    by_job: dict = {}
+    for r in links:
+        by_job.setdefault(r["job"], []).append(r)
+    out = []
+    for job, rows in by_job.items():
+        cells, labs = [], []
+        for r in rows:
+            idx = min(len(_SEQ) - 1, int(r["utilization"] * len(_SEQ)))
+            ink = "#0b0b0b" if idx < 4 else "#ffffff"
+            cells.append(
+                f'<div class="cell" style="background:{_SEQ[idx]};'
+                f'color:{ink}" title="{_esc(r["axis"])}: '
+                f'{r["utilization"]:.1%} of JCT, '
+                f'{_esc(_fmt(r["wire_bytes"]))} B">'
+                f'{r["utilization"]:.0%}</div>')
+            labs.append(f'<div class="clab">{_esc(r["axis"])}</div>')
+        out.append(f"<h2>{_esc(job)}</h2>"
+                   f'<div class="heat">{"".join(cells)}</div>'
+                   f'<div class="heat">{"".join(labs)}</div>')
+    return "".join(out)
+
+
+def dashboard_html(metrics: list, tracer=None,
+                   title: str = "repro observability") -> str:
+    jct = _jct_rows(metrics)
+    red = _reduction_rows(metrics)
+    links = _link_rows(metrics)
+    eq3 = _eq3_rows(metrics)
+    tr = _transport_rows(metrics)
+    pct = lambda v: f"{v:.1%}"  # noqa: E731
+    f4 = lambda v: f"{v:.4f}" if isinstance(v, float) else str(v)  # noqa: E731
+    red_rows = [dict(r, label=f"{r['job']} · L{r['level']} {r['axis']}")
+                for r in red]
+    sec = []
+    sec.append(
+        '<section class="viz-root"><h1>JCT breakdown</h1>'
+        '<p class="sub">job completion time per simulated job; bar = JCT, '
+        "table adds the mapper-finish tail and reducer drain</p>"
+        + _html_bars(jct, "job", "jct_s", color_var="--series-1")
+        + _html_table(jct, ["job", "engine", "jct_s", "mapper_finish_s",
+                            "reducer_drain_s"],
+                      {"jct_s": _fmt, "mapper_finish_s": _fmt,
+                       "reducer_drain_s": _fmt}) + "</section>")
+    sec.append(
+        '<section class="viz-root"><h1>Per-level reduction waterfall</h1>'
+        '<p class="sub">share of records dying at each cascade level '
+        "(the paper's per-hop R)</p>"
+        + _html_bars(red_rows, "label", "reduction",
+                     color_var="--series-2", fmt=pct, frac_of=1.0)
+        + _html_table(red, ["job", "level", "axis", "records_in",
+                            "records_out", "reduction"],
+                      {"records_in": _fmt, "records_out": _fmt,
+                       "reduction": pct}) + "</section>")
+    sec.append(
+        '<section class="viz-root"><h1>Link utilization heatline</h1>'
+        '<p class="sub">per-tier drain time as a share of job completion '
+        "time; darker = busier</p>" + _html_heatline(links)
+        + _html_table(links, ["job", "axis", "wire_bytes", "drain_s",
+                              "utilization"],
+                      {"wire_bytes": _fmt, "drain_s": _fmt,
+                       "utilization": pct}) + "</section>")
+    sec.append(
+        '<section class="viz-root"><h1>Predicted (Eq.3) vs simulated '
+        "reduction</h1>"
+        '<p class="sub">dataplane per-level reduction: model prediction '
+        "against the simulated cascade</p>"
+        + _html_table(eq3, ["op", "level", "predicted", "simulated",
+                            "delta"],
+                      {"predicted": f4, "simulated": f4,
+                       "delta": lambda v: f"{v:+.4f}"}) + "</section>")
+    sec.append(
+        '<section class="viz-root"><h1>Transport</h1>'
+        '<p class="sub">loss-recovery counters per job</p>'
+        + _html_table(tr, ["job", "retransmissions", "timeouts",
+                           "packets_dropped", "gap_discards",
+                           "duplicate_discards"]) + "</section>")
+    if tracer is not None and tracer.events:
+        sec.append(
+            '<section class="viz-root"><h1>Top spans</h1>'
+            '<p class="sub">heaviest trace spans (full timeline: load '
+            "trace.json in Perfetto)</p>"
+            + _html_table(_trace_rows(tracer),
+                          ["cat", "name", "count", "total_ms"],
+                          {"total_ms": lambda v: f"{v:.3f}"})
+            + "</section>")
+    return ("<!doctype html><html><head><meta charset='utf-8'>"
+            f"<title>{_esc(title)}</title><style>{_CSS}</style></head>"
+            f"<body><h1>{_esc(title)}</h1>" + "".join(sec)
+            + "</body></html>")
+
+
+# -- artifact writer -------------------------------------------------------
+
+def write_obs_artifacts(out_dir, *, registry=None, tracer=None,
+                        title: str = "repro observability") -> dict:
+    """Write metrics.json / trace.json / dashboard.{md,html} to ``out_dir``.
+
+    Uses the process-wide registry/tracer unless given explicit ones;
+    returns ``{artifact_name: path}`` for the files actually written
+    (``trace.json`` is skipped when the tracer has no events).
+    """
+    reg = registry if registry is not None else obs_metrics.get_registry()
+    trc = tracer if tracer is not None else obs_trace.get_tracer()
+    os.makedirs(out_dir, exist_ok=True)
+    metrics = reg.collect()
+    paths = {}
+
+    paths["metrics"] = os.path.join(out_dir, "metrics.json")
+    with open(paths["metrics"], "w") as f:
+        json.dump({"metrics": metrics}, f, indent=1)
+    if trc.events:
+        paths["trace"] = os.path.join(out_dir, "trace.json")
+        trc.write(paths["trace"])
+    paths["dashboard_md"] = os.path.join(out_dir, "dashboard.md")
+    with open(paths["dashboard_md"], "w") as f:
+        f.write(dashboard_markdown(metrics, trc, title=title))
+    paths["dashboard_html"] = os.path.join(out_dir, "dashboard.html")
+    with open(paths["dashboard_html"], "w") as f:
+        f.write(dashboard_html(metrics, trc, title=title))
+    return paths

@@ -30,6 +30,7 @@ from repro.core.collectives import GradAggMode, axis_size_compat
 from repro.models.attention import ShardingPolicy
 from repro.models.model import LMModel
 from repro.models.transformer import ApplyOptions
+from repro.obs import metrics as obs_metrics
 from repro.optim import AdamWConfig, adamw_update
 from repro.train.step import TrainProfile, make_param_specs, make_opt_specs
 
@@ -234,4 +235,16 @@ def build_compressed_train_step(
                        shardings["residuals"], None),
         donate_argnums=(0, 1, 2),
     )
+    # build-time exchange gauges + per-call span/latency series
+    # (DESIGN.md §11); the wrapper forwards .lower()/.trace() so dryrun's
+    # AOT path is untouched
+    reg = obs_metrics.get_registry()
+    lbl = {"mode": mode.value if hasattr(mode, "value") else str(mode)}
+    reg.gauge("train.exchange.k_fraction", **lbl).set(k_fraction)
+    reg.gauge("train.exchange.fpe_capacity", **lbl).set(fpe_capacity)
+    if plan is not None:
+        reg.gauge("train.exchange.scarce_link_bytes",
+                  **lbl).set(plan.scarce_link_bytes)
+    step_fn = obs_metrics.instrument_step(step_fn, name="train.step",
+                                          labels=lbl)
     return step_fn, shardings

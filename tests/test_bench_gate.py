@@ -228,3 +228,91 @@ def test_repo_sim_baseline_carries_the_floor_cells():
               if "speedup_floor" in r}
     assert floors == {"fat16_tor": 50.0, "fat64_lossy": 20.0,
                       "multijob": 8.0}
+    obs = [r for r in rows if r["cell"] == "obs_overhead"]
+    assert len(obs) == 1 and obs[0]["off_on_floor"] == 0.5
+    assert obs[0]["vs_base_floor"] == 0.7
+
+
+def _obs_row(**kw):
+    row = {"cell": "obs_overhead", "pods": 16, "n_mappers": 2048,
+           "records": 131072, "records_per_packet": 4,
+           "policy": "tor_only", "loss_rate": 0.0, "switch_steps": 237220,
+           "obs_off_wall_us": 120_000.0, "obs_on_wall_us": 125_000.0,
+           "obs_off_steps_per_s": 1_976_833.3,
+           "obs_on_steps_per_s": 1_897_760.0,
+           "off_on_ratio": 0.96, "vs_base_ratio": 0.98,
+           "off_on_floor": 0.5, "vs_base_floor": 0.7, "parity": 1.0}
+    row.update(kw)
+    return row
+
+
+def test_obs_overhead_ratio_below_floor_fails(dirs):
+    # the observability tax bar: enabled-mode throughput collapsing to
+    # 40% of disabled-mode fails the absolute floor, whatever the
+    # baseline said
+    base, out = dirs
+    _write(base, [_fpe_row()], [_dp_row()], [_sim_row(), _obs_row()])
+    _write(out, [_fpe_row()], [_dp_row()],
+           [_sim_row(), _obs_row(off_on_ratio=0.4)])
+    assert _check(base, out) == 1
+    # ... and the no-op-path bar: the tracer-disabled leg falling to 60%
+    # of the fat16 base means "disabled" is no longer free
+    _write(out, [_fpe_row()], [_dp_row()],
+           [_sim_row(), _obs_row(vs_base_ratio=0.6)])
+    assert _check(base, out) == 1
+    _write(out, [_fpe_row()], [_dp_row()], [_sim_row(), _obs_row()])
+    assert _check(base, out) == 0
+
+
+def test_obs_overhead_ratios_skip_the_throughput_geomean(dirs):
+    # the obs cell's legs are in-process ratios, not machine throughput:
+    # they must not join (and so cannot rescue or sink) the geomean
+    base, out = dirs
+    _write(base, [_fpe_row()], [_dp_row()], [_sim_row(), _obs_row()])
+    metrics = gate.sim_metrics([_sim_row(), _obs_row()])
+    kinds = {k: v[1] for k, v in metrics.items()}
+    assert kinds["sim:obs_overhead:off_on_ratio"] == "floor:0.5"
+    assert kinds["sim:obs_overhead:vs_base_ratio"] == "floor:0.7"
+    assert "sim:obs_overhead:node_steps_per_s" not in metrics
+    assert not any(v[1] == "throughput" and "obs_overhead" in k
+                   for k, v in metrics.items())
+
+
+# -- the schema gate (DESIGN.md §11) ----------------------------------------
+
+def test_schema_gate_fails_when_a_row_stops_emitting_a_metric(dirs):
+    base, out = dirs
+    row = _sim_row()
+    del row["vec_steps_per_s"]  # a registered metric's source field
+    _write(out, [_fpe_row()], [_dp_row()], [row])
+    assert _check(base, out) == 1
+
+
+def test_schema_gate_names_the_missing_fields():
+    row = _fpe_row()
+    del row["fast_pairs_per_s"]
+    del row["scan_pairs_per_s"]
+    fails = gate.schema_failures("BENCH_fpe.json", [row])
+    assert len(fails) == 1
+    assert "fast_pairs_per_s" in fails[0]
+    assert "scan_pairs_per_s" in fails[0]
+    assert gate.schema_failures("BENCH_fpe.json", [_fpe_row()]) == []
+
+
+def test_schema_gate_knows_the_obs_row_shape():
+    # the obs_overhead row legitimately has no node/vec legs — its own
+    # schema wants the ratio fields instead
+    assert gate.schema_failures("BENCH_sim.json",
+                                [_sim_row(), _obs_row()]) == []
+    row = _obs_row()
+    del row["off_on_ratio"]
+    fails = gate.schema_failures("BENCH_sim.json", [_sim_row(), row])
+    assert len(fails) == 1 and "off_on_ratio" in fails[0]
+
+
+def test_repo_baseline_rows_pass_the_schema_gate():
+    # every checked-in baseline row still emits its registered metrics
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    for fname in gate.GATED:
+        rows = gate._load_rows(repo / "benchmarks" / "baselines" / fname)
+        assert gate.schema_failures(fname, rows) == []

@@ -22,6 +22,14 @@ Compares the smoke-run ``BENCH_fpe.json`` / ``BENCH_dataplane.json`` /
     speedup, DESIGN.md §10) are gated against an ABSOLUTE bar carried in
     the bench rows themselves — the baseline only feeds the note, so
     re-baselining a slow run cannot lower the bar;
+  * ``ratio`` cells (the ``obs_overhead`` observability-tax row,
+    DESIGN.md §11) are pure in-process throughput ratios and carry their
+    own ``floor:<x>`` bars — they never join the machine-speed geomean;
+  * a SCHEMA gate runs before any ratio is computed: every row in a
+    gated file must still carry the fields its registered metrics are
+    extracted from (``ROW_SCHEMAS``).  A bench row that silently stops
+    emitting a metric is a telemetry regression, not a perf one, and
+    fails with the missing field names;
   * a config row present in the baseline but missing from the current
     run fails too (silent coverage shrink is a regression).
 
@@ -85,6 +93,16 @@ def sim_metrics(rows: list[dict]) -> dict[str, tuple[float, str]]:
     out = {}
     for r in rows:
         key = r["cell"]
+        if key == "obs_overhead":
+            # the observability-tax cell: both bars are in-process
+            # RATIOS (machine speed cancels), so they carry absolute
+            # floors and never join the throughput geomean
+            out[f"sim:{key}:off_on_ratio"] = (
+                r["off_on_ratio"], f"floor:{r['off_on_floor']}")
+            out[f"sim:{key}:vs_base_ratio"] = (
+                r["vs_base_ratio"], f"floor:{r['vs_base_floor']}")
+            out[f"sim:{key}:parity"] = (r["parity"], "semantic")
+            continue
         out[f"sim:{key}:node_steps_per_s"] = (r["node_steps_per_s"],
                                               "throughput")
         out[f"sim:{key}:vec_steps_per_s"] = (r["vec_steps_per_s"],
@@ -101,6 +119,40 @@ EXTRACTORS = {
     "BENCH_dataplane.json": dataplane_metrics,
     "BENCH_sim.json": sim_metrics,
 }
+
+#: the schema gate (DESIGN.md §11): per gated file, the row fields the
+#: registered metrics above are extracted from.  Callable so a file can
+#: vary required fields by row shape (the sim obs_overhead cell emits
+#: ratio bars instead of engine legs).
+ROW_SCHEMAS = {
+    "BENCH_fpe.json": lambda r: {
+        "backend", "op", "n", "ways",
+        "scan_pairs_per_s", "fast_pairs_per_s"},
+    "BENCH_dataplane.json": lambda r: {
+        "backend", "op", "levels", "capacity_per_node", "n", "wall_us",
+        "end_to_end_reduction"},
+    "BENCH_sim.json": lambda r: (
+        {"cell", "switch_steps", "parity",
+         "obs_off_steps_per_s", "obs_on_steps_per_s",
+         "off_on_ratio", "vs_base_ratio", "off_on_floor", "vs_base_floor"}
+        if r.get("cell") == "obs_overhead" else
+        {"cell", "switch_steps", "parity",
+         "node_steps_per_s", "vec_steps_per_s", "speedup"}),
+}
+
+
+def schema_failures(fname: str, rows: list[dict]) -> list[str]:
+    """Rows that stopped emitting a registered metric field."""
+    fails = []
+    required = ROW_SCHEMAS[fname]
+    for i, r in enumerate(rows):
+        missing = sorted(required(r) - r.keys())
+        if missing:
+            label = r.get("cell") or r.get("op") or f"row{i}"
+            fails.append(
+                f"{fname} row '{label}': stopped emitting registered "
+                f"metric field(s): {', '.join(missing)}")
+    return fails
 
 
 def compare(
@@ -170,9 +222,14 @@ def check(out_dir: pathlib.Path, base_dir: pathlib.Path, *,
                              f"produced no {cur_path}")
             continue
         any_checked = True
+        cur_rows = _load_rows(cur_path)
+        schema_fails = schema_failures(fname, cur_rows)
+        if schema_fails:  # extraction would KeyError on these rows anyway
+            all_fails.extend(schema_fails)
+            continue
         extract = EXTRACTORS[fname]
         fails, notes = compare(
-            extract(_load_rows(base_path)), extract(_load_rows(cur_path)),
+            extract(_load_rows(base_path)), extract(cur_rows),
             tolerance=tolerance, semantic_tolerance=semantic_tolerance)
         for n in notes:
             print(f"NOTE {n}")

@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Render the observability dashboard from saved artifacts (DESIGN.md §11).
+
+Joins a ``metrics.json`` (metrics-registry dump) and optionally a
+``trace.json`` (Chrome trace) into the self-contained HTML + markdown
+dashboard — the offline twin of what ``launch/dryrun.py --trace`` and
+``benchmarks/run.py --smoke`` emit inline:
+
+    python tools/dashboard.py --metrics out/metrics.json \
+        --trace out/trace.json --out out/
+
+Writes ``dashboard.html`` and ``dashboard.md`` into ``--out``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs import report as obs_report  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--metrics", required=True,
+                    help="metrics.json (MetricsRegistry dump)")
+    ap.add_argument("--trace", default=None,
+                    help="trace.json (Chrome trace-event JSON)")
+    ap.add_argument("--out", default=".", help="output directory")
+    ap.add_argument("--title", default="repro observability")
+    args = ap.parse_args(argv)
+
+    with open(args.metrics) as f:
+        metrics = json.load(f)["metrics"]
+    tracer = None
+    if args.trace:
+        tracer = obs_trace.Tracer()
+        with open(args.trace) as f:
+            tracer.events = [e for e in json.load(f)["traceEvents"]
+                             if e.get("ph") != "M"]
+
+    os.makedirs(args.out, exist_ok=True)
+    md = os.path.join(args.out, "dashboard.md")
+    with open(md, "w") as f:
+        f.write(obs_report.dashboard_markdown(metrics, tracer,
+                                              title=args.title))
+    html = os.path.join(args.out, "dashboard.html")
+    with open(html, "w") as f:
+        f.write(obs_report.dashboard_html(metrics, tracer,
+                                          title=args.title))
+    print(f"wrote {md} {html}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
