@@ -1,0 +1,186 @@
+"""Failure-recovery benchmark: JCT and reduction ratio vs failure count
+(DESIGN.md §12).
+
+Each cell runs the Zipf word-count incast under a deterministic failure
+schedule (switch crashes / long link-down windows scheduled inside the
+tier-0 busy window) through the epoch-restart recovery driver and
+records:
+
+  * ``jct_penalty_s`` — total faulted JCT (dead incarnations + restarts
+    included) minus the clean run's JCT: the measured price of recovery;
+  * ``reduction`` — the reducer-link traffic cut of the *surviving*
+    epoch vs the host-only baseline.  Dead switches are bypassed as
+    forward-only relays, so the degraded cascade reduces less — but it
+    must never do worse than pure forwarding, which is the absolute
+    ``reduction_floor`` (0.0) the CI gate enforces;
+  * ``exactly_once`` / ``parity`` — the delivered table still equals the
+    no-failure run bit for bit, on both engines, with identical JCT and
+    epoch count (cross-checked here so a recovery regression fails the
+    bench, not just the unit suite).
+
+    PYTHONPATH=src python benchmarks/bench_faults.py
+    PYTHONPATH=src python benchmarks/bench_faults.py --smoke \
+        --out benchmarks/out/BENCH_faults.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:  # package import (benchmarks.run) or standalone CLI
+    from benchmarks._util import write_bench_json
+except ImportError:  # `python benchmarks/bench_*.py`: sys.path[0] is here
+    from _util import write_bench_json
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
+                           "BENCH_faults.json")
+
+#: degraded-mode absolute bar: a cascade with bypassed (forward-only)
+#: switches must never move MORE reducer bytes than host-only forwarding
+REDUCTION_FLOOR = 0.0
+
+
+def _schedule(n_failures: int, fanins, t_busy_s: float):
+    """The first ``n_failures`` of a fixed fault sequence.  Coordinates
+    are leaf->root (level l has ``prod(fanins[l+1:])`` switches); times
+    sit at the very start of the job — the clean JCT is reducer-drain
+    dominated, so "mid-transfer" for a switch tier means early."""
+    from repro.runtime.fault_tolerance import FailureEvent
+
+    n_tier0 = math.prod(fanins[1:])
+    menu = (
+        dict(kind="switch_crash", level=0, switch=n_tier0 - 1),
+        dict(kind="link_down", level=0, switch=0, child=0,
+             # outlasts the retry budget AND the first restart, so it is
+             # still dark when the next incarnation replays
+             duration_s=5e5 * t_busy_s),
+        dict(kind="switch_crash", level=len(fanins) - 1, switch=0),
+        dict(kind="table_wipe", level=0, switch=0),
+    )
+    if n_failures > len(menu):
+        raise ValueError(f"schedule menu has {len(menu)} entries")
+    return tuple(FailureEvent(t_s=t_busy_s * (0.02 + 0.01 * i), **m)
+                 for i, m in enumerate(menu[:n_failures]))
+
+
+def run_config(fanins, n_failures: int, *, variety: int = 256,
+               per_mapper: int = 128, capacity: int = 128,
+               loss_rate: float = 0.0, records_per_packet: int = 32,
+               seed: int = 0) -> dict:
+    """One cell: clean + host-only + faulted (both engines) on one net."""
+    from repro.core import dataplane
+    from repro.core import reduction_model as rm
+    from repro.net import sim as netsim
+    from repro.runtime.fault_tolerance import FailureInjector
+
+    fanins = tuple(fanins)
+    n = math.prod(fanins) * per_mapper
+    keys = rm.zipf_keys(n, variety, skew=0.99, seed=seed).astype(np.int32)
+    vals = np.ones((n,), np.float32)
+    plan = dataplane.CascadePlan(op="sum", levels=tuple(
+        dataplane.LevelSpec(capacity=capacity) for _ in fanins))
+    cfg = netsim.NetConfig(loss_rate=loss_rate, seed=seed,
+                           records_per_packet=records_per_packet)
+    kw = dict(fanins=fanins, plan=plan)
+
+    clean = netsim.simulate_job(keys, vals, cfg=cfg, **kw)
+    host = netsim.simulate_job(keys, vals, cfg=cfg, aggregate=False, **kw)
+    host_red_bytes = host.link_stats["reducer"]["bytes"]
+    inj = FailureInjector({}, events=_schedule(n_failures, fanins,
+                                               clean.jct_s))
+    t0 = time.perf_counter()
+    runs = {}
+    cell = f"{'x'.join(str(f) for f in fanins)}/f{n_failures}"
+    for engine in ("node", "vectorized"):
+        runs[engine] = netsim.simulate_job_with_faults(
+            keys, vals, injector=inj, tag=f"faults:{cell}",
+            cfg=dataclasses.replace(cfg, engine=engine), **kw)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    fn, fv = runs["node"], runs["vectorized"]
+
+    exactly_once = (fn.delivered_table() == clean.delivered_table())
+    parity = (fn.delivered_table() == fv.delivered_table()
+              and fn.jct_s == fv.jct_s and fn.epochs == fv.epochs)
+    red_bytes = fn.result.link_stats["reducer"]["bytes"]
+    reduction = 1.0 - red_bytes / max(host_red_bytes, 1)
+    assert exactly_once, (
+        f"recovery broke exactly-once at {n_failures} failure(s)")
+    assert parity, f"engines diverged under faults at {n_failures}"
+    return {
+        "cell": cell,
+        "fanins": list(fanins),
+        "n_failures": n_failures,
+        "n_verdicts": len(fn.verdicts),
+        "epochs": fn.epochs,
+        "n_bypassed": len(fn.bypass),
+        "jct_clean_s": clean.jct_s,
+        "jct_faulted_s": fn.jct_s,
+        "jct_penalty_s": fn.jct_s - clean.jct_s,
+        "jct_host_only_s": host.jct_s,
+        "reduction": round(reduction, 4),
+        "reduction_floor": REDUCTION_FLOOR,
+        "exactly_once": 1.0,
+        "parity": 1.0,
+        "wall_us": round(wall_us, 1),
+    }
+
+
+def sweep(*, fanins=(4, 2), failure_counts=(0, 1, 2, 3), **kw) -> list[dict]:
+    return [run_config(fanins, nf, **kw) for nf in failure_counts]
+
+
+def smoke_rows() -> list[dict]:
+    """Three small cells (0, 1, 2 injected failures) + the recovery
+    cross-checks (the CI job)."""
+    return sweep(fanins=(4, 2), failure_counts=(0, 1, 2),
+                 per_mapper=64, variety=128, capacity=64)
+
+
+def write_out(rows: list[dict], out_path: str) -> None:
+    write_bench_json(rows, out_path, bench="faults")
+
+
+def print_rows(rows: list[dict]) -> None:
+    print(f"{'cell':<10} {'fail':>4} {'epochs':>6} {'jct_us':>9} "
+          f"{'penalty_us':>10} {'reduction':>9} {'bypass':>6}")
+    for r in rows:
+        print(f"{r['cell']:<10} {r['n_failures']:>4} {r['epochs']:>6} "
+              f"{r['jct_faulted_s']*1e6:>9.1f} "
+              f"{r['jct_penalty_s']*1e6:>10.1f} "
+              f"{r['reduction']:>9.1%} {r['n_bypassed']:>6}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fanins", default="4x2")
+    ap.add_argument("--failure-counts", default="0,1,2,3")
+    ap.add_argument("--per-mapper", type=int, default=128)
+    ap.add_argument("--variety", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="three small cells + recovery cross-checks "
+                         "(the CI job)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows = smoke_rows()
+    else:
+        rows = sweep(
+            fanins=tuple(int(x) for x in args.fanins.split("x")),
+            failure_counts=[int(x) for x in args.failure_counts.split(",")],
+            per_mapper=args.per_mapper, variety=args.variety)
+    print_rows(rows)
+    write_out(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

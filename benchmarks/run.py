@@ -35,7 +35,8 @@ for _p in (_REPO, os.path.join(_REPO, "src")):
         sys.path.insert(0, _p)
 
 #: every smoke suite the consolidated CI step runs: (name, module, out file)
-SMOKE_SUITES = ("multijob", "dataplane", "fpe", "jct", "placement", "sim")
+SMOKE_SUITES = ("multijob", "dataplane", "fpe", "jct", "placement", "sim",
+                "faults")
 
 
 def run_smoke(out_dir: str, *, ci: bool = False) -> dict:

@@ -1,3 +1,3 @@
-from .manager import CheckpointManager, restore_tree, save_tree
+from .manager import CheckpointCorruptError, CheckpointManager, restore_tree, save_tree
 
-__all__ = ["CheckpointManager", "save_tree", "restore_tree"]
+__all__ = ["CheckpointCorruptError", "CheckpointManager", "save_tree", "restore_tree"]

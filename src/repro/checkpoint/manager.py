@@ -20,6 +20,7 @@ import os
 import re
 import shutil
 import threading
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -64,22 +65,39 @@ def save_tree(tree, directory: str, step: int, extras: Optional[dict] = None) ->
     return final
 
 
+class CheckpointCorruptError(IOError):
+    """The on-disk checkpoint is damaged (bad checksum / unparseable
+    manifest or array archive) and can never restore.  Distinct from
+    transient I/O or shape-mismatch errors so callers can safely delete
+    *only* verified-corrupt checkpoints and fall back to older ones."""
+
+
 def restore_tree(directory: str, step: Optional[int] = None):
-    """Returns (flat dict {path: np.ndarray}, manifest). Verifies checksum."""
+    """Returns (flat dict {path: np.ndarray}, manifest). Verifies checksum.
+
+    Raises :class:`CheckpointCorruptError` when the stored bytes are
+    provably damaged; other failures (missing files, shape mismatches)
+    keep their natural exception types."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise CheckpointCorruptError(f"checkpoint {path} corrupt: bad manifest ({e})") from e
     arr_path = os.path.join(path, "arrays.npz")
     with open(arr_path, "rb") as f:
         digest = hashlib.sha256(f.read()).hexdigest()
     if digest != manifest["arrays_sha256"]:
-        raise IOError(f"checkpoint {path} corrupt: checksum mismatch")
-    data = np.load(arr_path)
-    flat = {k.replace("__", "/"): data[k] for k in data.files}
+        raise CheckpointCorruptError(f"checkpoint {path} corrupt: checksum mismatch")
+    try:
+        data = np.load(arr_path)
+        flat = {k.replace("__", "/"): data[k] for k in data.files}
+    except (zipfile.BadZipFile, ValueError) as e:
+        raise CheckpointCorruptError(f"checkpoint {path} corrupt: bad archive ({e})") from e
     return flat, manifest
 
 

@@ -1062,6 +1062,178 @@ def plan_fat_tree_job(
                    flat_scarce_bytes=flat_scarce, over_budget=False)
 
 
+def fat_tree_tier_bytes_with_bypass(
+    ft: FatTreeTopology,
+    placed_tiers: Sequence[str],
+    bypass: Sequence[tuple[int, int]],
+    *,
+    per_host_pairs: int,
+    key_variety: int,
+    pair_bytes: float | None = None,
+) -> dict[str, float]:
+    """:func:`fat_tree_tier_bytes` generalized to per-switch streams so a
+    subset of a placed tier's switches can be forward-only (``bypass`` =
+    ``(level, switch)`` coordinates, the simulator's leaf->root indexing).
+    A bypassed switch relays its children's streams unaggregated — the
+    failure-recovery re-route (DESIGN.md §12) — so the uplink above it
+    carries the unreduced subtree.  With an empty ``bypass`` this reduces
+    exactly to the uniform per-link walk (the repair test pins that)."""
+    if pair_bytes is None:
+        pair_bytes = float(wire.PAIR_BYTES)
+    links = ft.link_tiers()
+    fanins = [l.fanin for l in links]
+    placed = set(placed_tiers)
+    dead = set((int(l), int(s)) for l, s in bypass)
+    # per-link pair streams entering tier i (leaf tier: one per host)
+    m = [float(per_host_pairs)] * math.prod(fanins)
+    out: dict[str, float] = {}
+    for i, l in enumerate(links):
+        out[l.axis] = sum(m) * pair_bytes
+        tier = _AXIS_TIER.get(l.axis, l.axis)
+        cap = ft.switch_table(tier) if tier in placed else 0
+        f = fanins[i]
+        nxt = []
+        for s in range(math.prod(fanins[i + 1:])):
+            m_in = sum(m[s * f:(s + 1) * f])
+            sw_cap = 0 if (i, s) in dead else cap
+            nxt.append(_node_out_pairs(m_in, key_variety, sw_cap))
+        m = nxt
+    out["reducer"] = m[0] * pair_bytes
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementRepair:
+    """A placement repaired around failed switches (DESIGN.md §12)."""
+
+    placement: TreePlacement  # post-repair placement + byte model
+    failed: tuple[tuple[int, int], ...]  # dead (level, switch) positions
+    bypass: tuple[tuple[int, int], ...]  # positions now forward-only relays
+    dropped_tiers: tuple[str, ...]  # tiers the repair un-placed wholesale
+    degraded_axes: tuple[str, ...]  # link tiers with >=1 bypassed switch
+    extra_scarce_bytes: float  # scarce-axis bytes added by the repair
+    extra_reducer_bytes: float
+
+    def describe(self) -> str:
+        return (f"repair: {len(self.failed)} dead, "
+                f"dropped [{'+'.join(self.dropped_tiers) or '-'}], "
+                f"+{self.extra_scarce_bytes/2**20:.2f}MiB scarce")
+
+
+def repair_placement(
+    ft: FatTreeTopology,
+    placement: TreePlacement,
+    *,
+    failed: Sequence[tuple[int, int]],
+    per_host_pairs: int,
+    key_variety: int,
+    drain_calibration: dict[str, float] | None = None,
+) -> PlacementRepair:
+    """Incrementally re-place aggregation around dead switches.
+
+    ``failed`` lists ``(level, switch)`` positions (leaf->root level into
+    ``placement.axes``, switch index within the tier — the coordinates
+    :class:`runtime.fault_tolerance.FailureVerdict` carries).  Policy:
+
+      * a tier with *some* dead switches stays placed — the dead positions
+        become forward-only relays (the simulator's aggregation bypass)
+        and the byte model charges their unreduced subtrees hop by hop;
+      * a tier whose *every* switch died is removed from the placeable set
+        and the placement search re-runs over the survivors — the same
+        ``place_aggregation_tree`` machinery, so the repair inherits the
+        search policy's lexicographic objective.
+
+    The repaired placement's byte model (``tier_bytes`` etc.) reflects the
+    degraded tree, so ``extra_scarce_bytes`` is the modeled congestion
+    price of the failure — what the recovery-JCT measurement should echo.
+    """
+    links = ft.link_tiers()
+    fanins = [l.fanin for l in links]
+    axes = tuple(l.axis for l in links)
+    failed = tuple(sorted(set((int(l), int(s)) for l, s in failed)))
+    for l, s in failed:
+        if not 0 <= l < len(links):
+            raise ValueError(f"failed level {l} out of range")
+        if not 0 <= s < math.prod(fanins[l + 1:]):
+            raise ValueError(f"failed switch ({l}, {s}) out of range")
+    t0_wall = time.perf_counter()
+    # tiers that lost every switch can no longer aggregate at all
+    dead_tiers = []
+    for i, l in enumerate(links):
+        tier = _AXIS_TIER.get(l.axis, l.axis)
+        n_sw = math.prod(fanins[i + 1:])
+        if (tier in placement.tiers
+                and sum(1 for fl, fs in failed if fl == i) >= n_sw):
+            dead_tiers.append(tier)
+    if dead_tiers:
+        ft_search = dataclasses.replace(
+            ft, tier_table_pairs=tuple(
+                (t, 0) if t in dead_tiers else (t, ft.switch_table(t))
+                for t in FAT_TREE_TIERS))
+        base = place_aggregation_tree(
+            ft_search, per_host_pairs=per_host_pairs,
+            key_variety=key_variety,
+            policy=placement.policy if placement.policy
+            in PLACEMENT_POLICIES else "auto",
+            drain_calibration=drain_calibration)
+        tiers = base.tiers
+    else:
+        tiers = placement.tiers
+    # dead positions in still-placed tiers aggregate nothing: bypass them
+    bypass = tuple((l, s) for l, s in failed
+                   if _AXIS_TIER.get(axes[l], axes[l]) in tiers)
+    tier_b = fat_tree_tier_bytes_with_bypass(
+        ft, tiers, bypass, per_host_pairs=per_host_pairs,
+        key_variety=key_variety)
+    scarce = ft.scarce_uplink_axis()
+    dead_names = {
+        ft.tier_switches(_AXIS_TIER.get(axes[l], axes[l]))[s].name
+        for l, s in failed if _AXIS_TIER.get(axes[l], axes[l]) in tiers}
+    caps, enabled = [], []
+    for l in links:
+        tier = _AXIS_TIER.get(l.axis, l.axis)
+        on = tier in tiers
+        caps.append(ft.switch_table(tier) if on else 0)
+        enabled.append(on)
+    repaired = TreePlacement(
+        policy=f"repair({placement.policy})",
+        tiers=tiers,
+        switches=tuple(sw.name for t in tiers for sw in ft.tier_switches(t)
+                       if sw.name not in dead_names),
+        axes=axes,
+        level_capacities=tuple(caps),
+        level_enabled=tuple(enabled),
+        scarce_axis=scarce,
+        scarce_uplink_bytes=tier_b[scarce],
+        tier_bytes=tier_b,
+        total_bytes=sum(tier_b.values()),
+        reducer_bytes=tier_b["reducer"],
+        max_drain_s=placement_drain_s(ft, tier_b,
+                                      drain_calibration=drain_calibration),
+    )
+    degraded = tuple(sorted({axes[l] for l, s in bypass}, key=axes.index))
+    # bypass can only ADD bytes; tiny negatives are per-switch-walk
+    # float noise vs the uniform pre-failure model
+    extra_scarce = max(
+        0.0, tier_b[scarce] - placement.tier_bytes.get(scarce, 0.0))
+    extra_red = max(0.0, tier_b["reducer"] - placement.reducer_bytes)
+    reg = obs_metrics.get_registry()
+    lbl = {"policy": placement.policy, "scarce_axis": scarce}
+    reg.counter("planner.repair.failed_switches_total", **lbl).inc(len(failed))
+    reg.gauge("planner.repair.extra_scarce_bytes", **lbl).set(extra_scarce)
+    reg.gauge("planner.repair.n_dropped_tiers", **lbl).set(len(dead_tiers))
+    reg.gauge("planner.repair.n_bypassed", **lbl).set(len(bypass))
+    obs_trace.get_tracer().add_wall_span(
+        f"repair_placement[{placement.policy}]", t0_wall,
+        time.perf_counter(), cat="planner",
+        args={"failed": [list(p) for p in failed],
+              "dropped": dead_tiers, "degraded": list(degraded)})
+    return PlacementRepair(
+        placement=repaired, failed=failed, bypass=bypass,
+        dropped_tiers=tuple(dead_tiers), degraded_axes=degraded,
+        extra_scarce_bytes=extra_scarce, extra_reducer_bytes=extra_red)
+
+
 def size_fpe_capacity(key_variety: int, target_reduction: float, data_amount: int) -> int:
     """Invert Eq. 3: the capacity needed to hit a target reduction ratio."""
     if key_variety <= 0:

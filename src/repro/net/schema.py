@@ -137,3 +137,65 @@ def publish_report(report: dict, *, job: str, engine: str,
         c("sim.link.wire_bytes_total", axis=ax, **base).inc(b)
     for ax, d in report["link_drain_s"].items():
         g("sim.link.drain_s", axis=ax, **base).set(d)
+
+
+#: every key a fault report carries (``fault_report_dict`` output)
+FAULT_REPORT_KEYS = (
+    "epochs", "n_verdicts", "n_applied", "n_bypassed", "jct_s",
+    "final_jct_s", "recovery_overhead_s", "degraded_levels", "verdicts",
+    "epoch_log",
+)
+
+
+def fault_report_dict(fsr) -> dict:
+    """The canonical JSON-able failure/recovery record from a
+    ``net.sim.FaultSimResult`` (DESIGN.md §12).  ``recovery_overhead_s``
+    is the absolute time spent on dead incarnations and restart delays —
+    total JCT minus the surviving epoch's own run time; the *penalty* vs
+    a pristine (never-degraded) run additionally includes the bypass
+    relays' slower final epoch, which needs a baseline run to measure."""
+    return {
+        "epochs": fsr.epochs,
+        "n_verdicts": len(fsr.verdicts),
+        "n_applied": len(fsr.applied),
+        "n_bypassed": len(fsr.bypass),
+        "jct_s": fsr.jct_s,
+        "final_jct_s": fsr.result.jct_s,
+        "recovery_overhead_s": fsr.jct_s - fsr.result.jct_s,
+        "degraded_levels": sorted({int(l) for l, _ in fsr.bypass}),
+        "verdicts": [
+            {"kind": v.kind, "level": v.level, "switch": v.switch,
+             "epoch": v.epoch, "t_detect_s": v.t_detect_s,
+             "detected_by": v.detected_by}
+            for v in fsr.verdicts],
+        "epoch_log": [dict(rec) for rec in fsr.epoch_log],
+    }
+
+
+def publish_fault_report(report: dict, *, job: str, engine: str,
+                         registry: Optional[object] = None) -> None:
+    """Push one failure/recovery record into the metrics registry.
+
+    Series (same ``job``/``engine`` label taxonomy as
+    :func:`publish_report`): ``sim.fault.epochs`` / ``.jct_s`` /
+    ``.recovery_overhead_s`` scalars, ``sim.fault.verdicts_total``
+    counters per (kind, detected_by), a ``sim.fault.event_t_s`` gauge per
+    verdict (the failure timeline the dashboard renders), and
+    ``sim.fault.degraded`` markers per bypassed tree level."""
+    reg = registry if registry is not None else obs_metrics.get_registry()
+    base = {"job": job, "engine": engine}
+    g = reg.gauge
+    c = reg.counter
+    g("sim.fault.epochs", **base).set(report["epochs"])
+    g("sim.fault.jct_s", **base).set(report["jct_s"])
+    g("sim.fault.final_jct_s", **base).set(report["final_jct_s"])
+    g("sim.fault.recovery_overhead_s", **base).set(
+        report["recovery_overhead_s"])
+    g("sim.fault.n_bypassed", **base).set(report["n_bypassed"])
+    for v in report["verdicts"]:
+        lbl = dict(base, kind=v["kind"], detected_by=v["detected_by"])
+        c("sim.fault.verdicts_total", **lbl).inc(1)
+        g("sim.fault.event_t_s", level=v["level"], switch=v["switch"],
+          epoch=v["epoch"], **lbl).set(v["t_detect_s"])
+    for lv in report["degraded_levels"]:
+        g("sim.fault.degraded", level=lv, **base).set(1)

@@ -13,6 +13,14 @@ duplicate (a retransmission of something already combined) is discarded
 *before* touching the aggregation state, which is what makes every record
 combine exactly once under any loss pattern (the transport property test).
 
+Failure detection rides the same machinery (DESIGN.md §12): a
+:class:`RetryPolicy` turns the constant RTO into capped exponential
+backoff with a finite consecutive-timeout budget, after which the sender
+raises :class:`PeerDeadError` — the timeout-driven "peer dead" verdict —
+and an :class:`EdgeFault` injects time-based drops (a crashed receiving
+switch, transient link-down windows).  Packets carry a restart epoch, and
+the :class:`Receiver` dedupes across incarnations as well as PSNs.
+
 Loss is a pure function of (seed, flow, psn, attempt): reproducible, and
 independent retransmissions re-roll the dice.  :func:`loss_uniform` IS
 that function — a vectorizable integer hash, not a stateful RNG — so the
@@ -112,6 +120,74 @@ DeliverFn = Callable[[wire.Packet, float], None]
 MAX_ATTEMPTS = 10_000
 
 
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/backoff policy of one go-back-N sender (DESIGN.md §12).
+
+    The default reproduces the legacy sender bit-for-bit: constant RTO
+    (``backoff=1.0`` — ``rto * 1.0**k == rto`` exactly in floats) and no
+    retry budget (retry forever, up to the ``MAX_ATTEMPTS`` backstop).
+    A failure-detection policy sets ``backoff > 1`` (each consecutive
+    timeout without progress waits ``backoff``x longer, capped at
+    ``max_timeout_s``) and a finite ``max_timeouts``: once that many
+    consecutive timeouts pass without the window advancing, the sender
+    declares the peer dead and raises :class:`PeerDeadError` — the
+    timeout-driven crash verdict the fault plane turns into an epoch
+    restart.
+    """
+
+    timeout_s: float | None = None  # base RTO; None = per-link conservative
+    backoff: float = 1.0  # RTO multiplier per consecutive no-progress timeout
+    max_timeout_s: float | None = None  # cap on the backed-off RTO
+    max_timeouts: int | None = None  # consecutive-timeout budget; None = infinite
+
+    def rto(self, base_rto: float, consecutive: int) -> float:
+        """The RTO after ``consecutive`` prior no-progress timeouts."""
+        v = base_rto * self.backoff ** consecutive
+        if self.max_timeout_s is not None:
+            v = min(v, self.max_timeout_s)
+        return v
+
+
+DEFAULT_RETRY = RetryPolicy()
+
+
+class PeerDeadError(RuntimeError):
+    """A sender exhausted its retry budget: the receiving node is declared
+    dead.  ``t_s`` is the sender's clock at the verdict — the detection
+    time the fault plane dates the epoch restart from."""
+
+    def __init__(self, msg: str, *, t_s: float, flow_id: int, psn: int,
+                 timeouts: int, stats: "FlowStats | None" = None):
+        super().__init__(msg)
+        self.t_s = t_s
+        self.flow_id = flow_id
+        self.psn = psn
+        self.timeouts = timeouts
+        self.stats = stats  # accounting up to the verdict (telemetry)
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeFault:
+    """Time-based failure of one tree edge's receiving end (DESIGN.md §12).
+
+    ``dead_from_s`` models a crashed receiving switch: every packet
+    arriving at or after that instant is lost (nobody is listening).
+    ``down_windows`` are transient link outages: arrivals inside any
+    ``[t0, t1)`` window die on the wire.  Both compose with the random
+    ``LossModel`` — a packet must survive the dice *and* the fault to be
+    delivered.
+    """
+
+    dead_from_s: float | None = None
+    down_windows: tuple[tuple[float, float], ...] = ()
+
+    def lost(self, t_arrive: float) -> bool:
+        if self.dead_from_s is not None and t_arrive >= self.dead_from_s:
+            return True
+        return any(t0 <= t_arrive < t1 for t0, t1 in self.down_windows)
+
+
 def send_stream(
     packets: Sequence[tuple[float, wire.Packet]],
     link: links_lib.Link,
@@ -121,6 +197,8 @@ def send_stream(
     window: int = 16,
     timeout_s: float | None = None,
     deliver: DeliverFn,
+    retry: RetryPolicy | None = None,
+    fault: EdgeFault | None = None,
 ) -> tuple[float, FlowStats]:
     """Reliably deliver ``packets`` — a PSN-ordered list of
     ``(t_ready, Packet)`` — over one link with go-back-N.
@@ -129,7 +207,18 @@ def send_stream(
     an eviction before producing it).  Returns (time the sender finished,
     i.e. the whole stream is known-delivered, stats).  Dropped packets still
     occupy the link — the wire carried them before they died.
+
+    ``retry`` arms the backoff/verdict policy (default: legacy constant
+    RTO, retry forever); ``fault`` injects time-based drops (dead peer,
+    link-down windows).  Against a peer that is dead — or a window that
+    outlives the retry budget — a finite ``retry.max_timeouts`` makes
+    this raise :class:`PeerDeadError` instead of spinning to the
+    ``MAX_ATTEMPTS`` backstop.
     """
+    if retry is None:
+        retry = DEFAULT_RETRY
+    if timeout_s is None:
+        timeout_s = retry.timeout_s
     if timeout_s is None:
         # conservative RTO: a full window's serialization plus one RTT
         timeout_s = 2.0 * (window * link.serialize_s(wire.MTU_BYTES)
@@ -138,6 +227,7 @@ def send_stream(
     attempts = [0] * len(packets)
     base = 0
     t = 0.0
+    consecutive = 0  # timeouts since the window last advanced
     while base < len(packets):
         upto = min(base + window, len(packets))
         first_lost: int | None = None
@@ -159,7 +249,8 @@ def send_stream(
             t = depart  # sender streams back-to-back
             stats.packets_sent += 1
             stats.wire_bytes += pkt.wire_bytes
-            if loss.drop(flow_id, psn, attempts[psn]):
+            if (loss.drop(flow_id, psn, attempts[psn])
+                    or (fault is not None and fault.lost(arrive))):
                 stats.packets_dropped += 1
                 if first_lost is None:
                     first_lost = psn
@@ -167,12 +258,24 @@ def send_stream(
                 deliver(pkt, arrive)
         if first_lost is None:
             base = upto
+            consecutive = 0
         else:
             # sender discovers the loss one RTO after it stopped sending,
             # rewinds to the lost PSN (go-back-N), and resends from there
             stats.timeouts += 1
-            t += timeout_s
+            if first_lost > base:
+                consecutive = 0  # the window advanced: progress was made
+            t += retry.rto(timeout_s, consecutive)
+            consecutive += 1
             base = first_lost
+            if (retry.max_timeouts is not None
+                    and consecutive > retry.max_timeouts):
+                raise PeerDeadError(
+                    f"flow {flow_id}: psn {first_lost} undeliverable after "
+                    f"{consecutive} consecutive timeouts — peer declared "
+                    f"dead at t={t:.6f}s",
+                    t_s=t, flow_id=flow_id, psn=first_lost,
+                    timeouts=consecutive, stats=stats)
     return t, stats
 
 
@@ -183,14 +286,34 @@ class Receiver:
     exactly once per (flow, psn) and only in order — the switch-side
     incomplete-aggregation handling: records of a lost packet re-enter the
     cascade via retransmission without ever double-combining.
+
+    The gate also dedupes across restart *incarnations* (DESIGN.md §12):
+    each packet carries its job epoch, and the receiver tracks the
+    highest epoch it has seen.  A packet from an older epoch is an
+    in-flight leftover of an aborted incarnation — discarded (counted in
+    ``stale_epoch_discards``) before it can touch aggregation state.  A
+    packet from a *newer* epoch announces a restart: the per-flow PSN map
+    resets, so the children's epoch-tagged replays (which restart at
+    PSN 0) are accepted rather than misread as duplicates of the dead
+    incarnation's stream.  Within one epoch the behavior is exactly the
+    pre-epoch gate.
     """
 
     def __init__(self):
         self.expected: dict[int, int] = {}
+        self.epoch = 0
         self.gap_discards = 0
         self.duplicate_discards = 0
+        self.stale_epoch_discards = 0
 
     def accept(self, header: wire.PacketHeader) -> bool:
+        epoch = getattr(header, "epoch", 0)
+        if epoch < self.epoch:
+            self.stale_epoch_discards += 1
+            return False
+        if epoch > self.epoch:  # restart: new incarnation, PSNs reset
+            self.epoch = epoch
+            self.expected.clear()
         exp = self.expected.get(header.flow_id, 0)
         if header.psn == exp:
             self.expected[header.flow_id] = exp + 1

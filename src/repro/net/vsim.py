@@ -278,6 +278,7 @@ class PacketStream:
     sizes: np.ndarray  # [P] int64 records per packet
     keys: np.ndarray  # [sum(sizes)] int32
     values: np.ndarray  # [sum(sizes), *lanes]
+    epoch: int = 0  # restart incarnation stamped on every header (§12)
 
     @property
     def n_packets(self) -> int:
@@ -285,7 +286,8 @@ class PacketStream:
 
 
 def stream_from_records(keys, values, *, t0: float, job_id: int,
-                        flow_id: int, level: int, rpp: int) -> PacketStream:
+                        flow_id: int, level: int, rpp: int,
+                        epoch: int = 0) -> PacketStream:
     """A mapper's output stream: ``wire.pack_records`` framing (ceil
     chunks of ``rpp``, trailing EoT, one empty EoT packet for an empty
     stream), all ready at ``t0``."""
@@ -297,12 +299,12 @@ def stream_from_records(keys, values, *, t0: float, job_id: int,
     sizes[-1] = n - rpp * (n_pkts - 1)
     return PacketStream(job_id=job_id, flow_id=flow_id, level=level,
                         times=np.full((n_pkts,), float(t0)),
-                        sizes=sizes, keys=keys, values=values)
+                        sizes=sizes, keys=keys, values=values, epoch=epoch)
 
 
 def streams_from_mapper_records(keys, values, t0s, *, n_mappers: int,
-                                job_id: int, level: int,
-                                rpp: int) -> list[PacketStream]:
+                                job_id: int, level: int, rpp: int,
+                                epoch: int = 0) -> list[PacketStream]:
     """All mapper output streams at once: ``np.array_split`` chunking plus
     per-mapper :func:`stream_from_records`, built from three batched
     arrays instead of ``2 * n_mappers`` numpy calls.  Chunk boundaries,
@@ -327,7 +329,7 @@ def streams_from_mapper_records(keys, values, t0s, *, n_mappers: int,
                      times=times[p_offs[m]:p_offs[m + 1]],
                      sizes=sizes[p_offs[m]:p_offs[m + 1]],
                      keys=keys[offs[m]:offs[m + 1]],
-                     values=values[offs[m]:offs[m + 1]])
+                     values=values[offs[m]:offs[m + 1]], epoch=epoch)
         for m in range(n_mappers)]
 
 
@@ -345,7 +347,8 @@ def stream_from_packets(stream, *, value_template: np.ndarray) -> PacketStream:
     values = (np.concatenate(vs) if vs else value_template[:0])
     return PacketStream(job_id=hdr0.job_id, flow_id=hdr0.flow_id,
                         level=hdr0.level, times=times, sizes=sizes,
-                        keys=keys, values=values)
+                        keys=keys, values=values,
+                        epoch=getattr(hdr0, "epoch", 0))
 
 
 def stream_to_packets(ps: PacketStream) -> list[tuple[float, wire.Packet]]:
@@ -358,7 +361,7 @@ def stream_to_packets(ps: PacketStream) -> list[tuple[float, wire.Packet]]:
         lo, hi = int(offs[i]), int(offs[i + 1])
         hdr = wire.PacketHeader(
             job_id=ps.job_id, flow_id=ps.flow_id, level=ps.level, psn=i,
-            n_records=hi - lo, eot=(i == n - 1))
+            n_records=hi - lo, eot=(i == n - 1), epoch=ps.epoch)
         out.append((float(ps.times[i]),
                     wire.Packet(header=hdr, keys=ps.keys[lo:hi],
                                 values=ps.values[lo:hi])))
@@ -621,6 +624,7 @@ class TierWork:
     t_done: list[float]
     gaps_sw: np.ndarray  # [n_switches] receiver gap discards
     kernel_out: tuple | None = None
+    epoch: int = 0  # restart incarnation stamped on the out streams (§12)
 
 
 def tier_start(streams: list[PacketStream], *, level: int, fanin: int,
@@ -758,7 +762,7 @@ def tier_start(streams: list[PacketStream], *, level: int, fanin: int,
         rows_k=rows_k, rows_v=rows_v, p_counts=p_counts,
         rec_start=rec_start, s_m=s_m, t_m=t_m, sizes_m=sizes_m,
         eot_m=eot_m, links=links, flow=flow, t_done=t_done,
-        gaps_sw=gaps_sw)
+        gaps_sw=gaps_sw, epoch=int(getattr(cfg, "epoch", 0)))
 
 
 #: jitted tier_ingest dispatches issued so far (tests assert the
@@ -967,7 +971,7 @@ def tier_finish(work: TierWork):
         out_streams.append(PacketStream(
             job_id=work.job_id, flow_id=work.first_flow_id + s,
             level=work.level + 1, times=frame_t, sizes=frame_sizes,
-            keys=out_k.astype(np.int32), values=out_v))
+            keys=out_k.astype(np.int32), values=out_v, epoch=work.epoch))
     return nodes, out_streams, work.links, work.flow, work.t_done
 
 

@@ -15,7 +15,13 @@ A packet is an aggregation header riding the usual Ethernet/IP/UDP stack
 pairs.  The aggregation header carries what the switch needs to combine
 exactly once: job id (which tree), tree level, per-flow PSN (the
 transport's dedupe key), record count, and an end-of-task flag that
-triggers the downstream flush.
+triggers the downstream flush.  Under failure recovery (DESIGN.md §12)
+the header also carries the job's ``epoch`` — the restart incarnation
+number — so a receiver can tell a retransmission of the same
+incarnation (duplicate, discard) from a replay after a restart (new
+incarnation, accept from PSN 0).  The epoch rides in header bits the
+12 B aggregation header already reserves (flags/PSN space), so the
+byte-model constants below are unchanged.
 """
 
 from __future__ import annotations
@@ -56,6 +62,7 @@ class PacketHeader:
     psn: int  # per-flow packet sequence number (go-back-N / dedupe key)
     n_records: int
     eot: bool = False  # end-of-task: sender has no more records
+    epoch: int = 0  # restart incarnation (DESIGN.md §12); 0 = never restarted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +97,7 @@ def pack_records(
     start_psn: int = 0,
     records_per_packet: int = RECORDS_PER_PACKET,
     eot: bool = False,
+    epoch: int = 0,
 ) -> list[Packet]:
     """Split a record stream into MTU-framed packets, PSNs consecutive from
     ``start_psn``.  With ``eot`` the last packet carries the end-of-task
@@ -110,7 +118,7 @@ def pack_records(
             header=PacketHeader(
                 job_id=job_id, flow_id=flow_id, level=level,
                 psn=start_psn + i, n_records=hi - lo,
-                eot=eot and i == n_packets - 1),
+                eot=eot and i == n_packets - 1, epoch=epoch),
             keys=keys[lo:hi], values=values[lo:hi]))
     return packets
 

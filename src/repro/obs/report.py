@@ -239,6 +239,50 @@ def _transport_rows(metrics: list) -> list:
     return rows
 
 
+def _fault_rows(metrics: list) -> list:
+    rows = []
+    seen = []
+    for lbl, _ in _series(metrics, "sim.fault.epochs"):
+        key = (lbl.get("job", "?"), lbl.get("engine", "?"))
+        if key in seen:
+            continue
+        seen.append(key)
+        job, engine = key
+        want = {"job": job, "engine": engine}
+        degraded = sorted({int(l.get("level", -1)) for l, _ in
+                           _series(metrics, "sim.fault.degraded")
+                           if (l.get("job"), l.get("engine")) == key})
+        rows.append({
+            "job": job, "engine": engine,
+            "epochs": int(_get(metrics, "sim.fault.epochs", **want) or 0),
+            "jct_s": _get(metrics, "sim.fault.jct_s", **want) or 0.0,
+            "recovery_overhead_s": _get(
+                metrics, "sim.fault.recovery_overhead_s", **want) or 0.0,
+            "n_bypassed": int(_get(metrics, "sim.fault.n_bypassed",
+                                   **want) or 0),
+            "degraded_levels": (", ".join(f"L{l}" for l in degraded)
+                                or "—"),
+        })
+    rows.sort(key=lambda r: -r["jct_s"])
+    return rows
+
+
+def _fault_timeline_rows(metrics: list) -> list:
+    rows = []
+    for lbl, t in _series(metrics, "sim.fault.event_t_s"):
+        rows.append({
+            "job": lbl.get("job", "?"), "engine": lbl.get("engine", "?"),
+            "kind": lbl.get("kind", "?"),
+            "level": int(lbl.get("level", -1)),
+            "switch": int(lbl.get("switch", -1)),
+            "epoch": int(lbl.get("epoch", 0)),
+            "detected_by": lbl.get("detected_by", "?"),
+            "t_detect_s": t,
+        })
+    rows.sort(key=lambda r: (r["job"], r["engine"], r["t_detect_s"]))
+    return rows
+
+
 def _trace_rows(tracer) -> list:
     agg: dict = {}
     for ev in tracer.events:
@@ -320,6 +364,29 @@ def dashboard_markdown(metrics: list, tracer=None,
                      f"{r['timeouts']:.0f} | {r['packets_dropped']:.0f} | "
                      f"{r['gap_discards']:.0f} | "
                      f"{r['duplicate_discards']:.0f} |")
+    else:
+        L.append("_no data_")
+    L += ["", "## Failures & recovery", ""]
+    faults = _fault_rows(metrics)
+    if faults:
+        L += ["| job | engine | epochs | jct_s | recovery_overhead_s | "
+              "bypassed | degraded tiers |", "|---|---|---|---|---|---|---|"]
+        for r in faults:
+            L.append(f"| {r['job']} | {r['engine']} | {r['epochs']} | "
+                     f"{_fmt(r['jct_s'])} | "
+                     f"{_fmt(r['recovery_overhead_s'])} | "
+                     f"{r['n_bypassed']} | {r['degraded_levels']} |")
+        tl = _fault_timeline_rows(metrics)
+        if tl:
+            L += ["", "### Failure timeline", "",
+                  "| job | engine | t_detect_s | kind | level | switch | "
+                  "epoch | detected by |",
+                  "|---|---|---|---|---|---|---|---|"]
+            for r in tl:
+                L.append(f"| {r['job']} | {r['engine']} | "
+                         f"{_fmt(r['t_detect_s'])} | {r['kind']} | "
+                         f"{r['level']} | {r['switch']} | {r['epoch']} | "
+                         f"{r['detected_by']} |")
     else:
         L.append("_no data_")
     if tracer is not None and tracer.events:
@@ -452,6 +519,25 @@ def dashboard_html(metrics: list, tracer=None,
         + _html_table(tr, ["job", "retransmissions", "timeouts",
                            "packets_dropped", "gap_discards",
                            "duplicate_discards"]) + "</section>")
+    faults = _fault_rows(metrics)
+    tl_rows = [dict(r, label=f"{r['kind']} L{r['level']}.s{r['switch']} "
+                             f"({r['detected_by']}, e{r['epoch']})")
+               for r in _fault_timeline_rows(metrics)]
+    sec.append(
+        '<section class="viz-root"><h1>Failures &amp; recovery</h1>'
+        '<p class="sub">epoch-restart recovery per faulted job: total JCT '
+        "including dead incarnations, recovery overhead, and tiers left "
+        "degraded (bypass relays); bars below place each failure verdict "
+        "on the detection timeline</p>"
+        + _html_table(faults, ["job", "engine", "epochs", "jct_s",
+                               "recovery_overhead_s", "n_bypassed",
+                               "degraded_levels"],
+                      {"jct_s": _fmt, "recovery_overhead_s": _fmt})
+        + _html_bars(tl_rows, "label", "t_detect_s",
+                     color_var="--series-2")
+        + _html_table(tl_rows, ["job", "engine", "t_detect_s", "kind",
+                                "level", "switch", "epoch", "detected_by"],
+                      {"t_detect_s": _fmt}) + "</section>")
     if tracer is not None and tracer.events:
         sec.append(
             '<section class="viz-root"><h1>Top spans</h1>'

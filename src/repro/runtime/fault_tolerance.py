@@ -28,13 +28,14 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import statistics
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointCorruptError, CheckpointManager
 
 log = logging.getLogger("repro.runtime")
 
@@ -69,24 +70,184 @@ class StragglerInjector:
         return float(self.delays.get(int(idx), self.default_s))
 
 
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """One scheduled device/link failure at a simulated instant.
+
+    Coordinates are the packet simulator's: ``level`` is the switch tier
+    leaf->root (0 = the tier fed by mappers), ``switch`` the switch index
+    within that tier, ``child`` (for ``link_down``) the child-edge index
+    under that switch.  ``t_s`` is *absolute* simulated time: the event
+    fires in whichever restart epoch's timeline first reaches it, which
+    is what makes a schedule replayable regardless of how many restarts
+    precede it (DESIGN.md §12).
+    """
+
+    kind: str  # "switch_crash" | "link_down" | "table_wipe"
+    t_s: float
+    level: int
+    switch: int
+    child: int | None = None  # link_down only; None = every child edge
+    duration_s: float = 0.0  # link_down window length
+
+    KINDS = ("switch_crash", "link_down", "table_wipe")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(f"unknown failure kind {self.kind!r}; "
+                             f"choose from {self.KINDS}")
+        if self.t_s < 0 or self.duration_s < 0:
+            raise ValueError("failure times/durations must be >= 0")
+        if self.kind == "link_down" and self.duration_s <= 0:
+            raise ValueError("link_down needs a positive duration_s")
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureInjector(StragglerInjector):
+    """Deterministic, replayable failure schedule (DESIGN.md §12).
+
+    Generalizes :class:`StragglerInjector`: the inherited ``delays`` map
+    still serves as a ``mapper_delay`` / ``delay_hook`` (per-index start
+    delays), and ``events`` adds device/link failures at simulated times
+    — switch crashes (table state lost, position dead until repaired
+    around), transient link-down windows, and table-memory wipes (state
+    lost, switch survives).  The schedule is plain data: replaying the
+    same injector over the same job reproduces the same verdicts,
+    epochs, and delivered table bit for bit.
+
+    ``from_seed`` derives a schedule from a PRNG seed so property tests
+    and benches can sweep failure counts without hand-writing events;
+    the draw is a pure function of the seed (``numpy`` Generator), never
+    of wall clock.
+    """
+
+    events: tuple[FailureEvent, ...] = ()
+
+    def events_for(self, level: int, switch: int) -> tuple[FailureEvent, ...]:
+        return tuple(e for e in self.events
+                     if e.level == level and e.switch == switch)
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+    @classmethod
+    def from_seed(
+        cls,
+        seed: int,
+        *,
+        n_events: int,
+        fanins: Sequence[int],
+        t_max_s: float,
+        kinds: Sequence[str] = FailureEvent.KINDS,
+        down_s: float = 0.0,
+        delays: dict[int, float] | None = None,
+    ) -> "FailureInjector":
+        """A seeded random schedule over a ``fanins`` tree: each event
+        picks a kind, a tier, a switch in it, a child edge, and a fire
+        time in ``[0, t_max_s)``.  ``down_s`` scales link-down windows
+        (default: ``t_max_s / 4``)."""
+        rng = np.random.default_rng(seed)
+        fanins = tuple(int(f) for f in fanins)
+        n_levels = len(fanins)
+        if down_s <= 0:
+            down_s = t_max_s / 4.0
+        events = []
+        for _ in range(int(n_events)):
+            kind = str(rng.choice(list(kinds)))
+            level = int(rng.integers(n_levels))
+            n_switches = int(np.prod(fanins[level + 1:], dtype=np.int64))
+            switch = int(rng.integers(n_switches))
+            child = int(rng.integers(fanins[level]))
+            events.append(FailureEvent(
+                kind=kind, t_s=float(rng.uniform(0.0, t_max_s)),
+                level=level, switch=switch,
+                child=child if kind == "link_down" else None,
+                duration_s=float(rng.uniform(0.5, 1.5) * down_s)
+                if kind == "link_down" else 0.0))
+        return cls(delays=dict(delays or {}),
+                   events=tuple(sorted(events, key=lambda e: e.t_s)))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """Detection and restart knobs of the failure-recovery runtime.
+
+    Detection is timeout-driven (DESIGN.md §12): on an edge with an
+    active fault the sender's RTO backs off ``backoff``x per consecutive
+    no-progress timeout (capped at ``max_timeout_s``) and after
+    ``max_timeouts`` of them the peer is declared dead; a parent whose
+    child stream was cut without end-of-task declares the child dead
+    ``liveness_timeout_s`` after its last arrival (default: derived from
+    the link's conservative RTO).  ``restart_delay_s`` is the control
+    plane's pause between a verdict and the next epoch's mappers
+    replaying; ``max_epochs`` bounds the restart cascade (a schedule
+    that keeps killing switches cannot loop forever).
+    """
+
+    backoff: float = 2.0
+    max_timeouts: int = 5
+    max_timeout_s: float | None = None
+    liveness_timeout_s: float | None = None
+    restart_delay_s: float = 0.0
+    max_epochs: int = 8
+
+    def __post_init__(self):
+        if self.backoff < 1.0:
+            raise ValueError("backoff must be >= 1")
+        if self.max_timeouts < 1:
+            raise ValueError("max_timeouts must be >= 1")
+        if self.max_epochs < 1:
+            raise ValueError("max_epochs must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureVerdict:
+    """One detected failure: who died, when the runtime knew, and how.
+
+    ``t_detect_s`` is absolute simulated time; ``detected_by`` is
+    ``"sender"`` (a child's retry budget ran dry — transport's
+    ``PeerDeadError``), ``"parent"`` (liveness timeout on an EoT-less
+    truncated uplink), or ``"self"`` (a table wipe is locally visible
+    the instant it happens).
+    """
+
+    kind: str  # FailureEvent kind (or "link_down" false-positive crash)
+    level: int
+    switch: int
+    epoch: int  # the epoch that died
+    t_detect_s: float
+    detected_by: str  # "sender" | "parent" | "self"
+
+
 class StragglerMonitor:
-    """Online per-step latency EWMA with outlier detection."""
+    """Online per-step latency EWMA with outlier detection.
+
+    The first ``warmup`` observations are buffered and the EWMA is seeded
+    from their *median* once the window fills.  Seeding from the first
+    observation alone would bake the step-0 jit compile time into the
+    baseline — a 10x-slow first step then masks real stragglers until the
+    decay washes it out, many steps later (the regression test pins this).
+    """
 
     def __init__(self, factor: float = 3.0, decay: float = 0.9, warmup: int = 3):
         self.factor = factor
         self.decay = decay
-        self.warmup = warmup
+        self.warmup = max(1, warmup)
         self.ewma: Optional[float] = None
         self.events: list[tuple[int, float, float]] = []  # (step, t, ewma)
         self._seen = 0
+        self._warmup_dts: list[float] = []
 
     def observe(self, step: int, dt: float) -> bool:
         """Returns True if this step is flagged as a straggler."""
         self._seen += 1
-        if self.ewma is None:
-            self.ewma = dt
+        if self._seen <= self.warmup:
+            self._warmup_dts.append(dt)
+            if self._seen == self.warmup:
+                self.ewma = statistics.median(self._warmup_dts)
             return False
-        flagged = self._seen > self.warmup and dt > self.factor * self.ewma
+        flagged = dt > self.factor * self.ewma
         if flagged:
             self.events.append((step, dt, self.ewma))
             log.warning("straggler: step %d took %.3fs (EWMA %.3fs)", step, dt, self.ewma)
@@ -135,13 +296,26 @@ class TrainLoop:
                 self.start_step = manifest["step"] + 1
                 log.info("resumed from checkpoint step %d", manifest["step"])
                 return
-            except Exception as e:  # corrupt checkpoint -> try the previous
-                log.warning("checkpoint step %d unusable (%s); trying previous", step, e)
+            except CheckpointCorruptError as e:
+                # VERIFIED corruption (checksum/format mismatch from the
+                # manager): this checkpoint can never restore — drop it
+                # and fall back to the previous one
+                log.warning("checkpoint step %d corrupt (%s); trying previous", step, e)
                 import shutil, os
 
                 shutil.rmtree(
                     os.path.join(self.cfg.ckpt_dir, f"step_{step:08d}"), ignore_errors=True
                 )
+            except Exception as e:
+                # anything else — a transient OSError, a mesh/shape
+                # mismatch (KeyError/ValueError from unflatten_like) — may
+                # be recoverable or operator error; deleting the
+                # checkpoint would destroy good state, so surface it
+                log.error(
+                    "checkpoint step %d failed to restore (%s: %s); "
+                    "not deleting — fix the environment or remove the "
+                    "checkpoint manually", step, type(e).__name__, e)
+                raise
 
     def run(self, until: Optional[int] = None) -> Any:
         end = min(until or self.cfg.total_steps, self.cfg.total_steps)

@@ -6,8 +6,11 @@ import shutil
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.runtime.fault_tolerance import TrainLoop, TrainLoopConfig
+from repro.checkpoint import CheckpointManager
+from repro.runtime.fault_tolerance import (StragglerMonitor, TrainLoop,
+                                           TrainLoopConfig)
 
 
 def _make_loop(ckpt_dir, total=20, every=5, state=None, delay_hook=None):
@@ -63,6 +66,47 @@ def test_corrupt_checkpoint_falls_back(tmp_path):
     assert loop2.start_step == 10  # fell back to the previous checkpoint (9)
     final = loop2.run()
     assert float(final["w"]) == _expected_w(20)
+
+
+def test_transient_restore_error_raises_and_keeps_checkpoints(
+        tmp_path, monkeypatch):
+    """A restore failure that is NOT verified corruption (here: a
+    transient OSError) must surface, not silently rmtree good state —
+    only ``CheckpointCorruptError`` from the manager licenses deletion."""
+    loop1 = _make_loop(str(tmp_path))
+    loop1.run(until=12)
+    dirs_before = sorted(d for d in os.listdir(tmp_path)
+                         if d.startswith("step_"))
+
+    def flaky_restore(self, state, step):
+        raise OSError("NFS mount went away")
+
+    monkeypatch.setattr(CheckpointManager, "restore", flaky_restore)
+    with pytest.raises(OSError, match="NFS"):
+        _make_loop(str(tmp_path))
+    # every checkpoint survived the failed resume
+    assert sorted(d for d in os.listdir(tmp_path)
+                  if d.startswith("step_")) == dirs_before
+    # and once the "environment is fixed", the same state restores fine
+    monkeypatch.undo()
+    loop2 = _make_loop(str(tmp_path))
+    assert loop2.start_step == 12
+
+
+def test_straggler_monitor_seeds_ewma_from_warmup_median():
+    """A 10x-slow step 0 (jit compile) must not poison the baseline: the
+    EWMA seeds from the median of the warmup window, so a genuinely slow
+    later step is flagged immediately."""
+    mon = StragglerMonitor(factor=3.0, decay=0.9, warmup=3)
+    assert not mon.observe(0, 10.0)  # compile-dominated first step
+    assert not mon.observe(1, 1.0)
+    assert not mon.observe(2, 1.1)
+    assert mon.ewma == pytest.approx(1.1)  # median, not 10.0
+    assert not mon.observe(3, 1.05)
+    assert mon.observe(4, 9.0)  # would NOT trip a first-obs-seeded EWMA
+    assert [e[0] for e in mon.events] == [4]
+    # stragglers don't feed back into the baseline
+    assert mon.ewma < 1.2
 
 
 def test_straggler_events_logged(tmp_path):

@@ -51,7 +51,8 @@ import shutil
 import sys
 
 #: files the gate covers, with their metric extractors (see below)
-GATED = ("BENCH_fpe.json", "BENCH_dataplane.json", "BENCH_sim.json")
+GATED = ("BENCH_fpe.json", "BENCH_dataplane.json", "BENCH_sim.json",
+         "BENCH_faults.json")
 
 
 def _load_rows(path: pathlib.Path) -> list[dict]:
@@ -114,10 +115,30 @@ def sim_metrics(rows: list[dict]) -> dict[str, tuple[float, str]]:
     return out
 
 
+def faults_metrics(rows: list[dict]) -> dict[str, tuple[float, str]]:
+    """Failure-recovery cells (DESIGN.md §12): exactly-once and engine
+    parity are semantic (the recovery either preserved the table bit for
+    bit or the cell is broken), the epoch count is semantic (a schedule
+    suddenly needing more restarts means detection moved), and the
+    degraded reduction ratio carries the absolute host-only floor — a
+    bypassed cascade must never move more reducer bytes than pure
+    forwarding, no matter what the baseline says."""
+    out = {}
+    for r in rows:
+        key = r["cell"]
+        out[f"faults:{key}:exactly_once"] = (r["exactly_once"], "semantic")
+        out[f"faults:{key}:parity"] = (r["parity"], "semantic")
+        out[f"faults:{key}:epochs"] = (r["epochs"], "semantic")
+        out[f"faults:{key}:reduction"] = (
+            r["reduction"], f"floor:{r['reduction_floor']}")
+    return out
+
+
 EXTRACTORS = {
     "BENCH_fpe.json": fpe_metrics,
     "BENCH_dataplane.json": dataplane_metrics,
     "BENCH_sim.json": sim_metrics,
+    "BENCH_faults.json": faults_metrics,
 }
 
 #: the schema gate (DESIGN.md §11): per gated file, the row fields the
@@ -138,6 +159,9 @@ ROW_SCHEMAS = {
         if r.get("cell") == "obs_overhead" else
         {"cell", "switch_steps", "parity",
          "node_steps_per_s", "vec_steps_per_s", "speedup"}),
+    "BENCH_faults.json": lambda r: {
+        "cell", "n_failures", "epochs", "jct_faulted_s", "jct_penalty_s",
+        "reduction", "reduction_floor", "exactly_once", "parity"},
 }
 
 
