@@ -1,0 +1,328 @@
+"""Churn benchmark: online incremental admission vs the offline
+full-replan oracle (DESIGN.md §13).
+
+A Poisson trace of job arrivals/departures (>= 100 jobs over an 8-pod
+fabric in the gated cell) is driven twice:
+
+  * **online** — one ``OnlineController``: each arrival costs a single
+    placement search on the residual switch-table capability (plus the
+    occasional preemption repair / post-departure re-expansion);
+  * **oracle** — the offline full-replan bound: at *every* event it
+    re-places *every* active job from scratch, highest value first, with
+    no incremental constraint (no stale placements, no preemption
+    collateral, no grant it cannot revisit).
+
+Both legs are scored on the same clock: ``*_scarce_mb`` is the
+time-averaged scarce-uplink byte load of the active placements, and
+``placements scored`` (the planner's own ``candidates_scored_total``
+counter) is the placement work.  The CI gate holds two ratios:
+
+  * ``oracle_to_online`` (floor 0.90) — the online controller's
+    scarce-link load stays within ~10% of the oracle's;
+  * ``work_speedup`` (floor 10.0) — at >= 10x fewer candidate
+    placements scored than the replan-the-world oracle.
+
+Two packet-level cross-checks ride each row as semantic cells:
+``admit_parity`` (a mid-run admission joining the lockstep batch gives
+bit-identical results on the node and vectorized engines) and
+``evict_exactly_once`` (a value-based eviction rendered as failure
+events and replayed through the epoch-restart driver under packet loss
+still delivers the aggregate table bit-identically to a clean run).
+
+    PYTHONPATH=src python benchmarks/bench_churn.py
+    PYTHONPATH=src python benchmarks/bench_churn.py --smoke \
+        --out benchmarks/out/BENCH_churn.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:  # package import (benchmarks.run) or standalone CLI
+    from benchmarks._util import write_bench_json
+except ImportError:  # `python benchmarks/bench_*.py`: sys.path[0] is here
+    from _util import write_bench_json
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "out",
+                           "BENCH_churn.json")
+
+#: online scarce-link load within ~10% of the offline full-replan oracle
+ORACLE_TO_ONLINE_FLOOR = 0.90
+#: and at >= 10x less placement work (candidate placements scored)
+WORK_SPEEDUP_FLOOR = 10.0
+
+TENANTS = (("t0", 2.0), ("t1", 1.0), ("t2", 1.0))
+
+
+def _scored() -> float:
+    from repro.obs import metrics as obs_metrics
+
+    return sum(v for _, v in obs_metrics.get_registry().find(
+        "planner.placement.candidates_scored_total"))
+
+
+def poisson_trace(n_jobs: int, *, rng, arrival_rate: float = 1.0,
+                  mean_duration: float = 12.0) -> list[tuple]:
+    """``(time, "arrive"/"depart", job_id, request)`` events, time-sorted.
+    Exponential inter-arrivals and service times; per-job variety/pairs/
+    value/tenant drawn from the same seeded stream."""
+    from repro.core.controller import OnlineJobRequest
+
+    events = []
+    t = 0.0
+    for j in range(n_jobs):
+        t += rng.exponential(1.0 / arrival_rate)
+        dur = rng.exponential(mean_duration)
+        tenant, _ = TENANTS[int(rng.integers(len(TENANTS)))]
+        req = OnlineJobRequest(
+            job_id=j,
+            expected_pairs=int(rng.integers(500, 4000)),
+            key_variety=int(rng.integers(64, 257)),
+            tenant=tenant,
+            value=float(rng.integers(1, 6)),
+        )
+        events.append((t, "arrive", j, req))
+        events.append((t + dur, "depart", j, req))
+    events.sort(key=lambda e: (e[0], e[1] == "arrive", e[2]))
+    return events
+
+
+def _oracle_replan(ft, active: dict, placeable) -> float:
+    """The offline full-replan bound for one instant: the whole active
+    set re-placed from scratch, highest value first, each job granted
+    table greedily from what the better jobs left (the controller's own
+    grant rule, minus every incremental constraint — no stale
+    placements, no preemption collateral, no grant it cannot revisit)."""
+    from repro.core.planner import FAT_TREE_TIERS, place_aggregation_tree
+
+    residual = {t: ft.switch_table(t) for t in placeable}
+    total = 0.0
+    for req in sorted(active.values(),
+                      key=lambda r: (-r.value, r.job_id)):
+        caps = {t: min(req.key_variety, residual[t]) for t in placeable}
+        ft_r = dataclasses.replace(
+            ft, table_pairs=0, tier_table_pairs=tuple(
+                (t, caps.get(t, 0)) for t in FAT_TREE_TIERS))
+        p = place_aggregation_tree(
+            ft_r, per_host_pairs=req.expected_pairs,
+            key_variety=req.key_variety)
+        for t in p.tiers:
+            residual[t] -= caps[t]
+        total += p.scarce_uplink_bytes
+    return total
+
+
+def _check_admit_parity(seed: int) -> bool:
+    """A job admitted mid-run (between lockstep levels) must leave every
+    job's delivered table and JCT bit-identical across engines."""
+    from repro.core import dataplane
+    from repro.core import reduction_model as rm
+    from repro.net import simulate
+    from repro.net import sim as netsim
+
+    def spec(i, cfg):
+        n = 64
+        keys = rm.zipf_keys(n, 32, skew=0.9, seed=seed + i).astype(np.int32)
+        plan = dataplane.CascadePlan(op="sum", levels=(
+            dataplane.LevelSpec(capacity=16),
+            dataplane.LevelSpec(capacity=16)))
+        return netsim.JobSpec(
+            keys=keys, values=np.ones((n,), np.float32), fanins=(4, 2),
+            plan=plan, cfg=cfg, job_id=i, tag=f"churn-adm{i}")
+
+    outs = {}
+    for engine in ("node", "vectorized"):
+        cfg = netsim.NetConfig(seed=seed, engine=engine)
+        base = [spec(0, cfg), spec(1, cfg)]
+        outs[engine] = simulate(base, admissions=[(1, spec(2, cfg)),
+                                                  (3, spec(3, cfg))])
+    a, b = outs["node"], outs["vectorized"]
+    return (len(a) == len(b)
+            and all(x.delivered_table() == y.delivered_table()
+                    and x.jct_s == y.jct_s for x, y in zip(a, b)))
+
+
+def _check_evict_exactly_once(seed: int) -> bool:
+    """Drive a real controller eviction through the epoch-restart driver
+    under packet loss: the victim degrades mid-run (its evicted tier's
+    switches die), yet the delivered table matches a clean run bit for
+    bit."""
+    from repro.core import reduction_model as rm
+    from repro.core.controller import OnlineController, OnlineJobRequest
+    from repro.core.planner import FatTreeTopology
+    from repro.net import simulate
+    from repro.net import sim as netsim
+    from repro.runtime.fault_tolerance import FailureInjector
+
+    ft = FatTreeTopology(pods=2, tors_per_pod=2, hosts_per_tor=2,
+                         table_pairs=64)
+    ctl = OnlineController(ft)
+    victim = ctl.admit(OnlineJobRequest(job_id=0, expected_pairs=64,
+                                        key_variety=64, value=1.0))
+    ctl.admit(OnlineJobRequest(job_id=1, expected_pairs=64, key_variety=64,
+                               value=5.0))
+    assert ctl.evictions, "high-value arrival should have evicted job 0"
+
+    n = ft.n_hosts * 48
+    keys = rm.zipf_keys(n, 64, skew=0.99, seed=seed).astype(np.int32)
+    vals = np.ones((n,), np.float32)
+    clean = simulate(ft, keys, vals, placement=victim.placement,
+                     cfg=netsim.NetConfig(seed=seed))
+    events = ctl.eviction_failure_events(ctl.evictions[0],
+                                         t_s=clean.jct_s * 0.02)
+    faulted = simulate(
+        ft, keys, vals, placement=victim.placement,
+        faults=FailureInjector({}, events=events),
+        cfg=netsim.NetConfig(seed=seed, loss_rate=0.05))
+    return faulted.delivered_table() == clean.delivered_table()
+
+
+def run_config(*, n_jobs: int = 120, pods: int = 8, tors_per_pod: int = 4,
+               hosts_per_tor: int = 4, table_pairs: int = 2048,
+               arrival_rate: float = 1.0, mean_duration: float = 12.0,
+               seed: int = 0) -> dict:
+    """One trace cell: online controller vs full-replan oracle."""
+    from repro.core.controller import OnlineController
+    from repro.core.planner import FatTreeTopology
+
+    ft = FatTreeTopology(pods=pods, tors_per_pod=tors_per_pod,
+                         hosts_per_tor=hosts_per_tor,
+                         table_pairs=table_pairs)
+    rng = np.random.default_rng(seed)
+    events = poisson_trace(n_jobs, rng=rng, arrival_rate=arrival_rate,
+                           mean_duration=mean_duration)
+    ctl = OnlineController(ft, tenant_weights=dict(TENANTS))
+    placeable = ctl.placeable_tiers()
+
+    t0 = time.perf_counter()
+    active: dict[int, object] = {}
+    t_prev = events[0][0]
+    online_int = oracle_int = 0.0  # time-integrated scarce bytes
+    peak_active = peak_degraded = 0
+    oracle_scored0 = None
+    online_scarce = oracle_scarce = 0.0
+    oracle_work = 0.0
+    for t, kind, jid, req in events:
+        dt = t - t_prev
+        online_int += online_scarce * dt
+        oracle_int += oracle_scarce * dt
+        t_prev = t
+        if kind == "arrive":
+            ctl.admit(req)
+            active[jid] = req
+        else:
+            ctl.release(jid)
+            active.pop(jid, None)
+        online_scarce = ctl.total_scarce_bytes()
+        s0 = _scored()
+        oracle_scarce = _oracle_replan(ft, active, placeable)
+        oracle_work += _scored() - s0
+        rep = ctl.report()
+        peak_active = max(peak_active, rep.n_active)
+        peak_degraded = max(peak_degraded, rep.n_degraded)
+    wall_us = (time.perf_counter() - t0) * 1e6
+
+    horizon = events[-1][0] - events[0][0]
+    online_mb = online_int / horizon / 2**20
+    oracle_mb = oracle_int / horizon / 2**20
+    # lower scarce-link load is better; the oracle is the bound, so the
+    # ratio is <= ~1 and the floor holds online within ~10% of it
+    oracle_to_online = oracle_mb / online_mb if online_mb else 1.0
+    work_speedup = oracle_work / max(ctl.candidates_scored_total, 1)
+    admit_parity = _check_admit_parity(seed)
+    evict_once = _check_evict_exactly_once(seed)
+
+    rep = ctl.report()
+    assert rep.n_active == 0, "trace should drain to an empty fabric"
+    assert oracle_to_online >= ORACLE_TO_ONLINE_FLOOR, (
+        f"online scarce load {online_mb:.2f}MiB strays >10% from the "
+        f"oracle's {oracle_mb:.2f}MiB (ratio {oracle_to_online:.3f})")
+    assert work_speedup >= WORK_SPEEDUP_FLOOR, (
+        f"online planned only {work_speedup:.1f}x cheaper than the "
+        f"replan-the-world oracle")
+    assert admit_parity, "mid-run admission diverged across engines"
+    assert evict_once, "eviction under loss broke exactly-once delivery"
+    return {
+        "cell": f"p{pods}/j{n_jobs}",
+        "n_jobs": n_jobs,
+        "pods": pods,
+        "n_events": len(events),
+        "peak_active": peak_active,
+        "peak_degraded": peak_degraded,
+        "evictions": len(ctl.evictions),
+        "expansions": len(ctl.expansions),
+        "online_scarce_mb": round(online_mb, 3),
+        "oracle_scarce_mb": round(oracle_mb, 3),
+        "oracle_to_online": round(oracle_to_online, 4),
+        "oracle_to_online_floor": ORACLE_TO_ONLINE_FLOOR,
+        "online_scored": int(ctl.candidates_scored_total),
+        "oracle_scored": int(oracle_work),
+        "work_speedup": round(work_speedup, 2),
+        "work_speedup_floor": WORK_SPEEDUP_FLOOR,
+        "admit_parity": 1.0,
+        "evict_exactly_once": 1.0,
+        "wall_us": round(wall_us, 1),
+    }
+
+
+def sweep(*, n_jobs=(40, 120), pods: int = 8, seed: int = 0,
+          **kw) -> list[dict]:
+    return [run_config(n_jobs=n, pods=pods, seed=seed, **kw)
+            for n in n_jobs]
+
+
+def smoke_rows() -> list[dict]:
+    """The gated cell: >= 100 Poisson jobs over an 8-pod fabric, plus a
+    smaller 4-pod shape check (the CI job)."""
+    return [run_config(n_jobs=40, pods=4, seed=0),
+            run_config(n_jobs=120, pods=8, seed=0)]
+
+
+def write_out(rows: list[dict], out_path: str) -> None:
+    write_bench_json(rows, out_path, bench="churn")
+
+
+def print_rows(rows: list[dict]) -> None:
+    print(f"{'cell':<10} {'events':>6} {'peak':>5} {'evict':>5} "
+          f"{'expand':>6} {'onl_mb':>8} {'ora_mb':>8} {'ratio':>6} "
+          f"{'speedup':>8}")
+    for r in rows:
+        print(f"{r['cell']:<10} {r['n_events']:>6} {r['peak_active']:>5} "
+              f"{r['evictions']:>5} {r['expansions']:>6} "
+              f"{r['online_scarce_mb']:>8.2f} {r['oracle_scarce_mb']:>8.2f} "
+              f"{r['oracle_to_online']:>6.3f} {r['work_speedup']:>7.1f}x")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-jobs", default="40,120")
+    ap.add_argument("--pods", type=int, default=8)
+    ap.add_argument("--table-pairs", type=int, default=2048)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="the gated >=100-job 8-pod cell + a 4-pod shape "
+                         "check (the CI job)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows = smoke_rows()
+    else:
+        rows = sweep(n_jobs=tuple(int(x) for x in args.n_jobs.split(",")),
+                     pods=args.pods, table_pairs=args.table_pairs,
+                     seed=args.seed)
+    print_rows(rows)
+    write_out(rows, args.out)
+
+
+if __name__ == "__main__":
+    main()

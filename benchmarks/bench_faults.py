@@ -92,8 +92,10 @@ def run_config(fanins, n_failures: int, *, variety: int = 256,
                            records_per_packet=records_per_packet)
     kw = dict(fanins=fanins, plan=plan)
 
-    clean = netsim.simulate_job(keys, vals, cfg=cfg, **kw)
-    host = netsim.simulate_job(keys, vals, cfg=cfg, aggregate=False, **kw)
+    from repro.net import simulate
+    clean = simulate(netsim.JobSpec(keys=keys, values=vals, cfg=cfg, **kw))
+    host = simulate(netsim.JobSpec(keys=keys, values=vals, cfg=cfg,
+                                   aggregate=False, **kw))
     host_red_bytes = host.link_stats["reducer"]["bytes"]
     inj = FailureInjector({}, events=_schedule(n_failures, fanins,
                                                clean.jct_s))
@@ -101,9 +103,11 @@ def run_config(fanins, n_failures: int, *, variety: int = 256,
     runs = {}
     cell = f"{'x'.join(str(f) for f in fanins)}/f{n_failures}"
     for engine in ("node", "vectorized"):
-        runs[engine] = netsim.simulate_job_with_faults(
-            keys, vals, injector=inj, tag=f"faults:{cell}",
-            cfg=dataclasses.replace(cfg, engine=engine), **kw)
+        runs[engine] = simulate(
+            netsim.JobSpec(keys=keys, values=vals, tag=f"faults:{cell}",
+                           cfg=dataclasses.replace(cfg, engine=engine),
+                           **kw),
+            faults=inj)
     wall_us = (time.perf_counter() - t0) * 1e6
     fn, fv = runs["node"], runs["vectorized"]
 

@@ -64,9 +64,10 @@ def run_config(fanins, loss_rate: float, variety: int, *,
     wall_us = (time.perf_counter() - t0) * 1e6
     sw, _ = jct["_results"]
     if check:  # exactly-once cross-check vs the lossless network
-        lossless = sw if loss_rate == 0.0 else netsim.simulate_job(
-            keys, vals, fanins=fanins, plan=plan,
-            cfg=dataclasses.replace(cfg, loss_rate=0.0))
+        from repro.net import simulate
+        lossless = sw if loss_rate == 0.0 else simulate(netsim.JobSpec(
+            keys=keys, values=vals, fanins=fanins, plan=plan,
+            cfg=dataclasses.replace(cfg, loss_rate=0.0)))
         got = sw.delivered_table()
         want = lossless.delivered_table()
         assert got.keys() == want.keys(), "loss changed the delivered key set"

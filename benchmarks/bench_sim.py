@@ -19,7 +19,7 @@ exists for:
                           ``tools/check_bench_regression.py``;
   * ``multijob``        — a plan_all-admitted 4-job batch: the node leg
                           steps jobs one by one, the vectorized leg runs
-                          ONE ``simulate_job_plans`` batch whose
+                          ONE batched ``simulate([plans], ...)`` whose
                           same-signature tiers share kernel dispatches
                           (floor-gated >= 4x);
   * ``fat64_lossy``     — 64 pods / 8192 mappers, full-tree aggregation
@@ -135,9 +135,10 @@ def jct_smoke_cell() -> dict:
     cfg = netsim.NetConfig(records_per_packet=rpp, exact_stream=True)
 
     def run(engine):
-        return netsim.simulate_job(
-            keys, vals, fanins=fanins, plan=plan,
-            cfg=dataclasses.replace(cfg, engine=engine))
+        from repro.net import simulate
+        return simulate(netsim.JobSpec(
+            keys=keys, values=vals, fanins=fanins, plan=plan,
+            cfg=dataclasses.replace(cfg, engine=engine)))
 
     return _cell("jct_smoke", run, fanins=list(fanins), n_mappers=4,
                  records=n, records_per_packet=rpp, policy="-")
@@ -165,20 +166,21 @@ def _fat_tree_cell(name: str, *, pods: int, tors_per_pod: int,
     cfg = netsim.NetConfig(records_per_packet=rpp, exact_stream=True,
                            loss_rate=loss_rate, seed=1, window=8)
 
+    from repro.net import simulate
+
     def run(engine):
-        return netsim.simulate_fat_tree_job(
-            ft, keys, vals, placement=placement,
-            cfg=dataclasses.replace(cfg, engine=engine))
+        return simulate(ft, keys, vals, placement=placement,
+                        cfg=dataclasses.replace(cfg, engine=engine))
 
     def node_warmup():
         # compile the node path's per-packet kernels for THIS cell's
         # (rpp, capacity) shapes without paying a full node leg
-        netsim.simulate_job(
-            keys[:4 * rpp], vals[:4 * rpp], fanins=(2, 2),
+        simulate(netsim.JobSpec(
+            keys=keys[:4 * rpp], values=vals[:4 * rpp], fanins=(2, 2),
             plan=dataplane.CascadePlan(op="sum", levels=(
                 dataplane.LevelSpec(capacity=table_pairs),
                 dataplane.LevelSpec(capacity=table_pairs))),
-            cfg=dataclasses.replace(cfg, engine="node"))
+            cfg=dataclasses.replace(cfg, engine="node")))
 
     return _cell(name, run, floor=floor, node_warmup=node_warmup,
                  pods=pods, n_mappers=ft.n_hosts, records=n,
@@ -190,7 +192,7 @@ def multijob_cell(*, n_jobs: int = 4, floor: float | None = None) -> dict:
     """A ``JobScheduler.plan_all`` batch through both engines.
 
     The node leg steps each job alone (the node engine has no batching);
-    the vectorized leg runs the whole batch as ONE ``simulate_job_plans``
+    the vectorized leg runs the whole batch as ONE batched ``simulate``
     call, so same-depth tiers sharing a kernel-static signature collapse
     into one ``tier_ingest`` dispatch each (DESIGN.md §10).  Parity is
     per-job bit-equality between the legs.
@@ -215,9 +217,9 @@ def multijob_cell(*, n_jobs: int = 4, floor: float | None = None) -> dict:
     cfg = netsim.NetConfig(records_per_packet=16, exact_stream=True)
 
     def run(engine):
-        return netsim.simulate_job_plans(
-            jplans, keys_list, vals_list,
-            cfg=dataclasses.replace(cfg, engine=engine))
+        from repro.net import simulate
+        return simulate(jplans, keys_list, vals_list,
+                        cfg=dataclasses.replace(cfg, engine=engine))
 
     rvs = run("vectorized")  # warm the tier kernel's jit cache
     run("node")
@@ -288,8 +290,8 @@ def obs_overhead_cell(base_row: dict, *, reps: int = 2) -> dict:
                            engine="vectorized")
 
     def run():
-        return netsim.simulate_fat_tree_job(ft, keys, vals,
-                                            placement=placement, cfg=cfg)
+        from repro.net import simulate
+        return simulate(ft, keys, vals, placement=placement, cfg=cfg)
 
     def best_leg():
         res, best_us = None, float("inf")

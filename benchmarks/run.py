@@ -36,7 +36,7 @@ for _p in (_REPO, os.path.join(_REPO, "src")):
 
 #: every smoke suite the consolidated CI step runs: (name, module, out file)
 SMOKE_SUITES = ("multijob", "dataplane", "fpe", "jct", "placement", "sim",
-                "faults")
+                "faults", "churn")
 
 
 def run_smoke(out_dir: str, *, ci: bool = False) -> dict:

@@ -101,8 +101,10 @@ def main():
     # loss resilience: 1% packet loss, go-back-N recovery, PSN dedupe —
     # the delivered word counts stay exact while JCT pays for retransmits
     lossy_cfg = dataclasses.replace(net_cfg, loss_rate=0.01, seed=7)
-    lossy = netsim.simulate_job(keys, vals, fanins=msg.fanins, plan=cascade,
-                                cfg=lossy_cfg, axes=tree.axes)
+    from repro.net import simulate
+    lossy = simulate(netsim.JobSpec(keys=keys, values=vals,
+                                    fanins=msg.fanins, plan=cascade,
+                                    cfg=lossy_cfg, axes=tree.axes))
     still_exact = all(
         abs(lossy.delivered_table().get(k, 0.0) - c) < 1e-3
         for k, c in enumerate(want) if c)

@@ -11,12 +11,15 @@ Public surface:
   collectives     — flat / tree / compressed gradient exchanges (shard_map)
   planner         — the controller: job config, memory partitioning, plans,
                     and the multi-job congestion-aware JobScheduler
+  controller      — OnlineController: incremental multi-tenant admission
+                    under churn, and the plan() front door (DESIGN.md §13)
 """
 
 from . import (
     aggops,
     collectives,
     compressor,
+    controller,
     dataplane,
     kvagg,
     planner,
@@ -25,6 +28,7 @@ from . import (
 )
 from .aggops import AggOp
 from .collectives import GradAggMode
+from .controller import OnlineController, OnlineJobRequest, plan
 from .dataplane import CascadePlan, LevelSpec, run_cascade
 from .planner import (
     ExchangePlan,
@@ -38,6 +42,7 @@ __all__ = [
     "aggops",
     "collectives",
     "compressor",
+    "controller",
     "dataplane",
     "kvagg",
     "planner",
@@ -50,7 +55,10 @@ __all__ = [
     "JobScheduler",
     "LaunchRequest",
     "LevelSpec",
+    "OnlineController",
+    "OnlineJobRequest",
     "Topology",
+    "plan",
     "plan_grad_exchange",
     "run_cascade",
 ]

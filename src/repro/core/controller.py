@@ -1,0 +1,605 @@
+"""Online multi-tenant admission controller for the fat-tree fabric
+(DESIGN.md §13).
+
+The :class:`~repro.core.planner.JobScheduler` plans a *static* batch: it
+re-scores the world on every admit.  A datacenter fabric sees Poisson
+arrivals and departures from many tenants, and re-planning every active
+job per event costs ``O(n_active)`` placement searches each time.  The
+:class:`OnlineController` admits each arrival *incrementally*:
+
+* **residual-capacity placement** — one ``place_aggregation_tree``
+  search per arrival, on a copy of the fat-tree whose per-tier
+  ``table_pairs`` are capped at what the active jobs left over (the
+  SOAR bounded-capability model applied to the *residual*, not the
+  whole switch);
+* **weighted max-min fairness** — tenants share the scarce uplink;
+  :meth:`fair_shares` water-fills the scarce-byte budget across tenants
+  by weight, and tenants above their share are first in line when
+  capacity must be reclaimed;
+* **value-based preemption** — when a higher-value job arrives and a
+  placeable tier has no residual table at all, the lowest-value jobs
+  below the arrival's value are evicted from that tier.  An evicted
+  job *degrades, never dies*: its placement is repaired around the lost
+  tier with the same ``repair_placement`` machinery the failure plane
+  uses (DESIGN.md §12), and :meth:`eviction_failure_events` renders the
+  eviction as a switch-crash schedule so an in-flight job rides the
+  epoch-restart driver and stays exactly-once;
+* **re-expansion** — a departure frees capacity; degraded jobs (highest
+  value first) re-run their restricted search and take the better
+  placement when the model says it is strictly better.
+
+Every event publishes ``controller.*`` metrics through the unified
+schema (``net.schema.publish_controller_report``) and a wall span per
+admit/release, so the churn dashboard section renders straight from the
+registry.
+
+``plan()`` — also in this module — is the single planning front door
+(DESIGN.md §13): one call that routes to ``plan_grad_exchange``,
+``plan_fat_tree_job``, ``JobScheduler``, or :class:`OnlineController`
+based on the input shape, so this controller lands behind a stable
+public API instead of an eighth ad-hoc entry point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional, Sequence
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+from .planner import (
+    FAT_TREE_TIERS,
+    FatTreeTopology,
+    JobScheduler,
+    LaunchRequest,
+    Topology,
+    TreePlacement,
+    _AXIS_TIER,
+    place_aggregation_tree,
+    plan_fat_tree_job,
+    plan_grad_exchange,
+    repair_placement,
+)
+
+__all__ = [
+    "OnlineJobRequest",
+    "Admission",
+    "Eviction",
+    "Expansion",
+    "ControllerReport",
+    "OnlineController",
+    "weighted_max_min",
+    "plan",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineJobRequest:
+    """One arrival in the churn stream."""
+
+    job_id: int
+    expected_pairs: int  # per-host mapper output (pairs)
+    key_variety: int  # N — also the useful per-switch table bound
+    tenant: str = "default"
+    value: float = 1.0  # preemption priority: higher value evicts lower
+    op: str = "sum"
+
+    def __post_init__(self):
+        if self.expected_pairs < 1 or self.key_variety < 1:
+            raise ValueError("expected_pairs and key_variety must be >= 1")
+        if self.value < 0:
+            raise ValueError("value must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class Eviction:
+    """One value-based table eviction: ``job_id`` lost ``tier`` to
+    ``by_job``; its placement degraded from ``before`` to ``after``."""
+
+    job_id: int
+    by_job: int
+    tenant: str
+    tier: str
+    freed_pairs: int  # per-switch table pairs reclaimed
+    before: TreePlacement
+    after: TreePlacement
+
+
+@dataclasses.dataclass(frozen=True)
+class Expansion:
+    """A departure freed capacity and ``job_id`` re-expanded."""
+
+    job_id: int
+    tenant: str
+    before: TreePlacement
+    after: TreePlacement
+
+    @property
+    def scarce_bytes_saved(self) -> float:
+        return self.before.scarce_uplink_bytes - self.after.scarce_uplink_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """What one arrival got: its placement, table grants, and the
+    preemptions it triggered."""
+
+    request: OnlineJobRequest
+    placement: TreePlacement
+    grants: tuple[tuple[str, int], ...]  # (tier, per-switch pairs) reserved
+    caps: tuple[tuple[str, int], ...]  # capability map the search ran under
+    degraded: bool  # got less capability than an empty fabric would give
+    preempted: tuple[int, ...]  # job ids evicted to make room
+    candidates_scored: int  # placement work this admission cost
+
+    @property
+    def job_id(self) -> int:
+        return self.request.job_id
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerReport:
+    """Snapshot over the active set (the churn bench / dashboard view)."""
+
+    n_active: int
+    n_degraded: int
+    admitted_total: int
+    evictions_total: int
+    expansions_total: int
+    candidates_scored_total: int
+    scarce_axis: str
+    total_scarce_bytes: float
+    scarce_budget_bytes: float | None
+    tenants: dict[str, dict]  # tenant -> {n_jobs, weight, demand, share}
+
+    @property
+    def scarce_utilization(self) -> float:
+        if not self.scarce_budget_bytes:
+            return 0.0
+        return self.total_scarce_bytes / self.scarce_budget_bytes
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["scarce_utilization"] = self.scarce_utilization
+        return d
+
+    def summary(self) -> str:
+        return (f"{self.n_active} active ({self.n_degraded} degraded), "
+                f"{self.admitted_total} admitted / "
+                f"{self.evictions_total} evicted / "
+                f"{self.expansions_total} re-expanded; "
+                f"scarce {self.scarce_axis}="
+                f"{self.total_scarce_bytes/2**20:.2f}MiB "
+                f"({self.candidates_scored_total} placements scored)")
+
+
+def weighted_max_min(demands: dict[str, float], weights: dict[str, float],
+                     capacity: float) -> dict[str, float]:
+    """Weighted max-min (water-filling) allocation of ``capacity`` across
+    tenants.  A tenant whose demand fits under its weighted fair share
+    keeps its demand; the slack is re-filled over the rest by weight,
+    until everyone is either satisfied or saturated at their share."""
+    alloc: dict[str, float] = {t: 0.0 for t in demands}
+    active = {t: d for t, d in demands.items() if d > 0}
+    remaining = float(capacity)
+    while active and remaining > 0:
+        wsum = sum(weights.get(t, 1.0) for t in active)
+        fitting = {t: d for t, d in active.items()
+                   if d <= remaining * weights.get(t, 1.0) / wsum}
+        if not fitting:  # everyone saturates at the weighted share
+            for t in active:
+                alloc[t] = remaining * weights.get(t, 1.0) / wsum
+            return alloc
+        for t, d in fitting.items():
+            alloc[t] = d
+            remaining -= d
+            del active[t]
+    return alloc
+
+
+@dataclasses.dataclass
+class _Active:
+    """Mutable per-job controller state."""
+
+    request: OnlineJobRequest
+    placement: TreePlacement
+    grants: dict[str, int]  # tier -> per-switch pairs reserved
+    caps: dict[str, int]  # capability map the current placement ran under
+    degraded: bool
+    evicted_tiers: tuple[str, ...] = ()
+
+
+class OnlineController:
+    """Incremental multi-tenant admission onto one fat-tree (§13).
+
+    Unlike :class:`~repro.core.planner.JobScheduler` (a static batch
+    planner), this controller never re-plans the world: each arrival
+    costs one placement search on the residual capability, each
+    departure at most one repair search per degraded job.  The churn
+    bench (``benchmarks/bench_churn.py``) holds it to within 10% of the
+    full-replan oracle's scarce-link bytes at >= 10x less placement
+    work.
+    """
+
+    def __init__(
+        self,
+        ft: FatTreeTopology,
+        *,
+        policy: str = "auto",
+        tenant_weights: dict[str, float] | None = None,
+        preemption: bool = True,
+        scarce_budget_bytes: float | None = None,
+        drain_calibration: dict[str, float] | None = None,
+    ):
+        self.ft = ft
+        self.policy = policy
+        self.tenant_weights = dict(tenant_weights or {})
+        self.preemption = preemption
+        self.scarce_budget_bytes = scarce_budget_bytes
+        self.drain_calibration = dict(drain_calibration or {})
+        self.jobs: dict[int, _Active] = {}
+        self.evictions: list[Eviction] = []
+        self.expansions: list[Expansion] = []
+        self.admitted_total = 0
+        self.candidates_scored_total = 0
+
+    # -- capability accounting ----------------------------------------------
+
+    def placeable_tiers(self) -> tuple[str, ...]:
+        return tuple(t for t in self.ft.present_tiers()
+                     if self.ft.switch_table(t) > 0)
+
+    def used_pairs(self, tier: str) -> int:
+        return sum(a.grants.get(tier, 0) for a in self.jobs.values())
+
+    def residual_pairs(self, tier: str) -> int:
+        return max(0, self.ft.switch_table(tier) - self.used_pairs(tier))
+
+    def _full_want(self, req: OnlineJobRequest) -> dict[str, int]:
+        """Per-tier table an empty fabric would grant: capability capped
+        at the key variety (more table than keys is dead reservation)."""
+        return {t: min(req.key_variety, self.ft.switch_table(t))
+                for t in self.placeable_tiers()}
+
+    def _restricted(self, caps: dict[str, int]) -> FatTreeTopology:
+        """The fat-tree as one job sees it: per-tier capability clamped
+        to its grant — the same ``tier_table_pairs`` override the repair
+        path uses (DESIGN.md §12)."""
+        return dataclasses.replace(
+            self.ft, table_pairs=0, tier_table_pairs=tuple(
+                (t, int(caps.get(t, 0))) for t in FAT_TREE_TIERS))
+
+    def _tier_level(self, tier: str) -> int:
+        for i, l in enumerate(self.ft.link_tiers()):
+            if _AXIS_TIER.get(l.axis, l.axis) == tier:
+                return i
+        raise KeyError(tier)
+
+    def _scored(self) -> float:
+        reg = obs_metrics.get_registry()
+        return sum(v for _, v in reg.find(
+            "planner.placement.candidates_scored_total"))
+
+    def _place(self, req: OnlineJobRequest,
+               caps: dict[str, int]) -> TreePlacement:
+        return place_aggregation_tree(
+            self._restricted(caps), per_host_pairs=req.expected_pairs,
+            key_variety=req.key_variety, policy=self.policy,
+            drain_calibration=self.drain_calibration or None)
+
+    # -- admission ----------------------------------------------------------
+
+    def admit(self, req: OnlineJobRequest) -> Admission:
+        """Admit one arrival on the residual capability, preempting
+        lower-value jobs when a placeable tier is exhausted."""
+        if req.job_id in self.jobs:
+            raise ValueError(f"job {req.job_id} already active")
+        t0_wall = time.perf_counter()
+        scored0 = self._scored()
+        want = self._full_want(req)
+        avail = {t: min(want[t], self.residual_pairs(t)) for t in want}
+        preempted: list[int] = []
+        if self.preemption:
+            for tier in want:
+                if avail[tier] > 0:
+                    continue  # some table available: degrade, don't evict
+                freed, victims = self._preempt_tier(tier, req)
+                if freed:
+                    avail[tier] = min(want[tier], freed)
+                    preempted.extend(v for v in victims
+                                     if v not in preempted)
+        placement = self._place(req, avail)
+        grants = {t: avail[t] for t in placement.tiers}
+        degraded = any(avail[t] < want[t] for t in want)
+        self.jobs[req.job_id] = _Active(
+            request=req, placement=placement, grants=grants,
+            caps=dict(avail), degraded=degraded)
+        self.admitted_total += 1
+        scored = self._scored() - scored0
+        self.candidates_scored_total += scored
+        reg = obs_metrics.get_registry()
+        reg.counter("controller.admitted_total", tenant=req.tenant).inc()
+        reg.counter("controller.candidates_scored_total").inc(scored)
+        if degraded:
+            reg.counter("controller.degraded_admissions_total",
+                        tenant=req.tenant).inc()
+        self._publish()
+        obs_trace.get_tracer().add_wall_span(
+            f"controller.admit[{req.job_id}]", t0_wall, time.perf_counter(),
+            cat="controller",
+            args={"job": req.job_id, "tenant": req.tenant,
+                  "value": req.value, "tiers": list(placement.tiers),
+                  "degraded": degraded, "preempted": preempted})
+        return Admission(
+            request=req, placement=placement,
+            grants=tuple(sorted(grants.items())),
+            caps=tuple(sorted(avail.items())), degraded=degraded,
+            preempted=tuple(preempted), candidates_scored=int(scored))
+
+    def _preempt_tier(self, tier: str,
+                      req: OnlineJobRequest) -> tuple[int, list[int]]:
+        """Evict ``tier`` table from lower-value jobs until the arrival
+        has a grant (or no victims remain).  Victims go lowest value
+        first; within a value, tenants above their fair share first.
+        Returns (per-switch pairs reclaimed, victim job ids)."""
+        shares = self.fair_shares()
+        demands = self._tenant_demands()
+        over = {t for t, d in demands.items() if d > shares.get(t, 0.0)}
+        victims = sorted(
+            (a for a in self.jobs.values()
+             if a.grants.get(tier, 0) > 0 and a.request.value < req.value),
+            key=lambda a: (a.request.value,
+                           0 if a.request.tenant in over else 1,
+                           a.request.job_id))
+        evicted: list[int] = []
+        freed = 0
+        for victim in victims:
+            freed += self._evict(victim, tier, by=req)
+            evicted.append(victim.request.job_id)
+            if freed >= min(req.key_variety, self.ft.switch_table(tier)):
+                break
+        return freed, evicted
+
+    def _evict(self, victim: _Active, tier: str,
+               by: OnlineJobRequest) -> int:
+        """Take ``tier``'s table from one job and degrade its placement
+        via the failure plane's ``repair_placement`` — the evicted tier
+        is every-switch-dead, so the repair drops it wholesale and
+        re-places over the job's remaining grants."""
+        freed = victim.grants.pop(tier)
+        victim.caps[tier] = 0
+        links = self.ft.link_tiers()
+        fanins = [l.fanin for l in links]
+        lvl = self._tier_level(tier)
+        failed = [(lvl, s) for s in range(math.prod(fanins[lvl + 1:]))]
+        before = victim.placement
+        rep = repair_placement(
+            self._restricted(victim.caps), before, failed=failed,
+            per_host_pairs=victim.request.expected_pairs,
+            key_variety=victim.request.key_variety,
+            drain_calibration=self.drain_calibration or None)
+        victim.placement = rep.placement
+        victim.grants = {t: victim.caps.get(t, 0)
+                         for t in rep.placement.tiers}
+        victim.degraded = True
+        victim.evicted_tiers = tuple(
+            dict.fromkeys((*victim.evicted_tiers, tier)))
+        ev = Eviction(
+            job_id=victim.request.job_id, by_job=by.job_id,
+            tenant=victim.request.tenant, tier=tier, freed_pairs=freed,
+            before=before, after=rep.placement)
+        self.evictions.append(ev)
+        reg = obs_metrics.get_registry()
+        reg.counter("controller.evictions_total",
+                    tenant=victim.request.tenant, tier=tier).inc()
+        reg.counter("controller.evicted_pairs_total", tier=tier).inc(freed)
+        return freed
+
+    def eviction_failure_events(self, eviction: Eviction, *,
+                                t_s: float) -> tuple:
+        """One eviction as a data-plane failure schedule: every switch of
+        the evicted tier crashes (for the victim's tree) at ``t_s``.  An
+        in-flight victim runs the schedule through the epoch-restart
+        driver (``repro.net.simulate(spec, faults=...)``), which is what
+        keeps its delivered table exactly-once across the mid-run
+        degrade (DESIGN.md §12)."""
+        from repro.runtime.fault_tolerance import FailureEvent
+
+        links = self.ft.link_tiers()
+        fanins = [l.fanin for l in links]
+        lvl = self._tier_level(eviction.tier)
+        return tuple(
+            FailureEvent(kind="switch_crash", t_s=float(t_s), level=lvl,
+                         switch=s)
+            for s in range(math.prod(fanins[lvl + 1:])))
+
+    # -- departure + re-expansion -------------------------------------------
+
+    def release(self, job_id: int) -> list[Expansion]:
+        """Remove a job; re-expand degraded survivors (highest value
+        first) into whatever capability the departure freed."""
+        if job_id not in self.jobs:
+            return []
+        t0_wall = time.perf_counter()
+        scored0 = self._scored()
+        self.jobs.pop(job_id)
+        expanded: list[Expansion] = []
+        for a in sorted((a for a in self.jobs.values() if a.degraded),
+                        key=lambda a: (-a.request.value, a.request.job_id)):
+            want = self._full_want(a.request)
+            avail = {
+                t: min(want[t],
+                       self.residual_pairs(t) + a.grants.get(t, 0))
+                for t in want}
+            if all(avail[t] <= a.caps.get(t, 0) for t in want):
+                continue  # nothing new to take: skip the search
+            trial = self._place(a.request, avail)
+            if trial.scarce_uplink_bytes >= a.placement.scarce_uplink_bytes:
+                # remember the tried capability; at full capability with no
+                # win, the current placement is already the optimum
+                a.caps = dict(avail)
+                a.degraded = any(avail[t] < want[t] for t in want)
+                continue
+            exp = Expansion(job_id=a.request.job_id,
+                            tenant=a.request.tenant,
+                            before=a.placement, after=trial)
+            a.placement = trial
+            a.grants = {t: avail[t] for t in trial.tiers}
+            a.caps = dict(avail)
+            a.degraded = any(avail[t] < want[t] for t in want)
+            a.evicted_tiers = tuple(t for t in a.evicted_tiers
+                                    if t not in trial.tiers)
+            expanded.append(exp)
+            self.expansions.append(exp)
+            obs_metrics.get_registry().counter(
+                "controller.expansions_total", tenant=exp.tenant).inc()
+        scored = self._scored() - scored0
+        self.candidates_scored_total += scored
+        obs_metrics.get_registry().counter(
+            "controller.candidates_scored_total").inc(scored)
+        self._publish()
+        obs_trace.get_tracer().add_wall_span(
+            f"controller.release[{job_id}]", t0_wall, time.perf_counter(),
+            cat="controller",
+            args={"job": job_id,
+                  "expanded": [e.job_id for e in expanded]})
+        return expanded
+
+    # -- fairness -----------------------------------------------------------
+
+    def _tenant_demands(self) -> dict[str, float]:
+        demands: dict[str, float] = {}
+        for a in self.jobs.values():
+            demands[a.request.tenant] = (
+                demands.get(a.request.tenant, 0.0)
+                + a.placement.scarce_uplink_bytes)
+        return demands
+
+    def fair_shares(self) -> dict[str, float]:
+        """Weighted max-min shares of the scarce uplink across tenants
+        with active demand.  Capacity is ``scarce_budget_bytes`` when
+        set, else total demand (everyone satisfied)."""
+        demands = self._tenant_demands()
+        cap = (self.scarce_budget_bytes
+               if self.scarce_budget_bytes is not None
+               else sum(demands.values()))
+        return weighted_max_min(demands, self.tenant_weights, cap)
+
+    # -- reporting ----------------------------------------------------------
+
+    def total_scarce_bytes(self) -> float:
+        return sum(a.placement.scarce_uplink_bytes
+                   for a in self.jobs.values())
+
+    def report(self) -> ControllerReport:
+        demands = self._tenant_demands()
+        shares = self.fair_shares()
+        tenants = {
+            t: {"n_jobs": sum(1 for a in self.jobs.values()
+                              if a.request.tenant == t),
+                "weight": self.tenant_weights.get(t, 1.0),
+                "demand_bytes": d,
+                "share_bytes": shares.get(t, 0.0)}
+            for t, d in sorted(demands.items())}
+        return ControllerReport(
+            n_active=len(self.jobs),
+            n_degraded=sum(1 for a in self.jobs.values() if a.degraded),
+            admitted_total=self.admitted_total,
+            evictions_total=len(self.evictions),
+            expansions_total=len(self.expansions),
+            candidates_scored_total=int(self.candidates_scored_total),
+            scarce_axis=self.ft.scarce_uplink_axis(),
+            total_scarce_bytes=self.total_scarce_bytes(),
+            scarce_budget_bytes=self.scarce_budget_bytes,
+            tenants=tenants)
+
+    def _publish(self) -> None:
+        from repro.net import schema as schema_lib
+
+        schema_lib.publish_controller_report(self.report().to_dict())
+
+
+# ---------------------------------------------------------------------------
+# plan(): the single planning front door (DESIGN.md §13).
+# ---------------------------------------------------------------------------
+
+
+def _is_mesh(x) -> bool:
+    return hasattr(x, "axis_names") and hasattr(x, "devices")
+
+
+def _is_sequence(x) -> bool:
+    return isinstance(x, Sequence) and not isinstance(x, (str, bytes))
+
+
+def plan(job_or_jobs, topology, **kw):
+    """Plan anything the control plane knows how to plan (DESIGN.md §13).
+
+    Routing, by ``(job_or_jobs, topology)`` shape:
+
+    =========================  ========================  ===================
+    job_or_jobs                topology                  routed to
+    =========================  ========================  ===================
+    ``LaunchRequest``          jax ``Mesh``              ``plan_grad_exchange``
+    ``LaunchRequest``          ``FatTreeTopology``       ``plan_fat_tree_job``
+    ``LaunchRequest``          ``Topology``              ``JobScheduler.admit``
+    ``[LaunchRequest, ...]``   ``Topology``              ``JobScheduler.plan_all``
+    ``OnlineJobRequest``       ``FatTreeTopology``       a fresh ``OnlineController``
+    ``[OnlineJobRequest,...]`` ``FatTreeTopology``       one controller, admitted in order
+    any request                ``JobScheduler`` /        that instance's own
+                               ``OnlineController``      ``admit`` (incremental)
+    =========================  ========================  ===================
+
+    Single-request forms return that request's plan/admission; a request
+    list over a fresh ``Topology``/``FatTreeTopology`` returns the
+    ``SchedulerReport`` / the :class:`OnlineController` holding the
+    admitted set.  Extra keywords go to the matched constructor or call
+    (``policy=``, ``combiner_budget_pairs=``, ``tenant_weights=``, ...).
+    """
+    x, topo = job_or_jobs, topology
+
+    # live scheduler/controller instances: incremental admission
+    if isinstance(topo, OnlineController):
+        if _is_sequence(x):
+            return [topo.admit(r) for r in x]
+        return topo.admit(x)
+    if isinstance(topo, JobScheduler):
+        if _is_sequence(x):
+            return topo.plan_all(list(x))
+        return topo.admit(x)
+
+    if _is_mesh(topo):
+        if _is_sequence(x):
+            raise TypeError("plan() over a mesh takes one LaunchRequest")
+        return plan_grad_exchange(
+            topo, mode=x.mode, grad_bytes=x.grad_bytes,
+            key_variety=x.key_variety, k_fraction=x.k_fraction, op=x.op,
+            **kw)
+
+    if isinstance(topo, FatTreeTopology):
+        if _is_sequence(x) or isinstance(x, OnlineJobRequest):
+            reqs = list(x) if _is_sequence(x) else [x]
+            if all(isinstance(r, OnlineJobRequest) for r in reqs):
+                ctl = OnlineController(topo, **kw)
+                admissions = [ctl.admit(r) for r in reqs]
+                if not _is_sequence(x):
+                    return admissions[0]
+                return ctl
+            raise TypeError("plan() over a FatTreeTopology takes "
+                            "OnlineJobRequest(s) for online admission or "
+                            "one LaunchRequest for a static placement")
+        return plan_fat_tree_job(topo, x, **kw)
+
+    if isinstance(topo, Topology):
+        sched = JobScheduler(topo, **kw)
+        if _is_sequence(x):
+            return sched.plan_all(list(x))
+        return sched.admit(x)
+
+    raise TypeError(f"plan() cannot dispatch on topology "
+                    f"{type(topology).__name__!r}; expected a Mesh, "
+                    "Topology, FatTreeTopology, JobScheduler, or "
+                    "OnlineController")

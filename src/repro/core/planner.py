@@ -1016,7 +1016,7 @@ def plan_fat_tree_job(
     """Admit one incast job onto the fat-tree: run the placement search and
     emit the full controller artifact set (`ConfigureMsg` with per-level
     placement capacities, `ExchangePlan`, `JobPlan`) so the packet
-    simulator consumes it unchanged via ``net.sim.simulate_job_plan``.
+    simulator consumes it unchanged via ``repro.net.simulate(plan, ...)``.
 
     ``flat_scarce_bytes`` on the returned plan is the host-only baseline's
     scarce-uplink bytes (everything forwarded unaggregated) — the incast
@@ -1274,7 +1274,7 @@ def batch_tier_groups(job_plans, *, ways: int = 4,
     """Predict the vectorized simulator's multi-job tier batching:
     ``{level: {tier_batch_key: [job indices]}}`` over an admitted batch.
 
-    ``net.sim.simulate_job_plans`` packs, per level, each key group's
+    A batched ``repro.net.simulate`` packs, per level, each key group's
     switches into one ``tier_ingest`` dispatch, so the number of jitted
     kernel calls at a level equals the number of key groups here — the
     invariant the batching tests pin.  Jobs whose tier is kernel-free

@@ -10,23 +10,33 @@ Submodules:
   sim       — discrete-event engine: mappers -> switch cascade -> reducer
   vsim      — vectorized tier engine behind ``NetConfig.engine``
 
+  facade    — ``repro.net.simulate``: THE public entry point over every
+              sim form (DESIGN.md §13); the seven legacy ``sim.*`` entry
+              points are deprecation shims onto it
+
 Submodules load lazily: ``core.reduction_model`` imports ``net.wire`` for
 its byte constants while ``net.sim`` imports ``core.dataplane`` — eager
-package imports here would close that cycle.
+package imports here would close that cycle.  ``repro.net.simulate`` is
+re-exported the same lazy way.
 """
 
 from __future__ import annotations
 
 import importlib
 
-_SUBMODULES = ("wire", "links", "transport", "schema", "sim", "vsim")
+_SUBMODULES = ("wire", "links", "transport", "schema", "sim", "vsim",
+               "facade")
+
+__all__ = [*_SUBMODULES, "simulate"]
 
 
 def __getattr__(name: str):
     if name in _SUBMODULES:
         return importlib.import_module(f"{__name__}.{name}")
+    if name == "simulate":
+        return importlib.import_module(f"{__name__}.facade").simulate
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(set(globals()) | set(_SUBMODULES))
+    return sorted(set(globals()) | set(_SUBMODULES) | {"simulate"})

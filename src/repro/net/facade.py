@@ -1,0 +1,154 @@
+"""``repro.net.simulate`` — the one front door of the packet simulator
+(DESIGN.md §13).
+
+The sim grew seven entry points (single job, batch, planned job, planned
+batch, fat-tree, and the two fault-driver variants); every one of them
+was the same engine behind a different argument spelling.  This facade
+dispatches on what you hand it:
+
+===========================  =============================================
+``spec_or_plan``             runs as
+===========================  =============================================
+``sim.JobSpec``              one job (``keys``/``values`` ride the spec)
+``[JobSpec, ...]``           a lockstep batch (+ mid-run ``admissions``)
+``planner.JobPlan``          a scheduler-admitted job over ``keys/values``
+``[JobPlan, ...]``           the admitted batch over key/value lists
+``planner.FatTreeTopology``  a multi-rack incast (``placement``/``policy``)
+===========================  =============================================
+
+``faults=`` (a ``runtime.fault_tolerance.FailureInjector``) routes any
+single-job form through the epoch-restart recovery driver and returns a
+``FaultSimResult``; ``fault_policy=`` tunes detection/restart.
+``engine=`` overrides ``NetConfig.engine`` without rebuilding the config
+("node" or "vectorized" — results are bit-identical either way).
+
+The seven legacy names still exist as thin shims that emit
+``DeprecationWarning`` and delegate here; new code should only ever call
+``repro.net.simulate`` (or ``repro.core.plan`` on the planning side).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from . import sim as sim_lib
+
+__all__ = ["simulate"]
+
+
+def _is_job_plan(x) -> bool:
+    """Duck-typed ``planner.JobPlan`` (carries configure + tree)."""
+    return hasattr(x, "configure") and hasattr(x, "tree")
+
+
+def _is_fat_tree(x) -> bool:
+    """Duck-typed ``planner.FatTreeTopology``."""
+    return hasattr(x, "tier_switches") and hasattr(x, "link_tiers")
+
+
+def _spec_with(spec: sim_lib.JobSpec, cfg, engine) -> sim_lib.JobSpec:
+    if cfg is not None:
+        spec = dataclasses.replace(spec, cfg=cfg)
+    if engine is not None:
+        spec = dataclasses.replace(spec, cfg=dataclasses.replace(
+            spec.cfg or sim_lib.NetConfig(), engine=engine))
+    return spec
+
+
+def _cfg_with(cfg, engine):
+    if engine is None:
+        return cfg
+    return dataclasses.replace(cfg or sim_lib.NetConfig(), engine=engine)
+
+
+def _reject_unknown(kw: dict, *, path: str) -> None:
+    if kw:
+        raise TypeError(f"simulate() got unexpected keyword argument(s) "
+                        f"{sorted(kw)} for a {path} input")
+
+
+def simulate(spec_or_plan, keys=None, values=None, *, faults=None,
+             fault_policy=None, engine=None, cfg=None, admissions=None,
+             **kw):
+    """Run anything the packet simulator knows how to run (DESIGN.md §13).
+
+    Returns a ``SimResult`` (single job), a ``list[SimResult]`` (batch),
+    or a ``FaultSimResult`` (``faults=`` given).  See the module
+    docstring for the dispatch table; extra keywords are forwarded to the
+    matched path (``placement``/``policy``/``op``/``mapper_delay``/... on
+    the fat-tree path, ``aggregate``/``mapper_delay`` on plan paths).
+    """
+    x = spec_or_plan
+    is_batch = (isinstance(x, Sequence)
+                and not isinstance(x, (str, bytes)))
+    if admissions is not None and not is_batch:
+        raise TypeError("admissions= applies to a batch (a sequence of "
+                        "JobSpec) — single-job forms have no lockstep to "
+                        "join mid-run")
+
+    # -- fat-tree incast ----------------------------------------------------
+    if _is_fat_tree(x):
+        if keys is None or values is None:
+            raise TypeError("simulate(fat_tree, keys, values, ...) needs "
+                            "the mapper stream")
+        run_cfg = _cfg_with(cfg, engine)
+        if faults is not None:
+            return sim_lib._fat_tree_job_with_faults(
+                x, keys, values, injector=faults,
+                fault_policy=fault_policy, cfg=run_cfg, **kw)
+        return sim_lib._fat_tree_job(x, keys, values, cfg=run_cfg, **kw)
+
+    # -- single JobSpec -----------------------------------------------------
+    if isinstance(x, sim_lib.JobSpec):
+        _reject_unknown(kw, path="JobSpec")
+        if keys is not None or values is not None:
+            raise TypeError("a JobSpec carries its own keys/values")
+        spec = _spec_with(x, cfg, engine)
+        if faults is not None:
+            return sim_lib._simulate_spec_with_faults(spec, faults,
+                                                      fault_policy)
+        return sim_lib._simulate_jobs([spec])[0]
+
+    # -- single JobPlan -----------------------------------------------------
+    if _is_job_plan(x):
+        if keys is None or values is None:
+            raise TypeError("simulate(job_plan, keys, values, ...) needs "
+                            "the mapper stream")
+        spec = sim_lib._job_plan_spec(
+            x, keys, values, cfg=_cfg_with(cfg, engine),
+            aggregate=kw.pop("aggregate", True),
+            mapper_delay=kw.pop("mapper_delay", None))
+        _reject_unknown(kw, path="JobPlan")
+        if faults is not None:
+            return sim_lib._simulate_spec_with_faults(spec, faults,
+                                                      fault_policy)
+        return sim_lib._simulate_jobs([spec])[0]
+
+    # -- sequences: a lockstep batch of specs or plans ----------------------
+    if is_batch:
+        items = list(x)
+        if faults is not None:
+            raise ValueError("faults= is per-job: pass a single JobSpec / "
+                             "JobPlan / fat-tree, not a batch")
+        if items and all(_is_job_plan(p) for p in items):
+            specs = sim_lib._job_plan_specs(
+                items, keys, values, cfg=_cfg_with(cfg, engine),
+                aggregate=kw.pop("aggregate", True),
+                mapper_delays=kw.pop("mapper_delays", None))
+        elif all(isinstance(s, sim_lib.JobSpec) for s in items):
+            if keys is not None or values is not None:
+                raise TypeError("JobSpecs carry their own keys/values")
+            specs = [_spec_with(s, cfg, engine) for s in items]
+        else:
+            raise TypeError("simulate() batch must be all JobSpec or all "
+                            "JobPlan")
+        _reject_unknown(kw, path="batch")
+        adm = [(step, _spec_with(s, cfg, engine))
+               for step, s in (admissions or ())]
+        return sim_lib._simulate_jobs(specs, admissions=adm)
+
+    raise TypeError(f"simulate() cannot dispatch on "
+                    f"{type(spec_or_plan).__name__!r}; expected JobSpec, "
+                    "JobPlan, FatTreeTopology, or a sequence of "
+                    "JobSpec/JobPlan")

@@ -199,3 +199,44 @@ def publish_fault_report(report: dict, *, job: str, engine: str,
           epoch=v["epoch"], **lbl).set(v["t_detect_s"])
     for lv in report["degraded_levels"]:
         g("sim.fault.degraded", level=lv, **base).set(1)
+
+
+#: every key a controller snapshot carries
+#: (``core.controller.ControllerReport.to_dict()`` output)
+CONTROLLER_REPORT_KEYS = (
+    "n_active", "n_degraded", "admitted_total", "evictions_total",
+    "expansions_total", "candidates_scored_total", "scarce_axis",
+    "total_scarce_bytes", "scarce_budget_bytes", "scarce_utilization",
+    "tenants",
+)
+
+
+def publish_controller_report(report: dict, *,
+                              registry: Optional[object] = None) -> None:
+    """Push one online-controller snapshot into the metrics registry
+    (DESIGN.md §13).
+
+    Snapshot state goes to gauges here (``controller.active_jobs`` /
+    ``.degraded_jobs`` / ``.scarce_bytes`` / ``.scarce_utilization`` and
+    the per-tenant ``controller.tenant.*`` fairness series); *event*
+    counters (``controller.admitted_total``, ``.evictions_total``,
+    ``.expansions_total``, ``.candidates_scored_total``) are incremented
+    by the controller at event time, since re-publishing a running total
+    through a counter would double-count it.  The "Churn" dashboard
+    section renders from exactly these series.
+    """
+    reg = registry if registry is not None else obs_metrics.get_registry()
+    g = reg.gauge
+    axis = report["scarce_axis"]
+    g("controller.active_jobs").set(report["n_active"])
+    g("controller.degraded_jobs").set(report["n_degraded"])
+    g("controller.scarce_bytes", axis=axis).set(
+        report["total_scarce_bytes"])
+    g("controller.scarce_utilization", axis=axis).set(
+        report["scarce_utilization"])
+    for tenant, row in report["tenants"].items():
+        lbl = {"tenant": tenant}
+        g("controller.tenant.jobs", **lbl).set(row["n_jobs"])
+        g("controller.tenant.weight", **lbl).set(row["weight"])
+        g("controller.tenant.demand_bytes", **lbl).set(row["demand_bytes"])
+        g("controller.tenant.share_bytes", **lbl).set(row["share_bytes"])

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Callable, Sequence
 
 import jax.numpy as jnp
@@ -90,6 +91,13 @@ class NetConfig:
     #: 0 everywhere outside the fault driver; ``simulate_job_with_faults``
     #: bumps it per epoch so receivers dedupe across incarnations.
     epoch: int = 0
+
+    def __post_init__(self):
+        if self.engine not in ("node", "vectorized"):
+            raise ValueError(f"unknown sim engine {self.engine!r} "
+                             "(expected 'node' or 'vectorized')")
+        if not 0.0 <= self.loss_rate < 1.0:
+            raise ValueError(f"loss_rate {self.loss_rate!r} outside [0, 1)")
 
 
 class _Node:
@@ -263,6 +271,12 @@ class JobSpec:
     #: track (placement policy, comparison leg, ...); default "job<id>"
     tag: str = ""
 
+    def __post_init__(self):
+        fanins = tuple(int(f) for f in self.fanins)
+        if not fanins or any(f < 1 for f in fanins):
+            raise ValueError(f"bad fanins {fanins}: every level needs a "
+                             "positive mapper/child count")
+
 
 class _FaultCtx:
     """One restart epoch's view of the failure plane (DESIGN.md §12).
@@ -411,12 +425,10 @@ class _JobRun:
 
     def __init__(self, spec: JobSpec, faults: _FaultCtx | None = None):
         cfg = spec.cfg or NetConfig()
-        if cfg.engine not in ("node", "vectorized"):
-            raise ValueError(f"unknown sim engine {cfg.engine!r} "
-                             "(expected 'node' or 'vectorized')")
+        # engine/loss-rate/fanin validity is a dataclass invariant now:
+        # NetConfig.__post_init__ and JobSpec.__post_init__ raise at
+        # construction, before any simulation state exists
         fanins = tuple(int(f) for f in spec.fanins)
-        if not fanins or any(f < 1 for f in fanins):
-            raise ValueError(f"bad fanins {fanins}")
         n_levels = len(fanins)
         axes = (tuple(spec.axes) if spec.axes is not None
                 else _default_axes(n_levels))
@@ -904,24 +916,76 @@ class _JobRun:
         return result
 
 
+def _warn_deprecated(old: str) -> None:
+    """Shim-emitted deprecation pointing at the unified facade
+    (DESIGN.md §13).  ``stacklevel=3`` attributes the warning to the
+    shim's caller, not the shim."""
+    warnings.warn(
+        f"{old} is deprecated; use repro.net.simulate() — the unified "
+        "facade over every sim entry point (DESIGN.md §13)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _simulate_jobs(
+    specs: Sequence[JobSpec],
+    admissions: Sequence[tuple[int, JobSpec]] = (),
+) -> list[SimResult]:
+    """The level-lockstep batch engine, with event-driven mid-run
+    admission.  ``specs`` start at lockstep step 0; each ``(step, spec)``
+    in ``admissions`` joins the running batch at that lockstep step —
+    i.e. between tier levels of the jobs already in flight — and a job
+    leaves the batch the step its last tier completes.  Jobs never
+    interact (each owns its links, flows, and streams), so every result
+    is bit-identical to running that spec alone on either engine: the
+    batching — and therefore mid-run admission — changes kernel dispatch
+    count, never results.  Results come back in ``specs`` order followed
+    by ``admissions`` order."""
+    entries: list[tuple[int, JobSpec]] = [(0, s) for s in specs]
+    for step, s in admissions:
+        step = int(step)
+        if step < 0:
+            raise ValueError(f"admission step {step} must be >= 0")
+        entries.append((step, s))
+    runs: list[_JobRun | None] = [None] * len(entries)
+    results: list[SimResult | None] = [None] * len(entries)
+    n_done = 0
+    step = 0
+    while n_done < len(entries):
+        pending = []
+        for i, (t0, spec) in enumerate(entries):
+            if results[i] is not None or step < t0:
+                continue
+            if runs[i] is None:  # this step's arrivals enter the batch
+                runs[i] = _JobRun(spec)
+            r = runs[i]
+            pending.append((i, r, step - t0, r.start_tier(step - t0)))
+        works = [w for _, _, _, w in pending if w is not None]
+        if works:
+            vsim.dispatch_tier_ingest(works)
+        for i, r, l, w in pending:
+            if w is not None:
+                r.finish_tier(l, w)
+            if l == r.n_levels - 1:  # departure: finalize and free the slot
+                results[i] = r.finalize()
+                runs[i] = None
+                n_done += 1
+        step += 1
+    return list(results)
+
+
 def simulate_jobs(specs: Sequence[JobSpec]) -> list[SimResult]:
-    """Run a batch of independent jobs, tiers stepped level by level in
+    """Deprecated: use :func:`repro.net.simulate` with a list of
+    :class:`JobSpec` (DESIGN.md §13).
+
+    Runs a batch of independent jobs, tiers stepped level by level in
     lockstep so same-depth fast-path tiers share batched kernel calls
     (``vsim.dispatch_tier_ingest``; ``planner.batch_tier_groups``
     predicts the packing).  Returns one :class:`SimResult` per spec,
-    bit-identical to running each spec through :func:`simulate_job`
-    alone — the batching changes kernel dispatch count, never results.
+    bit-identical to running each spec alone — the batching changes
+    kernel dispatch count, never results.
     """
-    runs = [_JobRun(s) for s in specs]
-    for l in range(max((r.n_levels for r in runs), default=0)):
-        pending = [(r, r.start_tier(l)) for r in runs if l < r.n_levels]
-        works = [w for _, w in pending if w is not None]
-        if works:
-            vsim.dispatch_tier_ingest(works)
-        for r, w in pending:
-            if w is not None:
-                r.finish_tier(l, w)
-    return [r.finalize() for r in runs]
+    _warn_deprecated("simulate_jobs")
+    return _simulate_jobs(specs)
 
 
 def simulate_job(
@@ -938,16 +1002,19 @@ def simulate_job(
     job_id: int = 0,
     tag: str = "",
 ) -> SimResult:
-    """Run one job end to end over the emulated network.
+    """Deprecated: use :func:`repro.net.simulate` with a single
+    :class:`JobSpec` (DESIGN.md §13).
 
-    ``keys``/``values`` are the global mapper output (split contiguously
-    among ``prod(fanins)`` mappers); ``plan`` gives each tree level its
-    node geometry (default: exact capacity-0 nodes).  ``mapper_delay(m)``
+    Runs one job end to end over the emulated network.  ``keys``/
+    ``values`` are the global mapper output (split contiguously among
+    ``prod(fanins)`` mappers); ``plan`` gives each tree level its node
+    geometry (default: exact capacity-0 nodes).  ``mapper_delay(m)``
     adds per-mapper start delay — the straggler-injection hook shared with
     ``runtime.fault_tolerance``.  ``tag`` names the run's metric series
     and trace track (DESIGN.md §11; default ``job<job_id>``).
     """
-    return simulate_jobs([JobSpec(
+    _warn_deprecated("simulate_job")
+    return _simulate_jobs([JobSpec(
         keys=keys, values=values, fanins=fanins, plan=plan, op=op,
         aggregate=aggregate, cfg=cfg, axes=axes, mapper_delay=mapper_delay,
         job_id=job_id, tag=tag)])[0]
@@ -1110,6 +1177,18 @@ def _trace_fault_timeline(tag: str, fsr: FaultSimResult) -> None:
                   "epoch": v.epoch, "detected_by": v.detected_by})
 
 
+def _simulate_spec_with_faults(spec: JobSpec, injector,
+                               policy=None) -> FaultSimResult:
+    """One :class:`JobSpec` under a failure schedule: epoch-restart
+    driver with the injector's own straggler delays as the default
+    ``mapper_delay`` and ``"faulted"`` as the default telemetry tag."""
+    if spec.mapper_delay is None and getattr(injector, "delays", None):
+        spec = dataclasses.replace(spec, mapper_delay=injector)
+    if not spec.tag:
+        spec = dataclasses.replace(spec, tag="faulted")
+    return _run_fault_epochs(spec, injector, policy)
+
+
 def simulate_job_with_faults(
     keys,
     values,
@@ -1126,24 +1205,24 @@ def simulate_job_with_faults(
     job_id: int = 0,
     tag: str = "",
 ) -> FaultSimResult:
-    """:func:`simulate_job` under a failure schedule (DESIGN.md §12).
+    """Deprecated: use :func:`repro.net.simulate` with ``faults=``
+    (DESIGN.md §13).
 
-    ``injector`` is a ``runtime.fault_tolerance.FailureInjector`` —
-    switch crashes, link-down windows, and table wipes at absolute
-    simulated times; ``policy`` a ``FaultPolicy`` (detection backoff /
-    retry budget / liveness / restart delay).  The job restarts as
-    epochs until an incarnation completes clean; the returned
-    :class:`FaultSimResult` carries that incarnation's delivered table
-    (exactly-once: equal to the no-failure grouped-combine), the total
-    absolute JCT, and the full verdict history.  ``mapper_delay``
-    defaults to the injector's own straggler delays."""
-    if mapper_delay is None and getattr(injector, "delays", None):
-        mapper_delay = injector
-    return _run_fault_epochs(
+    One job under a failure schedule (DESIGN.md §12).  ``injector`` is a
+    ``runtime.fault_tolerance.FailureInjector`` — switch crashes,
+    link-down windows, and table wipes at absolute simulated times;
+    ``policy`` a ``FaultPolicy`` (detection backoff / retry budget /
+    liveness / restart delay).  The job restarts as epochs until an
+    incarnation completes clean; the returned :class:`FaultSimResult`
+    carries that incarnation's delivered table (exactly-once: equal to
+    the no-failure grouped-combine), the total absolute JCT, and the
+    full verdict history.  ``mapper_delay`` defaults to the injector's
+    own straggler delays."""
+    _warn_deprecated("simulate_job_with_faults")
+    return _simulate_spec_with_faults(
         JobSpec(keys=keys, values=values, fanins=fanins, plan=plan, op=op,
                 aggregate=aggregate, cfg=cfg, axes=axes,
-                mapper_delay=mapper_delay, job_id=job_id,
-                tag=tag or "faulted"),
+                mapper_delay=mapper_delay, job_id=job_id, tag=tag),
         injector, policy)
 
 
@@ -1171,6 +1250,28 @@ def _job_plan_spec(
         job_id=job_plan.configure.tree_id)
 
 
+def _job_plan_specs(
+    job_plans: Sequence,
+    keys_list: Sequence,
+    values_list: Sequence,
+    *,
+    cfg: NetConfig | None = None,
+    aggregate: bool = True,
+    mapper_delays: Sequence[Callable[[int], float] | None] | None = None,
+) -> list[JobSpec]:
+    """An admitted batch (``JobScheduler.plan_all`` output) as specs."""
+    if not len(job_plans) == len(keys_list) == len(values_list):
+        raise ValueError("job_plans, keys_list, values_list must align")
+    if mapper_delays is not None and len(mapper_delays) != len(job_plans):
+        raise ValueError("mapper_delays must align with job_plans")
+    return [
+        _job_plan_spec(
+            jp, keys_list[i], values_list[i], cfg=cfg, aggregate=aggregate,
+            mapper_delay=mapper_delays[i] if mapper_delays is not None
+            else None)
+        for i, jp in enumerate(job_plans)]
+
+
 def simulate_job_plan(
     job_plan,
     keys,
@@ -1180,15 +1281,18 @@ def simulate_job_plan(
     aggregate: bool = True,
     mapper_delay: Callable[[int], float] | None = None,
 ) -> SimResult:
-    """Run a controller-admitted job (``planner.JobPlan``) end to end.
+    """Deprecated: use :func:`repro.net.simulate` with a
+    ``planner.JobPlan`` (DESIGN.md §13).
 
+    Runs a controller-admitted job (``planner.JobPlan``) end to end.
     The cascade geometry comes from the plan's ``ConfigureMsg`` (the §4.2.2
     per-tree memory partition split across levels), the link rates from its
     ``AggregationTree`` levels — the simulator consuming exactly what the
     ``JobScheduler`` emitted, so measured drain can be fed back via
     :func:`drain_calibration` + ``JobScheduler.calibrate``.
     """
-    return simulate_jobs([_job_plan_spec(
+    _warn_deprecated("simulate_job_plan")
+    return _simulate_jobs([_job_plan_spec(
         job_plan, keys, values, cfg=cfg, aggregate=aggregate,
         mapper_delay=mapper_delay)])[0]
 
@@ -1202,22 +1306,19 @@ def simulate_job_plans(
     aggregate: bool = True,
     mapper_delays: Sequence[Callable[[int], float] | None] | None = None,
 ) -> list[SimResult]:
-    """Run a whole admitted batch (``JobScheduler.plan_all`` output)
-    concurrently: one :func:`simulate_jobs` call, so tiers of different
-    jobs that share a kernel-static signature ride ONE batched
-    ``tier_ingest`` dispatch under the vectorized engine.  Results are
-    bit-identical to per-job :func:`simulate_job_plan` runs.
+    """Deprecated: use :func:`repro.net.simulate` with a list of
+    ``planner.JobPlan`` (DESIGN.md §13).
+
+    Runs a whole admitted batch (``JobScheduler.plan_all`` output)
+    concurrently in one lockstep batch, so tiers of different jobs that
+    share a kernel-static signature ride ONE batched ``tier_ingest``
+    dispatch under the vectorized engine.  Results are bit-identical to
+    per-job :func:`simulate_job_plan` runs.
     """
-    if not len(job_plans) == len(keys_list) == len(values_list):
-        raise ValueError("job_plans, keys_list, values_list must align")
-    if mapper_delays is not None and len(mapper_delays) != len(job_plans):
-        raise ValueError("mapper_delays must align with job_plans")
-    return simulate_jobs([
-        _job_plan_spec(
-            jp, keys_list[i], values_list[i], cfg=cfg, aggregate=aggregate,
-            mapper_delay=mapper_delays[i] if mapper_delays is not None
-            else None)
-        for i, jp in enumerate(job_plans)])
+    _warn_deprecated("simulate_job_plans")
+    return _simulate_jobs(_job_plan_specs(
+        job_plans, keys_list, values_list, cfg=cfg, aggregate=aggregate,
+        mapper_delays=mapper_delays))
 
 
 def drain_calibration(result: SimResult) -> dict[str, float]:
@@ -1254,7 +1355,7 @@ def jct_comparison(
     ``(switchagg, host_only)`` SimResult pair for callers (the JCT bench)
     that need more than the report scalars — drop the key before dumping.
     """
-    sw, host = simulate_jobs([
+    sw, host = _simulate_jobs([
         JobSpec(keys=keys, values=values, fanins=fanins, plan=plan, op=op,
                 aggregate=True, cfg=cfg, axes=axes, tag="switchagg"),
         JobSpec(keys=keys, values=values, fanins=fanins, plan=plan, op=op,
@@ -1299,6 +1400,34 @@ def _fat_tree_spec(
         mapper_delay=mapper_delay, job_id=job_id, tag=tag)
 
 
+def _fat_tree_job(
+    ft,
+    keys,
+    values,
+    *,
+    placement=None,
+    policy: str = "auto",
+    op: str = "sum",
+    cfg: NetConfig | None = None,
+    mapper_delay: Callable[[int], float] | None = None,
+    job_id: int = 0,
+    tag: str = "",
+) -> SimResult:
+    """One multi-rack incast over a ``planner.FatTreeTopology``."""
+    from repro.core import planner  # local import: core.planner is upstream
+
+    if placement is None:
+        n_mappers = ft.n_hosts
+        keys_arr = np.asarray(keys)
+        per_host = -(-keys_arr.shape[0] // max(1, n_mappers))
+        placement = planner.place_aggregation_tree(
+            ft, per_host_pairs=per_host,
+            key_variety=int(keys_arr.max(initial=0)) + 1, policy=policy)
+    return _simulate_jobs([_fat_tree_spec(
+        ft, keys, values, placement=placement, op=op, cfg=cfg,
+        mapper_delay=mapper_delay, job_id=job_id, tag=tag)])[0]
+
+
 def simulate_fat_tree_job(
     ft,
     keys,
@@ -1311,31 +1440,25 @@ def simulate_fat_tree_job(
     mapper_delay: Callable[[int], float] | None = None,
     job_id: int = 0,
 ) -> SimResult:
-    """Run one multi-rack incast over a ``planner.FatTreeTopology``.
+    """Deprecated: use :func:`repro.net.simulate` with a
+    ``planner.FatTreeTopology`` (DESIGN.md §13).
 
-    The emulated network is the fat-tree's own per-tier links — host
-    "edge" links at ``edge_gbps``, oversubscribed ToR "aggr" uplinks,
-    pod "core" uplinks — with the reducer in-link at the host rate (the
+    Runs one multi-rack incast over a ``planner.FatTreeTopology``.  The
+    emulated network is the fat-tree's own per-tier links — host "edge"
+    links at ``edge_gbps``, oversubscribed ToR "aggr" uplinks, pod
+    "core" uplinks — with the reducer in-link at the host rate (the
     reducer is just another host).  Each tier's switches run aggregation
     only where the ``placement`` (or a fresh ``policy`` search) put nodes;
     unplaced tiers forward, so host-only / ToR-only / full-tree deployments
     are all the same simulation with different `LevelSpec.enabled` rows.
     """
-    from repro.core import planner  # local import: core.planner is upstream
-
-    if placement is None:
-        n_mappers = ft.n_hosts
-        keys_arr = np.asarray(keys)
-        per_host = -(-keys_arr.shape[0] // max(1, n_mappers))
-        placement = planner.place_aggregation_tree(
-            ft, per_host_pairs=per_host,
-            key_variety=int(keys_arr.max(initial=0)) + 1, policy=policy)
-    return simulate_jobs([_fat_tree_spec(
-        ft, keys, values, placement=placement, op=op, cfg=cfg,
-        mapper_delay=mapper_delay, job_id=job_id)])[0]
+    _warn_deprecated("simulate_fat_tree_job")
+    return _fat_tree_job(
+        ft, keys, values, placement=placement, policy=policy, op=op,
+        cfg=cfg, mapper_delay=mapper_delay, job_id=job_id)
 
 
-def simulate_fat_tree_job_with_faults(
+def _fat_tree_job_with_faults(
     ft,
     keys,
     values,
@@ -1350,14 +1473,8 @@ def simulate_fat_tree_job_with_faults(
     job_id: int = 0,
     tag: str = "",
 ) -> FaultSimResult:
-    """:func:`simulate_fat_tree_job` under a failure schedule, with the
-    control plane in the recovery loop: after each restart the driver
-    calls ``planner.repair_placement`` on the positions declared dead, and
-    the next epoch runs the *repaired* placement — dead switches become
-    forward-only relays, and a tier that lost every switch is re-placed
-    around entirely (DESIGN.md §12).  The final ``PlacementRepair`` (its
-    degraded byte model is the modeled JCT-penalty source) rides on
-    ``FaultSimResult.repair``."""
+    """Fat-tree incast under a failure schedule with the control plane in
+    the recovery loop (``planner.repair_placement`` per restart)."""
     from repro.core import planner  # local import: core.planner is upstream
 
     keys_arr = np.asarray(keys)
@@ -1383,6 +1500,39 @@ def simulate_fat_tree_job_with_faults(
                             on_restart=on_restart)
     fsr.repair = state["repair"]
     return fsr
+
+
+def simulate_fat_tree_job_with_faults(
+    ft,
+    keys,
+    values,
+    *,
+    injector,
+    fault_policy=None,
+    placement=None,
+    policy: str = "auto",
+    op: str = "sum",
+    cfg: NetConfig | None = None,
+    mapper_delay: Callable[[int], float] | None = None,
+    job_id: int = 0,
+    tag: str = "",
+) -> FaultSimResult:
+    """Deprecated: use :func:`repro.net.simulate` with a
+    ``planner.FatTreeTopology`` and ``faults=`` (DESIGN.md §13).
+
+    The fat-tree incast under a failure schedule, with the control plane
+    in the recovery loop: after each restart the driver calls
+    ``planner.repair_placement`` on the positions declared dead, and
+    the next epoch runs the *repaired* placement — dead switches become
+    forward-only relays, and a tier that lost every switch is re-placed
+    around entirely (DESIGN.md §12).  The final ``PlacementRepair`` (its
+    degraded byte model is the modeled JCT-penalty source) rides on
+    ``FaultSimResult.repair``."""
+    _warn_deprecated("simulate_fat_tree_job_with_faults")
+    return _fat_tree_job_with_faults(
+        ft, keys, values, injector=injector, fault_policy=fault_policy,
+        placement=placement, policy=policy, op=op, cfg=cfg,
+        mapper_delay=mapper_delay, job_id=job_id, tag=tag)
 
 
 def fat_tree_jct_comparison(
@@ -1423,7 +1573,7 @@ def fat_tree_jct_comparison(
             ft, per_host_pairs=per_host_pairs, key_variety=key_variety,
             policy=pol)
         for pol in policies}
-    results = simulate_jobs([
+    results = _simulate_jobs([
         _fat_tree_spec(ft, keys, values, placement=placements[pol], op=op,
                        cfg=cfg, tag=pol)
         for pol in policies])

@@ -39,7 +39,7 @@ loss rate:
   so accepted-arrival times, retransmit byte/queue telemetry, and JCT
   stay BIT-identical to ``transport.send_stream``.
 * ``dispatch_tier_ingest`` packs the kernel work of MANY tiers — the
-  concurrent jobs of ``net.sim.simulate_jobs`` — into as few
+  concurrent jobs of a batched ``repro.net.simulate`` — into as few
   ``tier_ingest`` calls as possible: works sharing a kernel-static
   signature (capacity, ways, op, bpe, exact_stream, packet geometry)
   concatenate their switch lanes into ONE batch.  ``vmap`` lanes are
@@ -984,7 +984,7 @@ def run_tier_fast(streams: list[PacketStream], *, level: int, fanin: int,
     processing, MTU re-framing, telemetry — arrays plus (at most) one
     kernel call: :func:`tier_start` → :func:`dispatch_tier_ingest` →
     :func:`tier_finish` for a single tier.  See those for the contract;
-    ``net.sim.simulate_jobs`` drives the trio directly so concurrent
+    the sim's lockstep batch driver runs the trio directly so concurrent
     jobs' tiers can share kernel batches."""
     work = tier_start(
         streams, level=level, fanin=fanin, spec=spec, op=op, cfg=cfg,

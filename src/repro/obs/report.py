@@ -283,6 +283,51 @@ def _fault_timeline_rows(metrics: list) -> list:
     return rows
 
 
+def _churn_rows(metrics: list) -> list:
+    """The online-controller snapshot (DESIGN.md §13) as one summary row
+    per scarce axis, or [] when no controller ran."""
+    rows = []
+    for lbl, util in _series(metrics, "controller.scarce_utilization"):
+        ax = lbl.get("axis", "?")
+        rows.append({
+            "scarce_axis": ax,
+            "active": int(_get(metrics, "controller.active_jobs") or 0),
+            "degraded": int(_get(metrics, "controller.degraded_jobs") or 0),
+            "admitted": int(sum(v for _, v in _series(
+                metrics, "controller.admitted_total"))),
+            "evictions": int(sum(v for _, v in _series(
+                metrics, "controller.evictions_total"))),
+            "expansions": int(sum(v for _, v in _series(
+                metrics, "controller.expansions_total"))),
+            "placements_scored": int(sum(v for _, v in _series(
+                metrics, "controller.candidates_scored_total"))),
+            "scarce_bytes": _get(metrics, "controller.scarce_bytes",
+                                 axis=ax) or 0.0,
+            "utilization": util,
+        })
+    return rows
+
+
+def _churn_tenant_rows(metrics: list) -> list:
+    rows = []
+    for lbl, d in _series(metrics, "controller.tenant.demand_bytes"):
+        t = lbl.get("tenant", "?")
+        want = {"tenant": t}
+        share = _get(metrics, "controller.tenant.share_bytes", **want) or 0.0
+        rows.append({
+            "tenant": t,
+            "jobs": int(_get(metrics, "controller.tenant.jobs",
+                             **want) or 0),
+            "weight": _get(metrics, "controller.tenant.weight",
+                           **want) or 1.0,
+            "demand_bytes": d,
+            "share_bytes": share,
+            "satisfied": min(share / d, 1.0) if d > 0 else 1.0,
+        })
+    rows.sort(key=lambda r: -r["demand_bytes"])
+    return rows
+
+
 def _trace_rows(tracer) -> list:
     agg: dict = {}
     for ev in tracer.events:
@@ -387,6 +432,33 @@ def dashboard_markdown(metrics: list, tracer=None,
                          f"{_fmt(r['t_detect_s'])} | {r['kind']} | "
                          f"{r['level']} | {r['switch']} | {r['epoch']} | "
                          f"{r['detected_by']} |")
+    else:
+        L.append("_no data_")
+    L += ["", "## Churn", ""]
+    churn = _churn_rows(metrics)
+    if churn:
+        L += ["| scarce axis | active | degraded | admitted | evictions | "
+              "re-expansions | placements scored | scarce bytes | "
+              "utilization |", "|---|---|---|---|---|---|---|---|---|"]
+        for r in churn:
+            L.append(f"| {r['scarce_axis']} | {r['active']} | "
+                     f"{r['degraded']} | {r['admitted']} | "
+                     f"{r['evictions']} | {r['expansions']} | "
+                     f"{r['placements_scored']} | "
+                     f"{_fmt(r['scarce_bytes'])} | "
+                     f"{r['utilization']:.1%} |")
+        tn = _churn_tenant_rows(metrics)
+        if tn:
+            L += ["", "### Tenant fairness (weighted max-min)", "",
+                  "| tenant | jobs | weight | demand bytes | fair share "
+                  "bytes | satisfied | |", "|---|---|---|---|---|---|---|"]
+            for r in tn:
+                L.append(f"| {r['tenant']} | {r['jobs']} | "
+                         f"{_fmt(r['weight'])} | "
+                         f"{_fmt(r['demand_bytes'])} | "
+                         f"{_fmt(r['share_bytes'])} | "
+                         f"{r['satisfied']:.1%} | "
+                         f"`{_md_bar(r['satisfied'])}` |")
     else:
         L.append("_no data_")
     if tracer is not None and tracer.events:
@@ -538,6 +610,25 @@ def dashboard_html(metrics: list, tracer=None,
         + _html_table(tl_rows, ["job", "engine", "t_detect_s", "kind",
                                 "level", "switch", "epoch", "detected_by"],
                       {"t_detect_s": _fmt}) + "</section>")
+    churn = _churn_rows(metrics)
+    tn_rows = _churn_tenant_rows(metrics)
+    sec.append(
+        '<section class="viz-root"><h1>Churn</h1>'
+        '<p class="sub">online controller under arrivals/departures '
+        "(DESIGN.md §13): active/degraded jobs, preemption and "
+        "re-expansion totals, placement work, and the weighted max-min "
+        "fair shares of the scarce uplink per tenant</p>"
+        + _html_table(churn, ["scarce_axis", "active", "degraded",
+                              "admitted", "evictions", "expansions",
+                              "placements_scored", "scarce_bytes",
+                              "utilization"],
+                      {"scarce_bytes": _fmt, "utilization": pct})
+        + _html_bars(tn_rows, "tenant", "satisfied",
+                     color_var="--series-1", fmt=pct, frac_of=1.0)
+        + _html_table(tn_rows, ["tenant", "jobs", "weight", "demand_bytes",
+                                "share_bytes", "satisfied"],
+                      {"demand_bytes": _fmt, "share_bytes": _fmt,
+                       "satisfied": pct}) + "</section>")
     if tracer is not None and tracer.events:
         sec.append(
             '<section class="viz-root"><h1>Top spans</h1>'

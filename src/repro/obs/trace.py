@@ -13,7 +13,7 @@ Two kinds of time coexist in one trace:
 * **simulated time** (one pid per sim run, allocated with
   :meth:`Tracer.new_track`): the network simulator replays its virtual
   clock as explicit ``add_span(name, t0_s, t1_s)`` calls, so a
-  ``simulate_job`` renders as a timeline of per-level ingest /
+  simulated job renders as a timeline of per-level ingest /
   transport-drain lanes even though the whole thing executed in
   milliseconds of host time.
 
@@ -177,7 +177,7 @@ class Tracer:
     def new_track(self, name: str) -> int:
         """Allocate a fresh pid for a virtual-time track (e.g. one sim job).
 
-        Each ``simulate_job`` gets its own track so repeated runs never
+        Each simulated job gets its own track so repeated runs never
         interleave partially-overlapping spans on one lane — nesting per
         (pid, tid) stays well-formed by construction.
         """

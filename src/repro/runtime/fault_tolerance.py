@@ -57,7 +57,7 @@ class StragglerInjector:
     """Deterministic fault-injection delays, keyed by an integer index.
 
     One injector serves both clocks: as a ``TrainLoop`` ``delay_hook`` the
-    index is the step; as ``net.sim.simulate_job``'s ``mapper_delay`` the
+    index is the step; as a sim ``JobSpec``'s ``mapper_delay`` the
     index is the mapper rank — so the same injected slowdown that trips the
     :class:`StragglerMonitor` in the training loop shows up as JCT tail
     inflation in the packet-level simulator (DESIGN.md §7).

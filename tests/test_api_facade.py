@@ -1,0 +1,226 @@
+"""The unified public API (DESIGN.md §13): ``repro.net.simulate`` and
+``repro.core.plan``.
+
+Two contracts under test.  First, *shim equivalence*: every one of the
+seven legacy ``net.sim`` entry points must emit a ``DeprecationWarning``
+and return a result bit-identical to the facade's, on both engines — a
+shim that drifts from the front door it points at would make the
+deprecation a silent behavior change.  Second, the facade's own argument
+discipline: dispatch rejects shapes it cannot route, ``admissions=`` is
+batch-only, and config validation (engine names, loss rates, fanins)
+raises at construction, before any simulation state exists.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import dataplane, planner
+from repro.core import reduction_model as rm
+from repro.net import sim as netsim
+from repro.net import simulate
+from repro.runtime.fault_tolerance import FailureEvent, FailureInjector
+
+ENGINES = ("node", "vectorized")
+
+
+def _job(seed=0, n=240, variety=32):
+    keys = rm.zipf_keys(n, variety, seed=seed).astype(np.int32)
+    vals = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    return keys, vals
+
+
+def _plan(caps, op="sum"):
+    return dataplane.CascadePlan(op=op, levels=tuple(
+        dataplane.LevelSpec(capacity=c) for c in caps))
+
+
+def _cfg(engine, **kw):
+    return netsim.NetConfig(records_per_packet=16, engine=engine, **kw)
+
+
+def _identical(a, b):
+    assert a.report() == b.report()
+    assert a.delivered_table() == b.delivered_table()
+    assert a.jct_s == b.jct_s
+
+
+# ---------------------------------------------------------------------------
+# Shim equivalence: every legacy name warns AND matches the facade exactly.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_shim_simulate_job(engine):
+    keys, vals = _job()
+    kw = dict(fanins=(2, 2), plan=_plan([32, 16]), cfg=_cfg(engine))
+    with pytest.warns(DeprecationWarning, match="use repro.net.simulate"):
+        old = netsim.simulate_job(keys, vals, **kw)
+    new = simulate(netsim.JobSpec(keys=keys, values=vals, **kw))
+    _identical(old, new)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_shim_simulate_jobs(engine):
+    keys, vals = _job()
+    specs = [netsim.JobSpec(keys=keys, values=vals, fanins=(2, 2),
+                            plan=_plan([32, 16]), cfg=_cfg(engine),
+                            job_id=j) for j in range(2)]
+    with pytest.warns(DeprecationWarning, match="use repro.net.simulate"):
+        old = netsim.simulate_jobs(specs)
+    new = simulate(specs)
+    for o, n in zip(old, new):
+        _identical(o, n)
+
+
+def _admitted_plan():
+    topo = planner.Topology(links=(
+        planner.LinkBudget(axis="data", fanin=4, gbps=netsim.TEN_GBE),
+        planner.LinkBudget(axis="pod", fanin=2, gbps=netsim.TEN_GBE / 4)))
+    sched = planner.JobScheduler(topo, combiner_budget_pairs=256)
+    return sched.admit(planner.LaunchRequest(
+        job_id=1, n_workers=8, expected_pairs=64, key_variety=32,
+        grad_bytes=1 << 18))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_shim_simulate_job_plan(engine):
+    jp = _admitted_plan()
+    keys, vals = _job(n=8 * 64)
+    with pytest.warns(DeprecationWarning, match="use repro.net.simulate"):
+        old = netsim.simulate_job_plan(jp, keys, vals, cfg=_cfg(engine))
+    new = simulate(jp, keys, vals, cfg=_cfg(engine))
+    _identical(old, new)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_shim_simulate_job_plans(engine):
+    jp = _admitted_plan()
+    keys, vals = _job(n=8 * 64)
+    with pytest.warns(DeprecationWarning, match="use repro.net.simulate"):
+        old = netsim.simulate_job_plans([jp], [keys], [vals],
+                                        cfg=_cfg(engine))
+    new = simulate([jp], [keys], [vals], cfg=_cfg(engine))
+    for o, n in zip(old, new):
+        _identical(o, n)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_shim_simulate_job_with_faults(engine):
+    keys, vals = _job()
+    inj = FailureInjector({}, events=(FailureEvent(
+        kind="switch_crash", t_s=1e-6, level=0, switch=1),))
+    kw = dict(fanins=(4, 2), cfg=_cfg(engine))
+    with pytest.warns(DeprecationWarning, match="use repro.net.simulate"):
+        old = netsim.simulate_job_with_faults(keys, vals, injector=inj, **kw)
+    new = simulate(netsim.JobSpec(keys=keys, values=vals, **kw), faults=inj)
+    assert old.delivered_table() == new.delivered_table()
+    assert old.jct_s == new.jct_s and old.epochs == new.epochs
+
+
+def _small_ft():
+    return planner.FatTreeTopology(pods=2, tors_per_pod=2, hosts_per_tor=4,
+                                   oversubscription=2.0, table_pairs=256)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_shim_simulate_fat_tree_job(engine):
+    ft = _small_ft()
+    keys, vals = _job(n=ft.n_hosts * 16, variety=64)
+    with pytest.warns(DeprecationWarning, match="use repro.net.simulate"):
+        old = netsim.simulate_fat_tree_job(ft, keys, vals, policy="full",
+                                           cfg=_cfg(engine))
+    new = simulate(ft, keys, vals, policy="full", cfg=_cfg(engine))
+    _identical(old, new)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_shim_simulate_fat_tree_job_with_faults(engine):
+    ft = _small_ft()
+    keys, vals = _job(n=ft.n_hosts * 16, variety=64)
+    inj = FailureInjector({}, events=(FailureEvent(
+        kind="switch_crash", t_s=1e-6, level=0, switch=1),))
+    with pytest.warns(DeprecationWarning, match="use repro.net.simulate"):
+        old = netsim.simulate_fat_tree_job_with_faults(
+            ft, keys, vals, injector=inj, policy="full", cfg=_cfg(engine))
+    new = simulate(ft, keys, vals, faults=inj, policy="full",
+                   cfg=_cfg(engine))
+    assert old.delivered_table() == new.delivered_table()
+    assert old.jct_s == new.jct_s and old.epochs == new.epochs
+
+
+def test_engine_kwarg_overrides_without_rebuilding_cfg():
+    """``engine=`` rides on top of whatever cfg the caller holds."""
+    keys, vals = _job()
+    spec = netsim.JobSpec(keys=keys, values=vals, fanins=(2, 2),
+                          plan=_plan([32, 16]), cfg=_cfg("node"))
+    rn = simulate(spec)
+    rv = simulate(spec, engine="vectorized")
+    _identical(rn, rv)
+
+
+# ---------------------------------------------------------------------------
+# Facade argument discipline.
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_rejects_unroutable_shapes():
+    keys, vals = _job()
+    with pytest.raises(TypeError, match="cannot dispatch"):
+        simulate({"not": "a spec"})
+    with pytest.raises(TypeError, match="all JobSpec or all JobPlan"):
+        simulate([netsim.JobSpec(keys=keys, values=vals, fanins=(2,)),
+                  "nope"])
+    # a JobSpec carries its own stream — positional keys/values conflict
+    with pytest.raises(TypeError, match="carries its own"):
+        simulate(netsim.JobSpec(keys=keys, values=vals, fanins=(2,)),
+                 keys, vals)
+    # plan/fat-tree forms need the stream
+    with pytest.raises(TypeError, match="needs\\s+the mapper stream"):
+        simulate(_admitted_plan())
+    with pytest.raises(TypeError, match="needs\\s+the mapper stream"):
+        simulate(_small_ft())
+
+
+def test_admissions_is_batch_only():
+    keys, vals = _job()
+    spec = netsim.JobSpec(keys=keys, values=vals, fanins=(2, 2))
+    with pytest.raises(TypeError, match="admissions"):
+        simulate(spec, admissions=[(1, spec)])
+    # and faults are per-job, never per-batch
+    inj = FailureInjector({}, events=())
+    with pytest.raises(ValueError, match="faults= is per-job"):
+        simulate([spec, spec], faults=inj)
+
+
+def test_mid_run_admission_joins_lockstep_and_keeps_parity():
+    """A job admitted mid-run finishes with the same result as running
+    alone (jobs never interact), on both engines."""
+    keys, vals = _job()
+    runs = {}
+    for engine in ENGINES:
+        base = netsim.JobSpec(keys=keys, values=vals, fanins=(2, 2),
+                              plan=_plan([32, 16]), cfg=_cfg(engine))
+        late = dataclasses.replace(base, job_id=7, tag="late")
+        got = simulate([base], admissions=[(2, late)])
+        assert len(got) == 2
+        solo = simulate(late)
+        _identical(got[1], solo)
+        runs[engine] = got
+    for a, b in zip(runs["node"], runs["vectorized"]):
+        _identical(a, b)
+
+
+def test_config_validation_raises_at_construction():
+    with pytest.raises(ValueError, match="unknown sim engine"):
+        netsim.NetConfig(engine="warp_drive")
+    with pytest.raises(ValueError, match="loss_rate"):
+        netsim.NetConfig(loss_rate=1.0)
+    with pytest.raises(ValueError, match="loss_rate"):
+        netsim.NetConfig(loss_rate=-0.1)
+    keys, vals = _job()
+    with pytest.raises(ValueError, match="positive mapper"):
+        netsim.JobSpec(keys=keys, values=vals, fanins=(0, 2))
+    with pytest.raises(ValueError, match="positive mapper"):
+        netsim.JobSpec(keys=keys, values=vals, fanins=())

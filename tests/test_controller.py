@@ -1,0 +1,311 @@
+"""Online multi-tenant controller (DESIGN.md §13): incremental admission,
+value-based preemption, weighted max-min fairness, and re-expansion.
+
+The controller's contract with the rest of the repo: admissions run the
+placement search ONLY on the residual capability (no full replan),
+preempted victims degrade through ``planner.repair_placement`` — the same
+path switch crashes take, so in-flight state stays exactly-once via the
+§12 epoch-restart driver — and departures re-expand degraded survivors
+only when the re-search actually buys scarce-uplink bytes.  ``plan()``
+is the one planning front door; its routing table is pinned here.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import controller as ctl_lib
+from repro.core import planner as pl
+from repro.core import plan
+from repro.core.controller import (Admission, OnlineController,
+                                   OnlineJobRequest, weighted_max_min)
+
+
+def _ft(**kw):
+    base = dict(pods=2, tors_per_pod=2, hosts_per_tor=2,
+                oversubscription=2.0, table_pairs=256)
+    base.update(kw)
+    return pl.FatTreeTopology(**base)
+
+
+def _req(jid, *, pairs=512, variety=128, tenant="a", value=1.0):
+    return OnlineJobRequest(job_id=jid, expected_pairs=pairs,
+                            key_variety=variety, tenant=tenant, value=value)
+
+
+# ---------------------------------------------------------------------------
+# Admission + residual accounting.
+# ---------------------------------------------------------------------------
+
+
+def test_first_admission_gets_full_capability():
+    ctl = OnlineController(_ft())
+    adm = ctl.admit(_req(0, variety=128))
+    assert isinstance(adm, Admission)
+    assert not adm.degraded and adm.preempted == ()
+    # capability = min(variety, table) on every placeable tier
+    assert dict(adm.caps) == {t: 128 for t in ctl.placeable_tiers()}
+    # reservations only on tiers the placement actually uses
+    for tier, pairs in adm.grants:
+        assert tier in adm.placement.tiers and pairs == 128
+        assert ctl.used_pairs(tier) == 128
+        assert ctl.residual_pairs(tier) == 256 - 128
+
+
+def test_admission_is_incremental_not_a_replan():
+    """Admitting job k never re-places jobs 0..k-1."""
+    ctl = OnlineController(_ft())
+    placements = {}
+    for j in range(3):
+        ctl.admit(_req(j, variety=64))
+        placements[j] = {i: ctl.jobs[i].placement for i in ctl.jobs}
+    # earlier jobs' placements are the very same objects at every step
+    assert placements[2][0] is placements[0][0]
+    assert placements[2][1] is placements[1][1]
+
+
+def test_exhausted_tier_degrades_lower_value_arrivals():
+    """With preemption off, an arrival on a full fabric degrades (fewer
+    tiers / host-only) instead of failing."""
+    ctl = OnlineController(_ft(table_pairs=128), preemption=False)
+    first = ctl.admit(_req(0, variety=128))
+    adm = ctl.admit(_req(1, variety=128))
+    assert adm.degraded and adm.preempted == ()
+    # tiers the first job reserved are off-limits; only leftovers granted
+    taken = dict(first.grants)
+    assert all(t not in taken for t, _ in adm.grants)
+    # a degraded job still has a legal placement
+    assert adm.placement.scarce_uplink_bytes > 0
+
+
+def test_duplicate_job_id_rejected():
+    ctl = OnlineController(_ft())
+    ctl.admit(_req(0))
+    with pytest.raises(ValueError, match="already active"):
+        ctl.admit(_req(0))
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        OnlineJobRequest(job_id=0, expected_pairs=0, key_variety=8)
+    with pytest.raises(ValueError):
+        OnlineJobRequest(job_id=0, expected_pairs=8, key_variety=0)
+    with pytest.raises(ValueError):
+        OnlineJobRequest(job_id=0, expected_pairs=8, key_variety=8,
+                         value=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# Value-based preemption -> repair_placement -> exactly-once.
+# ---------------------------------------------------------------------------
+
+
+def test_high_value_arrival_preempts_low_value_victim():
+    ctl = OnlineController(_ft(table_pairs=128))
+    ctl.admit(_req(0, variety=128, value=1.0))
+    before = ctl.jobs[0].placement
+    adm = ctl.admit(_req(1, variety=128, value=5.0))
+    assert adm.preempted == (0,)
+    assert not adm.degraded  # preemption bought full capability
+    assert ctl.evictions  # recorded, with before/after placements
+    ev = ctl.evictions[0]
+    assert ev.job_id == 0 and ev.by_job == 1
+    assert ev.before is before
+    # the victim was repaired, not killed: still active, now degraded
+    assert 0 in ctl.jobs and ctl.jobs[0].degraded
+    assert ctl.jobs[0].grants.get(ev.tier, 0) == 0
+    # repair went through planner.repair_placement
+    assert ctl.jobs[0].placement.policy.startswith("repair(")
+
+
+def test_low_value_arrival_never_preempts():
+    ctl = OnlineController(_ft(table_pairs=128))
+    ctl.admit(_req(0, variety=128, value=5.0))
+    adm = ctl.admit(_req(1, variety=128, value=1.0))
+    assert adm.preempted == () and adm.degraded
+    assert not ctl.evictions
+
+
+def test_partial_residual_degrades_instead_of_evicting():
+    """Preemption only fires when a tier is EXHAUSTED; any residual
+    table means the arrival takes the partial grant."""
+    ctl = OnlineController(_ft(table_pairs=192))
+    first = ctl.admit(_req(0, variety=128, value=1.0))  # leaves 64/tier
+    adm = ctl.admit(_req(1, variety=128, value=9.0))
+    assert adm.preempted == () and not ctl.evictions
+    # on contended tiers the arrival takes the 64-pair residual, degraded
+    taken = dict(first.grants)
+    caps = dict(adm.caps)
+    assert all(caps[t] == 64 for t in taken)
+    assert adm.degraded
+
+
+def test_eviction_failure_events_drive_exactly_once_recovery():
+    """The eviction's FailureEvents ride the §12 epoch-restart driver: a
+    victim mid-job delivers the same table as its clean run."""
+    from repro.net import simulate
+    from repro.net.sim import NetConfig
+    from repro.runtime.fault_tolerance import FailureInjector
+
+    ft = _ft(table_pairs=64)
+    ctl = OnlineController(ft)
+    victim = ctl.admit(_req(0, pairs=64, variety=64, value=1.0))
+    ctl.admit(_req(1, pairs=64, variety=64, value=5.0))
+    assert ctl.evictions
+    ev = ctl.evictions[0]
+    events = ctl.eviction_failure_events(ev, t_s=1e-5)
+    # one switch_crash per switch of the evicted tier
+    lvl = ctl._tier_level(ev.tier)
+    fanins = tuple(l.fanin for l in ft.link_tiers())
+    assert len(events) == int(np.prod(fanins[lvl + 1:]))
+    assert all(e.kind == "switch_crash" and e.level == lvl for e in events)
+
+    rng = np.random.default_rng(0)
+    n = ft.n_hosts * 64
+    keys = rng.integers(0, 64, size=n).astype(np.int32)
+    vals = rng.integers(1, 5, size=n).astype(np.float64)
+    clean = simulate(ft, keys, vals, placement=victim.placement,
+                     cfg=NetConfig(seed=3))
+    faulted = simulate(
+        ft, keys, vals, placement=victim.placement,
+        faults=FailureInjector({}, events=events),
+        cfg=NetConfig(seed=3, loss_rate=0.05))
+    assert faulted.delivered_table() == clean.delivered_table()
+    assert faulted.epochs > 1
+
+
+# ---------------------------------------------------------------------------
+# Weighted max-min fairness.
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_max_min_water_filling():
+    shares = weighted_max_min({"a": 10.0, "b": 100.0, "c": 100.0},
+                              {"a": 1.0, "b": 2.0, "c": 1.0}, 100.0)
+    # a fits under its share and keeps its demand; the surplus water-fills
+    # b:c at 2:1
+    assert shares["a"] == pytest.approx(10.0)
+    assert shares["b"] == pytest.approx(60.0)
+    assert shares["c"] == pytest.approx(30.0)
+    assert sum(shares.values()) == pytest.approx(100.0)
+    # no contention: everyone keeps their demand
+    easy = weighted_max_min({"a": 5.0, "b": 5.0}, {}, 100.0)
+    assert easy == {"a": 5.0, "b": 5.0}
+
+
+def test_fair_shares_follow_tenant_weights():
+    ctl = OnlineController(_ft(), tenant_weights={"a": 2.0, "b": 1.0},
+                           scarce_budget_bytes=1.0)
+    ctl.admit(_req(0, tenant="a"))
+    ctl.admit(_req(1, tenant="b"))
+    shares = ctl.fair_shares()
+    # both saturate an (artificially) scarce budget: split 2:1
+    assert shares["a"] / shares["b"] == pytest.approx(2.0)
+    rep = ctl.report()
+    assert rep.tenants["a"]["weight"] == 2.0
+    assert rep.tenants["a"]["n_jobs"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Departure -> re-expansion.
+# ---------------------------------------------------------------------------
+
+
+def test_release_reexpands_degraded_survivor():
+    ctl = OnlineController(_ft(table_pairs=128), preemption=False)
+    ctl.admit(_req(0, variety=128))
+    degraded = ctl.admit(_req(1, variety=128))
+    assert degraded.degraded
+    before_bytes = ctl.jobs[1].placement.scarce_uplink_bytes
+    expansions = ctl.release(0)
+    assert 0 not in ctl.jobs
+    assert [e.job_id for e in expansions] == [1]
+    assert not ctl.jobs[1].degraded
+    assert expansions[0].scarce_bytes_saved > 0
+    assert ctl.jobs[1].placement.scarce_uplink_bytes < before_bytes
+    # grants now cover the freed capability
+    assert ctl.jobs[1].grants
+    assert ctl.expansions == expansions
+
+
+def test_release_is_idempotent():
+    ctl = OnlineController(_ft())
+    assert ctl.release(99) == []  # unknown/already-departed: a no-op
+    ctl.admit(_req(0))
+    ctl.release(0)
+    assert ctl.release(0) == [] and not ctl.jobs
+
+
+def test_report_snapshot_counts():
+    ctl = OnlineController(_ft(table_pairs=128), preemption=False)
+    ctl.admit(_req(0, variety=128))
+    ctl.admit(_req(1, variety=128))
+    rep = ctl.report()
+    assert rep.n_active == 2 and rep.n_degraded == 1
+    assert rep.admitted_total == 2
+    assert rep.scarce_axis == ctl.ft.scarce_uplink_axis()
+    assert rep.total_scarce_bytes == pytest.approx(ctl.total_scarce_bytes())
+    d = rep.to_dict()
+    assert d["n_active"] == 2 and "scarce_utilization" in d
+    assert "admitted" in rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# plan(): the one planning front door.
+# ---------------------------------------------------------------------------
+
+
+def test_plan_routes_online_requests_to_a_controller():
+    ft = _ft()
+    adm = plan(_req(0), ft)
+    assert isinstance(adm, Admission)
+    got = plan([_req(1), _req(2, tenant="b")], ft,
+               tenant_weights={"a": 2.0, "b": 1.0})
+    assert isinstance(got, OnlineController)
+    assert sorted(got.jobs) == [1, 2]
+    assert got.tenant_weights == {"a": 2.0, "b": 1.0}
+    # live-instance routing: incremental admission on the same controller
+    adm3 = plan(_req(3), got)
+    assert adm3.job_id == 3 and 3 in got.jobs
+
+
+def test_plan_routes_launch_requests():
+    ft = _ft()
+    lr = pl.LaunchRequest(job_id=1, n_workers=ft.n_hosts,
+                          expected_pairs=64, key_variety=64)
+    jp = plan(lr, ft)
+    assert hasattr(jp, "configure") and hasattr(jp, "tree")  # a JobPlan
+
+    topo = ft.to_topology()
+    jp2 = plan(lr, topo, combiner_budget_pairs=256)
+    assert hasattr(jp2, "configure")
+    reqs = [pl.LaunchRequest(job_id=j + 1, n_workers=8, expected_pairs=64,
+                             key_variety=64) for j in range(2)]
+    rep = plan(reqs, topo, combiner_budget_pairs=256)
+    assert len(list(rep.jobs)) == 2  # a SchedulerReport
+
+    sched = pl.JobScheduler(topo, combiner_budget_pairs=256)
+    jp3 = plan(pl.LaunchRequest(job_id=9, n_workers=8, expected_pairs=64,
+                                key_variety=64), sched)
+    assert jp3.configure.tree_id == 9
+
+
+def test_plan_rejects_unroutable_shapes():
+    with pytest.raises(TypeError, match="cannot dispatch"):
+        plan(_req(0), "not a topology")
+    with pytest.raises(TypeError, match="OnlineJobRequest"):
+        plan([_req(0), pl.LaunchRequest(job_id=1, n_workers=2,
+                                        expected_pairs=8, key_variety=8)],
+             _ft())
+
+
+def test_controller_metrics_published():
+    from repro.obs import metrics as obs_metrics
+
+    reg = obs_metrics.get_registry()
+    ctl = OnlineController(_ft(table_pairs=128))
+    ctl.admit(_req(0, variety=128, value=1.0, tenant="a"))
+    ctl.admit(_req(1, variety=128, value=5.0, tenant="b"))
+    assert reg.value("controller.active_jobs") == 2
+    assert reg.value("controller.admitted_total", tenant="a") >= 1
+    assert sum(v for _, v in reg.find("controller.evictions_total")) >= 1
+    assert ctl.candidates_scored_total > 0

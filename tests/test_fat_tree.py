@@ -293,10 +293,10 @@ def test_disabled_hop_telemetry_zero_proc_nonzero_bytes(small_incast):
         ft, per_host_pairs=512, key_variety=512, policy="tor_only")
     assert placement.level_enabled[0] and not all(placement.level_enabled)
     cfg = netsim.NetConfig(exact_stream=True, records_per_packet=32)
-    res = {eng: netsim.simulate_fat_tree_job(
-        ft, keys, vals, placement=placement,
-        cfg=dataclasses.replace(cfg, engine=eng))
-        for eng in ("node", "vectorized")}
+    from repro.net import simulate
+    res = {eng: simulate(ft, keys, vals, placement=placement,
+                         cfg=dataclasses.replace(cfg, engine=eng))
+           for eng in ("node", "vectorized")}
     for eng, r in res.items():
         for lvl, enabled in zip(r.per_level, placement.level_enabled):
             if enabled:
@@ -317,12 +317,13 @@ def test_host_only_placement_equals_aggregate_false_baseline(small_incast):
 
     ft, keys, cmp = small_incast
     vals = np.ones_like(keys, np.float32)
-    base = netsim.simulate_job(
-        keys, vals, fanins=ft.fanins, aggregate=False,
+    from repro.net import simulate
+    base = simulate(netsim.JobSpec(
+        keys=keys, values=vals, fanins=ft.fanins, aggregate=False,
         cfg=netsim.NetConfig(
             link_gbps=tuple(l.gbps for l in ft.link_tiers()),
             reducer_gbps=ft.edge_gbps, exact_stream=False),
-        axes=ft.axes)
+        axes=ft.axes))
     host = cmp["_results"]["host_only"]
     assert host.jct_s == pytest.approx(base.jct_s)
     assert host.arrived_records == base.arrived_records

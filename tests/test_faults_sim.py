@@ -21,7 +21,7 @@ from conftest import dict_aggregate
 from repro.core import aggops
 from repro.core import planner as pl
 from repro.net import sim as netsim
-from repro.net import transport, wire
+from repro.net import simulate, transport, wire
 from repro.runtime.fault_tolerance import (FailureEvent, FailureInjector,
                                            FailureVerdict, FaultPolicy)
 
@@ -40,16 +40,16 @@ def _run(job, events, *, policy=None, engine="node", loss=0.0, op="sum"):
     keys, vals = job
     inj = FailureInjector({}, events=tuple(events))
     cfg = netsim.NetConfig(engine=engine, loss_rate=loss, seed=7)
-    return netsim.simulate_job_with_faults(
-        keys, vals, fanins=FANINS, injector=inj, policy=policy, op=op,
-        cfg=cfg)
+    return simulate(netsim.JobSpec(keys=keys, values=vals, fanins=FANINS,
+                                   op=op, cfg=cfg),
+                    faults=inj, fault_policy=policy)
 
 
 def _oracle(job, *, engine="node", loss=0.0, op="sum"):
     keys, vals = job
     cfg = netsim.NetConfig(engine=engine, loss_rate=loss, seed=7)
-    return netsim.simulate_job(keys, vals, fanins=FANINS, op=op,
-                               cfg=cfg).delivered_table()
+    return simulate(netsim.JobSpec(keys=keys, values=vals, fanins=FANINS,
+                                   op=op, cfg=cfg)).delivered_table()
 
 
 # ---------------------------------------------------------------------------
@@ -247,8 +247,9 @@ def test_seeded_schedules_exactly_once_every_op(job, op):
         runs = {}
         for engine in ENGINES:
             cfg = netsim.NetConfig(engine=engine, loss_rate=0.03, seed=11)
-            fsr = netsim.simulate_job_with_faults(
-                keys, vals, fanins=FANINS, injector=inj, op=op, cfg=cfg)
+            fsr = simulate(netsim.JobSpec(keys=keys, values=vals,
+                                          fanins=FANINS, op=op, cfg=cfg),
+                           faults=inj)
             assert fsr.delivered_table() == _oracle(
                 job, engine=engine, loss=0.03, op=op)
             runs[engine] = fsr
@@ -284,10 +285,10 @@ def test_property_any_schedule_exactly_once(job):
                                         fanins=FANINS, t_max_s=6e-6)
         for engine in ENGINES:
             cfg = netsim.NetConfig(engine=engine, loss_rate=loss, seed=seed)
-            fsr = netsim.simulate_job_with_faults(
-                keys, vals, fanins=FANINS, injector=inj, cfg=cfg)
-            want = netsim.simulate_job(keys, vals, fanins=FANINS,
-                                       cfg=cfg).delivered_table()
+            spec = netsim.JobSpec(keys=keys, values=vals, fanins=FANINS,
+                                  cfg=cfg)
+            fsr = simulate(spec, faults=inj)
+            want = simulate(spec).delivered_table()
             assert fsr.delivered_table() == want
 
     check()
@@ -367,17 +368,15 @@ def test_fat_tree_tor_crash_repairs_and_finishes():
     vals = rng.integers(1, 5, size=n).astype(np.float64)
     want = dict_aggregate(keys, vals, "sum")
 
-    base = netsim.simulate_fat_tree_job(ft, keys, vals, policy="full",
-                                        cfg=netsim.NetConfig())
+    base = simulate(ft, keys, vals, policy="full", cfg=netsim.NetConfig())
     # crash a ToR inside the tier-0 busy window (the clean JCT is
     # reducer-drain dominated, so "mid-job" for a ToR is early)
     inj = FailureInjector({}, events=(FailureEvent(
         kind="switch_crash", t_s=base.jct_s * 1e-3, level=0, switch=2),))
     runs = {}
     for engine in ENGINES:
-        fsr = netsim.simulate_fat_tree_job_with_faults(
-            ft, keys, vals, injector=inj, policy="full",
-            cfg=netsim.NetConfig(engine=engine))
+        fsr = simulate(ft, keys, vals, faults=inj, policy="full",
+                       cfg=netsim.NetConfig(engine=engine))
         assert fsr.epochs == 2
         assert fsr.bypass == ((0, 2),)
         # the control plane was in the loop: a repair rode back

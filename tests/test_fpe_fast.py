@@ -207,16 +207,18 @@ def test_stream_ingest_is_shape_stable():
 def test_sim_fast_path_delivers_same_totals():
     """The packet simulator with exact_stream=False delivers the same
     application table as the paper-faithful default."""
-    from repro.net import sim
+    from repro.net import sim, simulate
 
     r = np.random.default_rng(5)
     keys = r.integers(0, 64, size=256).astype(np.int32)
     vals = np.ones(256, np.float32)
     plan = CascadePlan(op="sum", levels=(LevelSpec(32, ways=4),
                                          LevelSpec(32, ways=4)))
-    exact = sim.simulate_job(keys, vals, fanins=(2, 2), plan=plan)
-    fast = sim.simulate_job(keys, vals, fanins=(2, 2), plan=plan,
-                            cfg=sim.NetConfig(exact_stream=False))
+    exact = simulate(sim.JobSpec(keys=keys, values=vals, fanins=(2, 2),
+                                 plan=plan))
+    fast = simulate(sim.JobSpec(keys=keys, values=vals, fanins=(2, 2),
+                                plan=plan,
+                                cfg=sim.NetConfig(exact_stream=False)))
     assert exact.delivered_table() == fast.delivered_table()
     assert fast.jct_s > 0
 

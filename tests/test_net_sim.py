@@ -16,7 +16,7 @@ from conftest import dict_aggregate
 from repro.core import aggops, dataplane, kvagg, planner
 from repro.core import reduction_model as rm
 from repro.net import sim as netsim
-from repro.net import wire
+from repro.net import simulate, wire
 from repro.runtime.fault_tolerance import StragglerInjector, StragglerMonitor
 
 EMPTY = int(kvagg.EMPTY_KEY)
@@ -25,6 +25,10 @@ EMPTY = int(kvagg.EMPTY_KEY)
 def _plan(caps, op="sum"):
     return dataplane.CascadePlan(op=op, levels=tuple(
         dataplane.LevelSpec(capacity=c) for c in caps))
+
+
+def _sim(keys, vals, **kw):
+    return simulate(netsim.JobSpec(keys=keys, values=vals, **kw))
 
 
 def test_wordcount_jct_reduction_at_least_40pct():
@@ -55,7 +59,7 @@ def test_lossless_delivery_matches_run_cascade(op):
     vals = np.random.default_rng(0).standard_normal(n).astype(np.float32)
     plan = _plan([32, 16], op=op)
     cfg = netsim.NetConfig(records_per_packet=32)
-    res = netsim.simulate_job(keys, vals, fanins=(2, 2), plan=plan, cfg=cfg)
+    res = _sim(keys, vals, fanins=(2, 2), plan=plan, cfg=cfg)
     ref = dataplane.run_cascade(jnp.asarray(keys), jnp.asarray(vals), plan)
     ref_keys = np.asarray(ref.keys)
     ref_vals = np.asarray(ref.values)
@@ -77,9 +81,8 @@ def test_lossless_delivery_matches_run_cascade(op):
 def test_host_only_baseline_forwards_everything():
     keys = rm.uniform_keys(512, 32, seed=1).astype(np.int32)
     vals = np.ones_like(keys, dtype=np.float32)
-    res = netsim.simulate_job(keys, vals, fanins=(4, 2), op="sum",
-                              aggregate=False,
-                              cfg=netsim.NetConfig(records_per_packet=32))
+    res = _sim(keys, vals, fanins=(4, 2), op="sum", aggregate=False,
+               cfg=netsim.NetConfig(records_per_packet=32))
     assert res.arrived_records == 512
     assert res.per_level[0]["records_in"] == 512
     assert res.per_level[-1]["records_out"] == 512
@@ -95,7 +98,7 @@ def test_host_only_baseline_honors_plan_op():
     jct = netsim.jct_comparison(
         keys, vals, fanins=(2, 2), plan=_plan([16, 16], op="mean"),
         cfg=netsim.NetConfig(records_per_packet=32))
-    host = netsim.simulate_job(
+    host = _sim(
         keys, vals, fanins=(2, 2), plan=_plan([16, 16], op="mean"),
         aggregate=False, cfg=netsim.NetConfig(records_per_packet=32))
     want = dict_aggregate(keys, vals, "mean")
@@ -125,9 +128,8 @@ def test_more_loss_never_cheaper_and_still_exact():
     keys = rm.zipf_keys(1024, 128, seed=3).astype(np.int32)
     vals = np.ones_like(keys, dtype=np.float32)
     cfg0 = netsim.NetConfig(records_per_packet=32)
-    base = netsim.simulate_job(keys, vals, fanins=(4,), plan=_plan([64]),
-                               cfg=cfg0)
-    lossy = netsim.simulate_job(
+    base = _sim(keys, vals, fanins=(4,), plan=_plan([64]), cfg=cfg0)
+    lossy = _sim(
         keys, vals, fanins=(4,), plan=_plan([64]),
         cfg=dataclasses.replace(cfg0, loss_rate=0.05, seed=5))
     assert lossy.retransmissions > 0
@@ -149,10 +151,10 @@ def test_straggler_delay_inflates_jct_tail():
     vals = np.ones_like(keys, dtype=np.float32)
     cfg = netsim.NetConfig(records_per_packet=32)
     common = dict(fanins=(4, 2), plan=_plan([128, 128]), cfg=cfg)
-    base = netsim.simulate_job(keys, vals, **common)
+    base = _sim(keys, vals, **common)
     delay = 50 * base.jct_s  # a mapper 50x slower than the whole lossless job
     inject = StragglerInjector({3: delay})
-    slow = netsim.simulate_job(keys, vals, mapper_delay=inject, **common)
+    slow = _sim(keys, vals, mapper_delay=inject, **common)
     assert slow.jct_s >= base.jct_s + 0.9 * delay  # the tail IS the straggler
     assert slow.mapper_finish_s[3] == max(slow.mapper_finish_s)
     # the per-mapper finish times trip the online straggler monitor
@@ -175,7 +177,7 @@ def test_scheduler_plan_roundtrip_and_drain_calibration():
         grad_bytes=1 << 20))
     keys = rm.zipf_keys(8 * 256, 64, seed=5).astype(np.int32)
     vals = np.ones_like(keys, dtype=np.float32)
-    res = netsim.simulate_job_plan(jp, keys, vals)
+    res = simulate(jp, keys, vals)
     # the sim ran the scheduler's tree: axes + link stats line up
     assert set(res.axes) == {"data", "pod"}
     assert set(res.link_stats) == {"data", "pod", "reducer"}

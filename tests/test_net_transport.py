@@ -44,7 +44,9 @@ def test_property_exactly_once_under_any_loss(n, variety, loss_rate, seed, op):
     plan = dataplane.CascadePlan(op=op, levels=tuple(
         dataplane.LevelSpec(capacity=c) for c in _CAPS))
     cfg = dataclasses.replace(_CFG, loss_rate=loss_rate, seed=seed)
-    res = netsim.simulate_job(keys, vals, fanins=_FANINS, plan=plan, cfg=cfg)
+    from repro.net import simulate
+    res = simulate(netsim.JobSpec(keys=keys, values=vals, fanins=_FANINS,
+                                  plan=plan, cfg=cfg))
     ref = dataplane.run_cascade(jnp.asarray(keys), jnp.asarray(vals), plan)
     want = {int(k): np.asarray(v) for k, v in
             zip(np.asarray(ref.keys), np.asarray(ref.values)) if k != EMPTY}

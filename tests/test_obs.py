@@ -24,6 +24,7 @@ import pytest
 from repro.core import dataplane, planner
 from repro.core import reduction_model as rm
 from repro.net import sim as netsim
+from repro.net import simulate
 from repro.obs import metrics as obs_metrics
 from repro.obs import report as obs_report
 from repro.obs import trace as obs_trace
@@ -37,10 +38,10 @@ def _small_plan(caps=(32, 32), op="sum"):
 def _run_small_job(tag="job"):
     keys = rm.zipf_keys(256, 64, skew=0.99, seed=0).astype(np.int32)
     vals = np.ones((256,), np.float32)
-    return netsim.simulate_job(
-        keys, vals, fanins=(2, 2), plan=_small_plan(),
+    return simulate(netsim.JobSpec(
+        keys=keys, values=vals, fanins=(2, 2), plan=_small_plan(),
         cfg=netsim.NetConfig(records_per_packet=8, exact_stream=True),
-        tag=tag)
+        tag=tag))
 
 
 def _run_lossy_fat_tree(engine):
@@ -54,8 +55,7 @@ def _run_lossy_fat_tree(engine):
         ft, per_host_pairs=16, key_variety=64, policy="full")
     cfg = netsim.NetConfig(records_per_packet=4, exact_stream=True,
                            loss_rate=0.02, seed=3, window=4, engine=engine)
-    return netsim.simulate_fat_tree_job(ft, keys, vals,
-                                        placement=placement, cfg=cfg)
+    return simulate(ft, keys, vals, placement=placement, cfg=cfg)
 
 
 # -- trace export schema ----------------------------------------------------

@@ -24,6 +24,7 @@ from conftest import dict_aggregate
 from repro.core import aggops, dataplane, kvagg, planner
 from repro.core import reduction_model as rm
 from repro.net import sim as netsim
+from repro.net import simulate
 
 EMPTY = int(kvagg.EMPTY_KEY)
 
@@ -35,12 +36,16 @@ def _plan(caps, op="sum", enabled=None, bpe=True):
         for c, e in zip(caps, en)))
 
 
+def _sim(keys, vals, **kw):
+    return simulate(netsim.JobSpec(keys=keys, values=vals, **kw))
+
+
 def _both(keys, vals, *, cfg=None, **kw):
     """Run the same job on both engines; return (node, vectorized)."""
     cfg = cfg or netsim.NetConfig(records_per_packet=16)
-    rn = netsim.simulate_job(keys, vals, cfg=cfg, **kw)
-    rv = netsim.simulate_job(
-        keys, vals, cfg=dataclasses.replace(cfg, engine="vectorized"), **kw)
+    rn = _sim(keys, vals, cfg=cfg, **kw)
+    rv = _sim(keys, vals,
+              cfg=dataclasses.replace(cfg, engine="vectorized"), **kw)
     return rn, rv
 
 
@@ -101,18 +106,16 @@ def test_fat_tree_parity_and_jct_ordering():
     for pol in ("host_only", "tor_only", "full"):
         pl = planner.place_aggregation_tree(ft, per_host_pairs=48,
                                             key_variety=256, policy=pol)
-        rn = netsim.simulate_fat_tree_job(ft, keys, vals, placement=pl,
-                                          cfg=cfg)
-        rv = netsim.simulate_fat_tree_job(
-            ft, keys, vals, placement=pl,
-            cfg=dataclasses.replace(cfg, engine="vectorized"))
+        rn = simulate(ft, keys, vals, placement=pl, cfg=cfg)
+        rv = simulate(ft, keys, vals, placement=pl,
+                      cfg=dataclasses.replace(cfg, engine="vectorized"))
         _assert_identical(rn, rv)
         jct[pol] = rv.jct_s
     assert jct["full"] <= jct["tor_only"] <= jct["host_only"]
 
 
 def test_scheduler_plan_and_jct_comparison_thread_the_engine():
-    """simulate_job_plan / jct_comparison accept the engine switch and
+    """planned-job simulate / jct_comparison accept the engine switch and
     agree with the node oracle."""
     topo = planner.Topology(links=(
         planner.LinkBudget(axis="data", fanin=4, gbps=netsim.TEN_GBE),
@@ -123,9 +126,8 @@ def test_scheduler_plan_and_jct_comparison_thread_the_engine():
         grad_bytes=1 << 20))
     keys = rm.zipf_keys(8 * 256, 64, seed=5).astype(np.int32)
     vals = np.ones_like(keys, np.float32)
-    rn = netsim.simulate_job_plan(jp, keys, vals)
-    rv = netsim.simulate_job_plan(
-        jp, keys, vals, cfg=netsim.NetConfig(engine="vectorized"))
+    rn = simulate(jp, keys, vals)
+    rv = simulate(jp, keys, vals, cfg=netsim.NetConfig(engine="vectorized"))
     _assert_identical(rn, rv)
     jn = netsim.jct_comparison(keys, vals, fanins=(2, 2),
                                plan=_plan([32, 16]))
@@ -183,7 +185,7 @@ def test_property_vectorized_exactly_once_under_any_loss(
     plan = _plan(list(_CAPS), op=op)
     cfg = dataclasses.replace(_CFG, loss_rate=loss_rate, seed=seed,
                               engine="vectorized")
-    res = netsim.simulate_job(keys, vals, fanins=_FANINS, plan=plan, cfg=cfg)
+    res = _sim(keys, vals, fanins=_FANINS, plan=plan, cfg=cfg)
     ref = dataplane.run_cascade(jnp.asarray(keys), jnp.asarray(vals), plan)
     want = {int(k): np.asarray(v) for k, v in
             zip(np.asarray(ref.keys), np.asarray(ref.values)) if k != EMPTY}
@@ -196,9 +198,8 @@ def test_property_vectorized_exactly_once_under_any_loss(
         assert res.packets_dropped == 0 and res.retransmissions == 0
     assert res.retransmissions >= res.packets_dropped
     # differential: the engines agree packet for packet
-    node = netsim.simulate_job(
-        keys, vals, fanins=_FANINS, plan=plan,
-        cfg=dataclasses.replace(cfg, engine="node"))
+    node = _sim(keys, vals, fanins=_FANINS, plan=plan,
+                cfg=dataclasses.replace(cfg, engine="node"))
     _assert_identical(node, res)
 
 
@@ -253,7 +254,7 @@ def test_lossy_parity_disabled_hops_and_host_only(loss):
 
 def test_lossy_fat_tree_parity():
     """The rack-scale entry point under loss: every placement policy stays
-    bit-identical between engines (one batched simulate_jobs call each)."""
+    bit-identical between engines (one lockstep batch each)."""
     ft = planner.FatTreeTopology(pods=2, tors_per_pod=2, hosts_per_tor=4,
                                  oversubscription=4.0, table_pairs=256)
     n = ft.n_hosts * 32
@@ -330,7 +331,7 @@ def test_property_mask_loss_exactly_once_and_engine_parity(mask, seed, op):
     plan = _plan(list(_CAPS), op=op)
     loss = _MaskLoss(mask)
     cfg = dataclasses.replace(_CFG, loss_model=loss, engine="vectorized")
-    res = netsim.simulate_job(keys, vals, fanins=_FANINS, plan=plan, cfg=cfg)
+    res = _sim(keys, vals, fanins=_FANINS, plan=plan, cfg=cfg)
     # conservation: whatever got dropped was retransmitted and combined
     # exactly once — the delivered table IS the exact cascade result
     ref = dataplane.run_cascade(jnp.asarray(keys), jnp.asarray(vals), plan)
@@ -343,9 +344,8 @@ def test_property_mask_loss_exactly_once_and_engine_parity(mask, seed, op):
                                    err_msg=f"op={op} key={k}")
     assert res.duplicate_discards == 0
     assert res.retransmissions >= res.packets_dropped
-    node = netsim.simulate_job(
-        keys, vals, fanins=_FANINS, plan=plan,
-        cfg=dataclasses.replace(cfg, engine="node"))
+    node = _sim(keys, vals, fanins=_FANINS, plan=plan,
+                cfg=dataclasses.replace(cfg, engine="node"))
     _assert_identical(node, res)
 
 
@@ -377,11 +377,10 @@ def test_multi_job_batching_parity_and_kernel_call_count():
     for loss in (0.0, 0.02):
         cfg_v = netsim.NetConfig(records_per_packet=16, engine="vectorized",
                                  loss_rate=loss, seed=13, window=8)
-        solo = [netsim.simulate_job_plan(jp, k, v, cfg=cfg_v)
+        solo = [simulate(jp, k, v, cfg=cfg_v)
                 for jp, k, v in zip(jplans, keys_list, vals_list)]
         before = vsim.ingest_calls
-        batched = netsim.simulate_job_plans(jplans, keys_list, vals_list,
-                                            cfg=cfg_v)
+        batched = simulate(jplans, keys_list, vals_list, cfg=cfg_v)
         calls = vsim.ingest_calls - before
         groups = _planner.batch_tier_groups(jplans)
         predicted = sum(len(g) for g in groups.values())
@@ -395,5 +394,4 @@ def test_multi_job_batching_parity_and_kernel_call_count():
         # and the batch agrees with the node oracle
         cfg_n = dataclasses.replace(cfg_v, engine="node")
         for jp, k, v, rb in zip(jplans, keys_list, vals_list, batched):
-            _assert_identical(netsim.simulate_job_plan(jp, k, v, cfg=cfg_n),
-                              rb)
+            _assert_identical(simulate(jp, k, v, cfg=cfg_n), rb)

@@ -151,7 +151,9 @@ def test_tier_ingest_o1_retraces_across_topologies():
             for c in (16, 8, 8)[:len(fanins)]))
         keys = rm.zipf_keys(n, 24, seed=0).astype(np.int32)
         vals = np.ones((n,), np.float32)
-        netsim.simulate_job(keys, vals, fanins=fanins, plan=plan, cfg=cfg)
+        from repro.net import simulate
+        simulate(netsim.JobSpec(keys=keys, values=vals, fanins=fanins,
+                                plan=plan, cfg=cfg))
 
     run((2, 2), 64)  # prime the cache
     before = vsim.tier_ingest._cache_size()

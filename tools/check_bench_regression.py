@@ -52,7 +52,7 @@ import sys
 
 #: files the gate covers, with their metric extractors (see below)
 GATED = ("BENCH_fpe.json", "BENCH_dataplane.json", "BENCH_sim.json",
-         "BENCH_faults.json")
+         "BENCH_faults.json", "BENCH_churn.json")
 
 
 def _load_rows(path: pathlib.Path) -> list[dict]:
@@ -134,11 +134,35 @@ def faults_metrics(rows: list[dict]) -> dict[str, tuple[float, str]]:
     return out
 
 
+def churn_metrics(rows: list[dict]) -> dict[str, tuple[float, str]]:
+    """Online-controller churn cells (DESIGN.md §13): both acceptance
+    ratios are in-process (machine speed cancels), so they carry the
+    absolute floors the bench rows declare — scarce-link load within
+    ~10% of the full-replan oracle, at >= 10x less placement work — and
+    never join the throughput geomean; the packet-level cross-checks
+    (mid-run-admission engine parity, exactly-once eviction under loss)
+    and the eviction/expansion counts are semantic."""
+    out = {}
+    for r in rows:
+        key = r["cell"]
+        out[f"churn:{key}:oracle_to_online"] = (
+            r["oracle_to_online"], f"floor:{r['oracle_to_online_floor']}")
+        out[f"churn:{key}:work_speedup"] = (
+            r["work_speedup"], f"floor:{r['work_speedup_floor']}")
+        out[f"churn:{key}:admit_parity"] = (r["admit_parity"], "semantic")
+        out[f"churn:{key}:evict_exactly_once"] = (
+            r["evict_exactly_once"], "semantic")
+        out[f"churn:{key}:evictions"] = (r["evictions"], "semantic")
+        out[f"churn:{key}:expansions"] = (r["expansions"], "semantic")
+    return out
+
+
 EXTRACTORS = {
     "BENCH_fpe.json": fpe_metrics,
     "BENCH_dataplane.json": dataplane_metrics,
     "BENCH_sim.json": sim_metrics,
     "BENCH_faults.json": faults_metrics,
+    "BENCH_churn.json": churn_metrics,
 }
 
 #: the schema gate (DESIGN.md §11): per gated file, the row fields the
@@ -162,6 +186,13 @@ ROW_SCHEMAS = {
     "BENCH_faults.json": lambda r: {
         "cell", "n_failures", "epochs", "jct_faulted_s", "jct_penalty_s",
         "reduction", "reduction_floor", "exactly_once", "parity"},
+    "BENCH_churn.json": lambda r: {
+        "cell", "n_jobs", "n_events", "evictions", "expansions",
+        "online_scarce_mb", "oracle_scarce_mb",
+        "oracle_to_online", "oracle_to_online_floor",
+        "online_scored", "oracle_scored",
+        "work_speedup", "work_speedup_floor",
+        "admit_parity", "evict_exactly_once"},
 }
 
 
